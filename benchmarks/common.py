@@ -1,0 +1,7 @@
+"""Shared benchmark plumbing: CSV emission in the harness format."""
+import sys
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()

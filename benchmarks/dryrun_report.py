@@ -1,0 +1,61 @@
+"""Render dryrun JSON artifacts into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m benchmarks.dryrun_report dryrun_single.json [...]
+"""
+
+import json
+import sys
+
+
+def fmt_bytes(x):
+    if x is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def main() -> None:
+    rows = []
+    for path in sys.argv[1:]:
+        rows.extend(json.load(open(path)))
+
+    print("## Dry-run matrix")
+    print()
+    print("| arch | shape | step | mesh | plan | status | compile_s | peak_bytes/dev | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("status") == "skip":
+            print(f"| {r['arch']} | {r.get('shape','-')} | {r.get('step','-')} | "
+                  f"{r.get('mesh','-')} | - | SKIP ({r['reason'][:40]}…) | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            print(f"| {r.get('arch')} | {r.get('shape')} | {r.get('step','-')} | "
+                  f"{r.get('mesh')} | - | **FAIL** | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        colls = ",".join(f"{k.split('-')[-1][:4]}×{v}" for k, v in r["collectives"].items() if v)
+        print(f"| {r['arch']} | {r['shape']} | {r['step']} | {r['mesh']} | {r['plan']} "
+              f"| ok | {r['compile_s']} | {fmt_bytes(mem.get('peak_bytes'))} "
+              f"| {colls or 'none'} |")
+
+    print()
+    print("## Roofline (per device, TPU v5e constants)")
+    print()
+    print("| arch | shape | step | compute_s | memory_s | collective_s | bottleneck "
+          "| cross-replica B | model-axis B | useful |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['step']} | {rf['compute_s']:.4f} "
+              f"| {rf['memory_s']:.4f} | {rf['collective_s']:.5f} | **{rf['bottleneck']}** "
+              f"| {fmt_bytes(rf['cross_replica_bytes'])} | {fmt_bytes(rf['model_axis_bytes'])} "
+              f"| {rf['useful_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

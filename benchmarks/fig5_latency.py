@@ -1,0 +1,38 @@
+"""Fig. 5 reproduction: (A) tree-allreduce vs gossip pair-averaging expected
+time ratio across world sizes and latency variances; (B) DiLoCo global-
+blocking overhead vs NoLoCo pairwise blocking."""
+import math
+import time
+
+from repro.core import latency
+from benchmarks.common import emit
+
+
+def main() -> None:
+    # --- Fig 5A: speedup ratio, closed form + Monte-Carlo -------------------
+    for n in (16, 64, 256, 1024):
+        for sigma2 in (0.1, 0.5, 1.0):
+            sigma = math.sqrt(sigma2)
+            t0 = time.perf_counter()
+            tree = latency.simulate_tree_allreduce(n, 0.0, sigma, rounds=400, seed=0)
+            pair = latency.simulate_pair_average(0.0, sigma, rounds=4000, seed=0)
+            us = (time.perf_counter() - t0) * 1e6
+            cf = latency.speedup_closed_form(n, 0.0, sigma)
+            emit(
+                f"fig5a_n{n}_s{sigma2}", us,
+                f"ratio_sim={tree / pair:.2f};ratio_closed_form={cf:.2f}",
+            )
+
+    # --- Fig 5B: blocking overhead ------------------------------------------
+    for n in (64, 256, 1024):
+        for inner in (50, 100):
+            t0 = time.perf_counter()
+            r = latency.simulate_blocking_overhead(
+                n, outer_rounds=250, inner_steps=inner, mu=1.0, sigma2=0.5
+            )
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"fig5b_n{n}_m{inner}", us, f"diloco_over_noloco={r['ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Kernel micro-bench: jnp reference wall time on CPU (interpret-mode Pallas
+timing is meaningless) + derived TPU roofline estimates for the kernels."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ref
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    # flash attention: b=1 h=8 s=1024 d=128
+    b, s, h, d = 1, 1024, 8, 128
+    q = jax.random.normal(key, (b * h, s, d), jnp.float32)
+    fn = jax.jit(lambda q: ref.reference_attention(q, q, q, mode="causal"))
+    us = _time(fn, q)
+    flops = 4 * b * h * s * s * d  # qk + pv
+    tpu_us = flops / PEAK_FLOPS * 1e6
+    emit("kernel_flash_attn_s1024", us, f"flops={flops:.3g};tpu_roofline_us={tpu_us:.1f}")
+
+    # noloco update: n = 16M params
+    n = 1 << 24
+    xs = [jax.random.normal(jax.random.fold_in(key, i), (n,), jnp.bfloat16) for i in range(5)]
+    fn2 = jax.jit(lambda *a: ref.reference_noloco_update(*a, alpha=0.5, beta=0.7, gamma=1.0))
+    us2 = _time(fn2, *xs)
+    bytes_moved = n * 2 * 7  # 5 reads + 2 writes bf16
+    tpu_us2 = bytes_moved / HBM_BW * 1e6
+    emit("kernel_noloco_update_16M", us2, f"bytes={bytes_moved:.3g};tpu_roofline_us={tpu_us2:.1f}")
+
+    # ssd: b=1 s=512 h=4 p=64 n=64
+    x = jax.random.normal(key, (1, 512, 4, 64)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 9), (1, 512, 4))) * 0.1
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 8), (4,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(key, 7), (1, 512, 64)) * 0.3
+    cm = jax.random.normal(jax.random.fold_in(key, 6), (1, 512, 64)) * 0.3
+    fn3 = jax.jit(lambda *args: ref.reference_ssd(*args)[0])
+    us3 = _time(fn3, x, dt, a, bm, cm)
+    emit("kernel_ssd_s512", us3, "oracle_recurrence")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Table 2 proxy at CPU scale: final validation loss for FSDP / DiLoCo /
+NoLoCo on the synthetic LM, several (DP, model) settings.
+
+Paper claims to check: both decentralized methods land a few percent above
+FSDP; NoLoCo <= DiLoCo in most settings (paper: up to 4% faster convergence).
+"""
+import time
+
+from benchmarks.common import emit
+from repro.launch.train import run_training
+from repro.models.config import ModelConfig
+
+TINY = ModelConfig(num_layers=2, d_model=96, num_heads=4, num_kv_heads=2,
+                   d_ff=192, vocab_size=256, dtype="float32", remat=False)
+STEPS = 120
+
+
+def main() -> None:
+    for replicas in (4, 8):
+        results = {}
+        for method in ("fsdp", "diloco", "noloco"):
+            t0 = time.perf_counter()
+            res = run_training(
+                TINY, method=method, replicas=replicas, per_replica_batch=2,
+                seq_len=64, steps=STEPS, inner_lr=2e-3,
+                inner_steps=20 if method == "noloco" else 40,
+                eval_every=STEPS, eval_batches=2, seed=1,
+            )
+            us = (time.perf_counter() - t0) * 1e6 / STEPS
+            ev = res["evals"][-1][1]
+            results[method] = ev
+            emit(f"table2_dp{replicas}_{method}", us, f"val_loss={ev:.4f}")
+        rel = (results["diloco"] - results["noloco"]) / results["fsdp"]
+        emit(f"table2_dp{replicas}_relppl", 0.0,
+             f"diloco_minus_noloco_over_fsdp={rel:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Table 3 proxy: decentralized methods improve with larger global batch."""
+import time
+
+from benchmarks.common import emit
+from repro.launch.train import run_training
+from repro.models.config import ModelConfig
+
+TINY = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                   d_ff=128, vocab_size=256, dtype="float32", remat=False)
+
+
+def main() -> None:
+    for method in ("diloco", "noloco"):
+        evs = {}
+        for pb in (2, 4):
+            t0 = time.perf_counter()
+            res = run_training(
+                TINY, method=method, replicas=4, per_replica_batch=pb,
+                seq_len=48, steps=80, inner_lr=2e-3, inner_steps=20,
+                eval_every=80, eval_batches=2, seed=4,
+            )
+            us = (time.perf_counter() - t0) * 1e6 / 80
+            evs[pb] = res["evals"][-1][1]
+            emit(f"table3_{method}_b{pb}", us, f"val_loss={evs[pb]:.4f}")
+        emit(f"table3_{method}_gain", 0.0, f"small_minus_large={evs[2]-evs[4]:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — NoLoCo (no-all-reduce low-communication training) in JAX.
+
+Layers: core/ (gossip outer optimizer, theory, latency), models/ (10-arch
+zoo), parallel/ (shard_map runtime), kernels/ (Pallas), data/, checkpoint/,
+pipeline/ (random routing), configs/, launch/.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,19 @@
+"""minitron-8b [dense]: pruned nemotron. [arXiv:2407.14679]
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=16_384,
+    vocab_size=256_000,
+    mlp_variant="relu2",     # nemotron squared-ReLU MLP
+    norm_type="layernorm",
+    tie_embeddings=False,
+)
+PLAN = "gossip_dp"

@@ -1,0 +1,92 @@
+"""Architecture registry: ``--arch <id>`` resolution, per-arch parallelism
+plan, and per-shape config variants."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import (
+    gemma_2b,
+    granite_moe_1b,
+    internvl2_76b,
+    mamba2_370m,
+    minitron_8b,
+    paper_llama,
+    qwen3_0_6b,
+    qwen3_moe_235b,
+    recurrentgemma_9b,
+    stablelm_1_6b,
+    whisper_base,
+)
+from repro.configs.shapes import SHAPES, InputShape, input_specs, shape_skips
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "ARCHS",
+    "PLANS",
+    "get_config",
+    "get_plan",
+    "variant_for_shape",
+    "SHAPES",
+    "input_specs",
+    "shape_skips",
+]
+
+_MODULES = {
+    "whisper-base": whisper_base,
+    "qwen3-0.6b": qwen3_0_6b,
+    "granite-moe-1b-a400m": granite_moe_1b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "gemma-2b": gemma_2b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b,
+    "stablelm-1.6b": stablelm_1_6b,
+    "minitron-8b": minitron_8b,
+    "internvl2-76b": internvl2_76b,
+    "mamba2-370m": mamba2_370m,
+    "paper-small-125m": paper_llama,
+    "paper-medium-1.3b": paper_llama,
+    "paper-large-6.8b": paper_llama,
+}
+
+ARCHS: dict[str, ModelConfig] = {
+    **{name: mod.CONFIG for name, mod in _MODULES.items() if not name.startswith("paper")},
+    "paper-small-125m": paper_llama.SMALL,
+    "paper-medium-1.3b": paper_llama.MEDIUM,
+    "paper-large-6.8b": paper_llama.LARGE,
+}
+
+PLANS: dict[str, str] = {name: mod.PLAN for name, mod in _MODULES.items()}
+
+ASSIGNED = [
+    "whisper-base",
+    "qwen3-0.6b",
+    "granite-moe-1b-a400m",
+    "recurrentgemma-9b",
+    "gemma-2b",
+    "qwen3-moe-235b-a22b",
+    "stablelm-1.6b",
+    "minitron-8b",
+    "internvl2-76b",
+    "mamba2-370m",
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_plan(arch: str) -> str:
+    return PLANS[arch]
+
+
+def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adjustments:
+    * gemma-2b @ long_500k -> sliding-window variant (window 4096), the dense
+      arch we run at 500k per the assignment's sliding-window carve-out."""
+    if shape.name == "long_500k" and cfg.name == "gemma-2b":
+        return dataclasses.replace(
+            cfg, attn_pattern=("local",), sliding_window=4096, name="gemma-2b"
+        )
+    return cfg

@@ -1,0 +1,80 @@
+"""Assigned input shapes and per-(arch, shape) ShapeDtypeStruct input specs.
+
+  train_4k     seq 4 096,   global batch 256   -> train_step
+  prefill_32k  seq 32 768,  global batch 32    -> prefill_step
+  decode_32k   seq 32 768 cache, global batch 128, ONE new token -> serve_step
+  long_500k    seq 524 288 cache, global batch 1 (sub-quadratic archs only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["InputShape", "SHAPES", "input_specs", "shape_skips"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# archs that run long_500k (sub-quadratic); see DESIGN.md §Arch-applicability
+LONG_OK = {"recurrentgemma-9b", "mamba2-370m", "gemma-2b"}  # gemma via sliding-window variant
+
+
+def shape_skips(cfg: ModelConfig, shape: InputShape) -> str | None:
+    """Return a skip reason or None if the (arch, shape) combo runs."""
+    if shape.name == "long_500k":
+        if cfg.name in LONG_OK:
+            return None
+        return "full-attention arch: 524k dense KV decode is quadratic — skipped per assignment"
+    return None
+
+
+def _frontend_entries(cfg: ModelConfig, batch: int) -> dict:
+    out = {}
+    if cfg.frontend == "audio":
+        out["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.frontend_dim or cfg.d_model), jnp.bfloat16
+        )
+    elif cfg.frontend == "vision":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16
+        )
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this step kind
+    (weak-type-correct, shardable, no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        text = s - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((b, text), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, text), jnp.int32),
+        }
+        spec.update(_frontend_entries(cfg, b))
+        return spec
+    if shape.kind == "prefill":
+        text = s - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+        spec = {"tokens": jax.ShapeDtypeStruct((b, text), jnp.int32)}
+        spec.update(_frontend_entries(cfg, b))
+        return spec
+    # decode: ONE new token; the KV/state cache of size s is a separate input
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}

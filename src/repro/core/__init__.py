@@ -1,0 +1,32 @@
+"""NoLoCo core: gossip outer optimizer, pairing, theory, and latency models
+(the paper's primary contribution)."""
+
+from repro.core.outer import (
+    OuterConfig,
+    OuterState,
+    default_gamma,
+    gamma_band,
+    init_outer_state,
+    outer_gradient,
+    outer_step_sharded,
+    outer_step_stacked,
+)
+from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
+from repro.core import latency, pairing, theory
+
+__all__ = [
+    "OuterConfig",
+    "OuterState",
+    "default_gamma",
+    "gamma_band",
+    "init_outer_state",
+    "outer_gradient",
+    "outer_step_sharded",
+    "outer_step_stacked",
+    "GossipTrainer",
+    "TrainState",
+    "TrainerConfig",
+    "latency",
+    "pairing",
+    "theory",
+]

@@ -1,0 +1,151 @@
+"""High-level trainer: m inner AdamW steps per replica, then the gossip
+(NoLoCo) / all-reduce (DiLoCo) / none outer step.
+
+This is the *stacked* trainer used for simulation-scale experiments, tests and
+benchmarks: every leaf of the parameter pytree carries a leading replica axis
+of size ``world``.  Per-replica computation is ``jax.vmap`` over that axis, so
+under GSPMD with the replica axis sharded on the ``data`` mesh axis this exact
+code is also the distributed inner step (see repro/parallel) — XLA emits no
+cross-replica collectives for it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import outer as outer_lib
+from repro.core import pairing
+from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+PyTree = Any
+LossFn = Callable[[PyTree, Any, jax.Array], jax.Array]
+#        loss_fn(params, batch, rng) -> scalar loss, for ONE replica.
+
+__all__ = ["TrainerConfig", "TrainState", "GossipTrainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    outer: outer_lib.OuterConfig = dataclasses.field(default_factory=outer_lib.OuterConfig)
+    inner: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    # FSDP/DDP baseline: all-reduce (mean) gradients across replicas EVERY
+    # inner step — the fully-synchronous comparison point in the paper.
+    sync_grads: bool = False
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    theta: PyTree                 # fast weights, leading replica axis
+    opt: AdamWState               # per-replica AdamW moments (leading axis)
+    outer: outer_lib.OuterState   # slow weights φ and momentum δ
+    inner_step: jax.Array         # global inner step counter (scalar)
+
+    @property
+    def world(self) -> int:
+        return jax.tree.leaves(self.theta)[0].shape[0]
+
+
+class GossipTrainer:
+    """Functional trainer; all methods return new states (jit-friendly)."""
+
+    def __init__(self, cfg: TrainerConfig, loss_fn: LossFn):
+        cfg.outer.validate()
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+
+        def _one_replica_grad(params, batch, rng):
+            return jax.value_and_grad(loss_fn)(params, batch, rng)
+
+        self._vgrad = jax.vmap(_one_replica_grad)
+        self._vapply = jax.vmap(lambda g, o, p: adamw_update(g, o, p, cfg.inner))
+
+    # -- state ------------------------------------------------------------
+
+    def init(self, stacked_params: PyTree) -> TrainState:
+        return TrainState(
+            theta=stacked_params,
+            opt=jax.vmap(adamw_init)(stacked_params),
+            outer=outer_lib.init_outer_state(stacked_params),
+            inner_step=jnp.zeros((), jnp.int32),
+        )
+
+    # -- steps ------------------------------------------------------------
+
+    def inner_step(
+        self, state: TrainState, batch: PyTree, rng: jax.Array
+    ) -> tuple[TrainState, dict[str, jax.Array]]:
+        """One local optimizer step on every replica.  ``batch`` leaves have a
+        leading replica axis (each replica sees its own shard)."""
+        rngs = jax.random.split(rng, state.world)
+        loss, grads = self._vgrad(state.theta, batch, rngs)
+        if self.cfg.sync_grads:
+            grads = jax.tree.map(
+                lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),
+                grads,
+            )
+        theta, opt, gnorm = self._vapply(grads, state.opt, state.theta)
+        new_state = TrainState(
+            theta=theta, opt=opt, outer=state.outer, inner_step=state.inner_step + 1
+        )
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    def outer_step(
+        self, state: TrainState, partner: jax.Array | None = None
+    ) -> TrainState:
+        """Gossip/all-reduce sync of slow weights; fast weights reset to the
+        new slow weights (look-ahead semantics)."""
+        if partner is None and self.cfg.outer.method == "noloco":
+            partner = jnp.asarray(
+                pairing.partner_table(
+                    int(state.outer.step), state.world, seed=self.cfg.outer.seed
+                )
+            )
+        new_outer, new_theta = outer_lib.outer_step_stacked(
+            state.outer, state.theta, self.cfg.outer, partner=partner
+        )
+        return TrainState(
+            theta=new_theta, opt=state.opt, outer=new_outer, inner_step=state.inner_step
+        )
+
+    def should_sync(self, state: TrainState) -> bool:
+        m = self.cfg.outer.inner_steps
+        return int(state.inner_step) > 0 and int(state.inner_step) % m == 0
+
+    # -- convenience loop (benchmarks / examples) --------------------------
+
+    def train(
+        self,
+        state: TrainState,
+        batches,
+        *,
+        rng: jax.Array,
+        log_every: int = 0,
+        metrics_hook: Callable[[int, dict], None] | None = None,
+    ) -> TrainState:
+        """Drive inner+outer steps over an iterable of stacked batches."""
+        step_fn = jax.jit(self.inner_step)
+        for i, batch in enumerate(batches):
+            rng, sub = jax.random.split(rng)
+            state, metrics = step_fn(state, batch, sub)
+            if self.should_sync(state):
+                state = self.outer_step(state)
+            if metrics_hook is not None and log_every and (i + 1) % log_every == 0:
+                metrics_hook(i + 1, jax.tree.map(lambda x: float(jnp.mean(x)), metrics))
+        return state
+
+    # -- diagnostics -------------------------------------------------------
+
+    @staticmethod
+    def replica_weight_std(theta: PyTree) -> jax.Array:
+        """Mean over parameters of the std across replicas — the quantity in
+        Fig. 3B / Fig. 4A of the paper."""
+        stds = [
+            jnp.mean(jnp.std(x.astype(jnp.float32), axis=0))
+            for x in jax.tree.leaves(theta)
+        ]
+        return jnp.mean(jnp.stack(stds))

@@ -1,0 +1,401 @@
+"""Outer optimizers: NoLoCo (gossip, modified Nesterov), DiLoCo (all-reduce
+Nesterov) and plain FSDP-style no-op.
+
+All math is expressed once over ``(mean_delta, mean_phi)`` *group statistics*
+and reused by three communication backends:
+
+  * ``stacked``  — replicas live on a leading pytree axis (simulation / vmap /
+                   GSPMD-with-replica-dim).  Partner values come from a gather
+                   with the deterministic :mod:`repro.core.pairing` tables.
+  * ``sharded``  — inside ``shard_map``; partner values come from a single
+                   ``jax.lax.ppermute`` (collective-permute — the point of the
+                   paper: NO all-reduce anywhere in the outer step).
+  * DiLoCo uses ``jax.lax.pmean`` (all-reduce) in sharded mode / a full mean in
+    stacked mode, as the communication-heavy baseline.
+
+Equations (paper §3.2)::
+
+    Δ_{t,i}   = θ_{t+1,i} − φ_{t,i}                                  (1)
+    δ_{t,i}   = α δ_{t−1,i} − (β/n) Σ_j Δ_{t,j}
+                            − γ (φ_{t,i} − (1/n) Σ_j φ_{t,j})        (2)
+    φ_{t+1,i} = φ_{t,i} + δ_{t,i}                                    (3)
+
+For the group of all replicas Eq. 2 reduces to DiLoCo's outer Nesterov
+momentum and the γ term vanishes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pairing
+
+PyTree = Any
+
+__all__ = [
+    "OuterConfig",
+    "OuterState",
+    "gamma_band",
+    "default_gamma",
+    "init_outer_state",
+    "outer_gradient",
+    "noloco_momentum_update",
+    "diloco_momentum_update",
+    "outer_step_stacked",
+    "outer_step_sharded",
+]
+
+
+# ---------------------------------------------------------------------------
+# Config / state
+# ---------------------------------------------------------------------------
+
+
+def gamma_band(alpha: float, n: int = 2) -> tuple[float, float]:
+    """Stability band for γ from Eq. 74: sqrt(n/(2(n−1)))·α < γ <
+    sqrt(n/(2(n−1))·(2+α²))."""
+    if n < 2:
+        raise ValueError("group size must be >= 2 for the γ term to exist")
+    scale = math.sqrt(n / (2.0 * (n - 1)))
+    return scale * alpha, scale * math.sqrt(2.0 + alpha * alpha)
+
+
+def default_gamma(alpha: float, n: int = 2) -> float:
+    """Midpoint of the Eq. 74 stability band (paper leaves γ unspecified;
+    tests verify any in-band choice keeps the variance bounded)."""
+    lo, hi = gamma_band(alpha, n)
+    return 0.5 * (lo + hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class OuterConfig:
+    """Hyper-parameters of the outer optimizer (paper §4 defaults)."""
+
+    method: str = "noloco"  # "noloco" | "diloco" | "none" (pure FSDP/local)
+    alpha: float = 0.5      # Nesterov momentum (NoLoCo: 0.5; DiLoCo: 0.3)
+    beta: float = 0.7       # outer learning rate (both methods)
+    gamma: float | None = None  # local-averaging strength; None -> Eq. 74 midpoint
+    group_size: int = 2     # n; paper uses the minimum, 2
+    inner_steps: int = 50   # m; NoLoCo 50, DiLoCo 100 in the paper
+    seed: int = 0           # pairing PRNG seed
+
+    def resolved_gamma(self) -> float:
+        if self.method != "noloco":
+            return 0.0
+        if self.gamma is not None:
+            return float(self.gamma)
+        return default_gamma(self.alpha, self.group_size)
+
+    def validate(self) -> None:
+        if self.method not in ("noloco", "diloco", "none"):
+            raise ValueError(f"unknown outer method: {self.method}")
+        if not 0.0 <= self.alpha < 1.0:
+            raise ValueError("alpha must be in [0, 1)")
+        if self.method == "noloco":
+            lo, hi = gamma_band(self.alpha, self.group_size)
+            g = self.resolved_gamma()
+            if not (lo < g < hi):
+                raise ValueError(
+                    f"gamma={g:.4f} outside stability band ({lo:.4f}, {hi:.4f}) "
+                    "from Eq. 74 — the slow-weight variance would diverge"
+                )
+        if self.beta <= self.alpha:
+            # Sufficient convergence condition from Appendix A.2 (β > α).
+            raise ValueError("outer learning rate beta must exceed alpha (App. A.2)")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OuterState:
+    """Slow weights φ and outer momentum δ (per replica).
+
+    In stacked mode every leaf has a leading replica axis; in sharded mode the
+    leaves are the local replica's shard.
+    """
+
+    phi: PyTree
+    delta: PyTree
+    step: jax.Array  # outer step counter (scalar int32)
+
+
+def init_outer_state(params: PyTree) -> OuterState:
+    return OuterState(
+        phi=jax.tree.map(jnp.asarray, params),
+        delta=jax.tree.map(jnp.zeros_like, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared update math
+# ---------------------------------------------------------------------------
+
+
+def outer_gradient(theta: PyTree, phi: PyTree) -> PyTree:
+    """Eq. 1: Δ = θ − φ (computed in φ's dtype)."""
+    return jax.tree.map(lambda t, p: (t - p.astype(t.dtype)).astype(p.dtype), theta, phi)
+
+
+def noloco_momentum_update(
+    phi: PyTree,
+    delta_mom: PyTree,
+    mean_delta: PyTree,
+    mean_phi: PyTree,
+    *,
+    alpha: float,
+    beta: float,
+    gamma: float,
+) -> tuple[PyTree, PyTree]:
+    """Eqs. 2–3 given the group means. Returns (phi_next, delta_next).
+
+    Sign note: the paper's Eq. 2 writes ``− (β/n) Σ Δ`` with ``Δ = θ − φ``
+    (Eq. 1), but its own Appendix A (Eq. 32-34) and the DiLoCo/look-ahead
+    semantics it claims to reduce to require ``+ β·mean(Δ)`` — with Δ the
+    *downhill* progress of the inner steps, the slow weights must move toward
+    the fast weights.  The literal Eq. 2 sign provably diverges (our tests
+    check this); we follow the appendix.
+    """
+
+    def _upd(p, d, md, mp):
+        d32 = d.astype(jnp.float32)
+        new_d = (
+            alpha * d32
+            + beta * md.astype(jnp.float32)
+            - gamma * (p.astype(jnp.float32) - mp.astype(jnp.float32))
+        )
+        new_p = p.astype(jnp.float32) + new_d
+        return new_p.astype(p.dtype), new_d.astype(d.dtype)
+
+    out = jax.tree.map(_upd, phi, delta_mom, mean_delta, mean_phi)
+    phi_next = jax.tree.map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    delta_next = jax.tree.map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return phi_next, delta_next
+
+
+def diloco_momentum_update(
+    phi: PyTree,
+    delta_mom: PyTree,
+    mean_delta: PyTree,
+    *,
+    alpha: float,
+    beta: float,
+) -> tuple[PyTree, PyTree]:
+    """DiLoCo outer Nesterov: δ = α δ + β·mean(Δ); φ' = φ + δ (same sign
+    convention as :func:`noloco_momentum_update` — see the note there)."""
+
+    def _upd(p, d, md):
+        new_d = alpha * d.astype(jnp.float32) + beta * md.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) + new_d
+        return new_p.astype(p.dtype), new_d.astype(d.dtype)
+
+    out = jax.tree.map(_upd, phi, delta_mom, mean_delta)
+    phi_next = jax.tree.map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    delta_next = jax.tree.map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return phi_next, delta_next
+
+
+# ---------------------------------------------------------------------------
+# Stacked backend (leading replica axis)
+# ---------------------------------------------------------------------------
+
+
+def _gather_replica_axis(tree: PyTree, index: jax.Array) -> PyTree:
+    """tree[index] along the leading replica axis for every leaf."""
+    return jax.tree.map(lambda x: jnp.take(x, index, axis=0), tree)
+
+
+def outer_step_stacked(
+    state: OuterState,
+    theta: PyTree,
+    cfg: OuterConfig,
+    *,
+    partner: jax.Array | None = None,
+) -> tuple[OuterState, PyTree]:
+    """One outer step where replicas are stacked on axis 0 of every leaf.
+
+    Returns (new_state, new_theta) — fast weights are reset to the new slow
+    weights (look-ahead semantics), ready for the next ``m`` inner steps.
+
+    ``partner``: optional precomputed partner index table (world,), e.g. from
+    :func:`repro.core.pairing.partner_table`. When None it is derived from the
+    (traced) outer step counter via a host-independent PRNG — but note that
+    under ``jit`` the step is traced, so callers that jit this function should
+    pass ``partner`` explicitly (the launcher does).
+    """
+    cfg.validate()
+    world = jax.tree.leaves(theta)[0].shape[0]
+    delta = outer_gradient(theta, state.phi)
+
+    if cfg.method == "none":
+        # Pure local / FSDP-style: slow weights track fast weights exactly.
+        new_state = OuterState(phi=theta, delta=state.delta, step=state.step + 1)
+        return new_state, theta
+
+    if cfg.method == "diloco":
+        mean_delta = jax.tree.map(
+            lambda d: jnp.broadcast_to(jnp.mean(d, axis=0, keepdims=True), d.shape), delta
+        )
+        phi_next, delta_next = diloco_momentum_update(
+            state.phi, state.delta, mean_delta, alpha=cfg.alpha, beta=cfg.beta
+        )
+    else:  # noloco
+        if partner is None:
+            partner = jnp.asarray(
+                pairing.partner_table(int(state.step), world, seed=cfg.seed)
+            )
+        partner = jnp.asarray(partner)
+        delta_p = _gather_replica_axis(delta, partner)
+        phi_p = _gather_replica_axis(state.phi, partner)
+        mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta, delta_p)
+        mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), state.phi, phi_p)
+        phi_next, delta_next = noloco_momentum_update(
+            state.phi,
+            state.delta,
+            mean_delta,
+            mean_phi,
+            alpha=cfg.alpha,
+            beta=cfg.beta,
+            gamma=cfg.resolved_gamma(),
+        )
+
+    new_state = OuterState(phi=phi_next, delta=delta_next, step=state.step + 1)
+    return new_state, phi_next
+
+
+def outer_step_sharded_overlapped(
+    state: OuterState,
+    theta: PyTree,
+    phi_prefetched: PyTree,
+    cfg: OuterConfig,
+    *,
+    axis_names: Sequence[str],
+    perm: Sequence[tuple[int, int]],
+    perm_next: Sequence[tuple[int, int]],
+) -> tuple[OuterState, PyTree, PyTree]:
+    """NoLoCo outer step with the φ-exchange OVERLAP of §3.2.
+
+    The partner's slow weights φ_j were already exchanged at the END of the
+    previous outer step (they do not change during inner steps), so the only
+    BLOCKING collective here is the Δ ppermute — half the payload of the
+    baseline gossip step.  The φ′ pre-send for the NEXT pairing is issued in
+    the same program; on hardware it overlaps the next m inner steps.
+
+    Returns (new_state, new_theta, phi_prefetched_for_next_step).
+    """
+    cfg.validate()
+    if cfg.method != "noloco":
+        raise ValueError("overlap variant is NoLoCo-only")
+    axis_names = tuple(axis_names)
+    delta = outer_gradient(theta, state.phi)
+
+    # blocking exchange: Δ only
+    delta_p = jax.tree.map(
+        lambda x: jax.lax.ppermute(x, axis_names, perm=list(perm)), delta
+    )
+    phi_p = phi_prefetched
+    mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta, delta_p)
+    mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), state.phi, phi_p)
+    phi_next, delta_next = noloco_momentum_update(
+        state.phi, state.delta, mean_delta, mean_phi,
+        alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.resolved_gamma(),
+    )
+    # overlappable pre-send of φ′ along the NEXT pairing
+    phi_next_prefetched = jax.tree.map(
+        lambda x: jax.lax.ppermute(x, axis_names, perm=list(perm_next)), phi_next
+    )
+    new_state = OuterState(phi=phi_next, delta=delta_next, step=state.step + 1)
+    return new_state, phi_next, phi_next_prefetched
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend (inside shard_map; axis-name collectives)
+# ---------------------------------------------------------------------------
+
+
+def _fused_ppermute(tree: PyTree, axis_names, perm) -> PyTree:
+    """ppermute a whole pytree as ONE flat buffer per dtype.
+
+    One leaf-per-permute costs one network message each (26–62 for our archs);
+    on the high-latency links the paper targets, message COUNT dominates
+    (Fig. 5's t_c is per message).  Fusing to one buffer per dtype reduces the
+    gossip exchange to 1–2 collective-permutes total (§Perf P3 iteration)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    by_dtype: dict = {}
+    for i, x in enumerate(leaves):
+        by_dtype.setdefault(x.dtype, []).append(i)
+    out = [None] * len(leaves)
+    for dt, idxs in by_dtype.items():
+        flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
+        moved = jax.lax.ppermute(flat, axis_names, perm=list(perm))
+        off = 0
+        for i in idxs:
+            n = leaves[i].size
+            out[i] = moved[off : off + n].reshape(leaves[i].shape)
+            off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def outer_step_sharded(
+    state: OuterState,
+    theta: PyTree,
+    cfg: OuterConfig,
+    *,
+    axis_names: Sequence[str],
+    perm: Sequence[tuple[int, int]] | None = None,
+    fuse_payload: bool = False,
+) -> tuple[OuterState, PyTree]:
+    """One outer step inside ``shard_map``: each program instance holds ONE
+    replica's (φ, δ, θ) shards.
+
+    NoLoCo: a single ``lax.ppermute`` (collective-permute) moves the packed
+    (Δ, φ) payload to the partner — the ONLY cross-replica communication, and
+    explicitly not an all-reduce.  The φ half of the payload is the part the
+    paper notes can be pre-sent during the previous inner phase (§3.2); we keep
+    it in the same permute here and account for the overlap in the latency
+    model instead.
+
+    DiLoCo: ``lax.pmean`` over the replica axes — lowers to all-reduce.
+    """
+    cfg.validate()
+    axis_names = tuple(axis_names)
+    delta = outer_gradient(theta, state.phi)
+
+    if cfg.method == "none":
+        new_state = OuterState(phi=theta, delta=state.delta, step=state.step + 1)
+        return new_state, theta
+
+    if cfg.method == "diloco":
+        mean_delta = jax.tree.map(lambda d: jax.lax.pmean(d, axis_names), delta)
+        phi_next, delta_next = diloco_momentum_update(
+            state.phi, state.delta, mean_delta, alpha=cfg.alpha, beta=cfg.beta
+        )
+    else:
+        if perm is None:
+            raise ValueError("sharded NoLoCo requires an explicit ppermute perm")
+        payload = (delta, state.phi)
+        if fuse_payload:
+            recv = _fused_ppermute(payload, axis_names, perm)
+        else:
+            recv = jax.tree.map(
+                lambda x: jax.lax.ppermute(x, axis_names, perm=list(perm)), payload
+            )
+        delta_p, phi_p = recv
+        mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta, delta_p)
+        mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), state.phi, phi_p)
+        phi_next, delta_next = noloco_momentum_update(
+            state.phi,
+            state.delta,
+            mean_delta,
+            mean_phi,
+            alpha=cfg.alpha,
+            beta=cfg.beta,
+            gamma=cfg.resolved_gamma(),
+        )
+
+    new_state = OuterState(phi=phi_next, delta=delta_next, step=state.step + 1)
+    return new_state, phi_next

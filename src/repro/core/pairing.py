@@ -1,0 +1,121 @@
+"""Gossip pair / group selection for the NoLoCo outer step.
+
+The paper (Section 3.2) synchronizes each replica with a randomly chosen local
+subgroup of ``n`` replicas (``n = 2`` in all experiments).  We realize this with
+random *perfect matchings* drawn from a deterministic PRNG stream keyed by the
+outer-step index, so that
+
+  * every replica is in exactly one group per outer step (load-balanced),
+  * the schedule is reproducible and identical on every host (no coordinator),
+  * the exchange maps directly onto ``jax.lax.ppermute`` partner lists.
+
+For group size n=2 and an even world size this is a perfect matching; for odd
+world sizes one replica sits out the round (it still applies the momentum decay
+with its own Δ, i.e. a group of one).  For n>2 we partition a random
+permutation into contiguous groups of n.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pairing_permutation",
+    "group_assignment",
+    "partner_table",
+    "ppermute_pairs",
+    "all_pairs_seen",
+]
+
+
+def pairing_permutation(step: int, world: int, *, seed: int = 0) -> jax.Array:
+    """Random permutation of ``world`` replica ids for outer step ``step``.
+
+    Deterministic in (seed, step): every replica computes the same permutation
+    locally, so no control-plane communication is needed to agree on pairs.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.random.permutation(key, world)
+
+
+def group_assignment(step: int, world: int, n: int = 2, *, seed: int = 0) -> np.ndarray:
+    """Return an array ``groups[world] -> group_id`` for outer step ``step``.
+
+    Groups are contiguous blocks of the random permutation.  If ``world % n``
+    != 0 the trailing remainder forms a smaller group (paper assumes N >> n, so
+    the effect is negligible; tests cover it).
+    """
+    perm = np.asarray(pairing_permutation(step, world, seed=seed))
+    group_of = np.empty(world, dtype=np.int64)
+    for idx, replica in enumerate(perm):
+        group_of[replica] = idx // n
+    return group_of
+
+
+def partner_table(step: int, world: int, *, seed: int = 0) -> np.ndarray:
+    """Pairwise partner id per replica for group size n=2.
+
+    ``partner[i] == i`` for the odd replica out (self-group).
+    """
+    perm = np.asarray(pairing_permutation(step, world, seed=seed))
+    partner = np.arange(world, dtype=np.int64)
+    limit = (world // 2) * 2
+    for k in range(0, limit, 2):
+        a, b = int(perm[k]), int(perm[k + 1])
+        partner[a] = b
+        partner[b] = a
+    return partner
+
+
+def ppermute_pairs(step: int, world: int, *, seed: int = 0) -> list[tuple[int, int]]:
+    """(source, destination) list for ``jax.lax.ppermute`` realizing the pair
+    exchange of outer step ``step``.
+
+    Each replica sends its payload to its partner (and receives the partner's):
+    a symmetric permutation, i.e. an involution with no fixed points (even
+    world) — exactly one collective-permute, no all-reduce.
+    """
+    partner = partner_table(step, world, seed=seed)
+    return [(int(src), int(partner[src])) for src in range(world)]
+
+
+def hypercube_partner_table(step: int, world: int, *, seed: int = 0) -> np.ndarray:
+    """Deterministic HYPERCUBE gossip schedule: partner = id XOR 2^j, with the
+    dimension j drawn pseudo-randomly per step.
+
+    Why it exists: ``lax.ppermute`` needs a STATIC permutation, so uniformly
+    random matchings require a precompiled pool of programs.  The hypercube
+    family needs only log2(world) compiled programs TOTAL and still mixes
+    optimally — after any log2(world) consecutive distinct dimensions, every
+    pair of replicas has exchanged information (a classic dissemination
+    bound).  Requires a power-of-two world."""
+    if world & (world - 1):
+        raise ValueError("hypercube schedule needs a power-of-two world size")
+    dims = int(np.log2(world))
+    # random cyclic order over dimensions, refreshed every `dims` steps
+    epoch, slot = divmod(step, dims)
+    order = np.random.default_rng((seed + 1) * 7_919 + epoch).permutation(dims)
+    j = int(order[slot])
+    ids = np.arange(world, dtype=np.int64)
+    return ids ^ (1 << j)
+
+
+def hypercube_ppermute_pairs(step: int, world: int, *, seed: int = 0) -> list[tuple[int, int]]:
+    partner = hypercube_partner_table(step, world, seed=seed)
+    return [(int(src), int(partner[src])) for src in range(world)]
+
+
+def all_pairs_seen(steps: int, world: int, *, seed: int = 0) -> np.ndarray:
+    """Symmetric boolean matrix: which (i, j) pairs met within ``steps`` outer
+    steps.  Used by tests/benchmarks to check mixing (information spreads in
+    O(log N) rounds in expectation — the epidemic-learning property)."""
+    seen = np.eye(world, dtype=bool)
+    for t in range(steps):
+        partner = partner_table(t, world, seed=seed)
+        for i in range(world):
+            seen[i, partner[i]] = True
+            seen[partner[i], i] = True
+    return seen

@@ -1,0 +1,146 @@
+"""Appendix A machinery: convergence analysis of the modified Nesterov outer
+step on the stochastic quadratic loss
+
+    L(θ) = ½ (θ − c)ᵀ A (θ − c),   c ~ N(0, Σ),  A ≻ 0 symmetric.
+
+These utilities are used by tests and benchmarks to validate Theorem 1
+empirically:
+
+  * ``expected_phi_spectrum``  — eigenvalues 𝒟_i of D = (1+α)I + β(Bᵐ − I)
+    (Eq. 53); |roots of r² − 𝒟 r + α| < 1  ⇔  E(φ_t) → 0.
+  * ``variance_coefficient``   — d_V = 1 + α² − 2γ²(n−1)/n (Eq. 69); |d_V| < 1
+    is the boundedness condition that yields the γ band of Eq. 74.
+  * ``simulate_quadratic``     — direct Monte-Carlo of the full NoLoCo
+    iteration (inner SGD + gossip outer) on the quadratic model, returning the
+    trajectory of E‖φ‖ and V(φ) across replicas so tests can check
+    E(φ)→0 and V(φ) ∝ ω².
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import outer as outer_lib
+from repro.core import pairing
+
+__all__ = [
+    "QuadraticModel",
+    "expected_phi_spectrum",
+    "expected_phi_converges",
+    "variance_coefficient",
+    "variance_bounded",
+    "simulate_quadratic",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadraticModel:
+    """The App. A toy problem. ``a_eigs`` are the eigenvalues of A (we work in
+    A's eigenbasis WLOG); ``sigma`` the isotropic std of c."""
+
+    a_eigs: tuple[float, ...] = (1.0, 0.25, 0.05)
+    sigma: float = 1.0
+
+    @property
+    def dim(self) -> int:
+        return len(self.a_eigs)
+
+
+def expected_phi_spectrum(
+    alpha: float, beta: float, omega: float, m: int, a_eigs
+) -> np.ndarray:
+    """Eigenvalues 𝒟_i = 1 + α − (1 − (1 − ω Λ_i)ᵐ) β of D (Eq. 53)."""
+    lam = np.asarray(a_eigs, dtype=np.float64)
+    return 1.0 + alpha - (1.0 - (1.0 - omega * lam) ** m) * beta
+
+
+def expected_phi_converges(
+    alpha: float, beta: float, omega: float, m: int, a_eigs
+) -> bool:
+    """E(φ_t) → 0 iff both roots of r² − 𝒟 r + α = 0 lie inside the unit
+    circle for every eigenvalue 𝒟 (Eq. 44-46)."""
+    for d in expected_phi_spectrum(alpha, beta, omega, m, a_eigs):
+        disc = complex(d * d - 4.0 * alpha)
+        sq = disc ** 0.5
+        r1 = 0.5 * (d + sq)
+        r2 = 0.5 * (d - sq)
+        if max(abs(r1), abs(r2)) >= 1.0:
+            return False
+    return True
+
+
+def variance_coefficient(alpha: float, gamma: float, n: int = 2) -> float:
+    """d_V = 1 + α² − 2 γ² (n−1)/n (Eq. 69). |d_V| < 1 ⇔ γ in Eq. 74 band."""
+    return 1.0 + alpha * alpha - 2.0 * gamma * gamma * (n - 1) / n
+
+
+def variance_bounded(alpha: float, gamma: float, n: int = 2) -> bool:
+    return abs(variance_coefficient(alpha, gamma, n)) < 1.0
+
+
+def simulate_quadratic(
+    model: QuadraticModel,
+    *,
+    world: int = 8,
+    outer_steps: int = 200,
+    inner_steps: int = 10,
+    omega: float = 0.1,
+    cfg: outer_lib.OuterConfig | None = None,
+    seed: int = 0,
+    phi0_scale: float = 5.0,
+) -> dict[str, np.ndarray]:
+    """Run the full NoLoCo/DiLoCo iteration on the quadratic model.
+
+    Inner optimizer: SGD with constant LR ω on the stochastic gradient
+    A(θ − c), c ~ N(0, σ² I) redrawn per inner step (Eq. 9-10).
+
+    Returns trajectories (per outer step):
+      ``mean_norm``  — ‖ mean over replicas of φ ‖ (→ 0 per Thm. 2)
+      ``replica_std``— mean over dims of std over replicas of φ (Fig. 3B)
+      ``var``        — mean variance of φ entries over replicas (∝ ω², Thm. 3)
+    """
+    cfg = cfg or outer_lib.OuterConfig()
+    key = jax.random.PRNGKey(seed)
+    a = jnp.asarray(model.a_eigs, dtype=jnp.float32)
+
+    key, k0 = jax.random.split(key)
+    phi = phi0_scale * jax.random.normal(k0, (world, model.dim), jnp.float32)
+    state = outer_lib.init_outer_state(phi)
+    theta = phi
+
+    def inner_sweep(theta, key):
+        def body(th, k):
+            c = model.sigma * jax.random.normal(k, th.shape, th.dtype)
+            grad = a[None, :] * (th - c)
+            return th - omega * grad, None
+
+        keys = jax.random.split(key, inner_steps)
+        th, _ = jax.lax.scan(body, theta, keys)
+        return th
+
+    inner_sweep = jax.jit(inner_sweep)
+    step_fn = jax.jit(
+        lambda st, th, partner: outer_lib.outer_step_stacked(st, th, cfg, partner=partner)
+    )
+
+    mean_norm, replica_std, var = [], [], []
+    for t in range(outer_steps):
+        key, k = jax.random.split(key)
+        theta = inner_sweep(theta, k)
+        partner = jnp.asarray(pairing.partner_table(t, world, seed=cfg.seed))
+        state, theta = step_fn(state, theta, partner)
+        phi_np = np.asarray(state.phi)
+        mean_norm.append(np.linalg.norm(phi_np.mean(axis=0)))
+        replica_std.append(phi_np.std(axis=0).mean())
+        var.append(phi_np.var(axis=0).mean())
+
+    return {
+        "mean_norm": np.asarray(mean_norm),
+        "replica_std": np.asarray(replica_std),
+        "var": np.asarray(var),
+    }

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots:
+
+  flash_attention  — causal/sliding-window attention (every attention arch)
+  noloco_update    — fused NoLoCo outer step Eq. 1-3 (memory-bound)
+  ssd_scan         — Mamba-2 SSD intra-chunk quadratic form
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
+wrapper), ref.py (pure-jnp oracle). Validated with interpret=True on CPU;
+TPU v5e is the TARGET (MXU-aligned 128 blocks, VMEM tiling).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,139 @@
+"""Pallas TPU flash attention (causal / sliding-window / full), GQA-ready.
+
+Grid: (batch·heads, q_blocks, kv_blocks) with the kv dim innermost and
+"arbitrary" (sequential) so the online-softmax state lives in VMEM scratch
+across kv iterations.  BlockSpecs tile Q/K/V into (block_q|block_kv, head_dim)
+VMEM tiles; MXU-aligned defaults block_q = block_kv = 128, head_dim padded to
+a multiple of 128 by the ops.py wrapper when needed.
+
+VMEM working set per program:
+    q (bq, d) + k (bk, d) + v (bk, d) + acc (bq, d) f32 + m/l (bq,) f32
+    = 128·128·2·3 + 128·128·4 + 1KB ≈ 164 KiB  « 16 MiB VMEM.
+
+Validated on CPU with interpret=True against kernels/ref.py; the TPU is the
+TARGET (see DESIGN.md hardware-adaptation notes).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,             # VMEM tiles
+    o_ref,                            # output tile (revisited over kv grid)
+    acc_ref, m_ref, l_ref,            # scratch: f32 accumulators
+    *,
+    mode: str,
+    window: int,
+    block_q: int,
+    block_kv: int,
+    kv_len: int,
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = q @ k.T                                       # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    valid = k_pos < kv_len
+    if mode == "causal":
+        valid &= k_pos <= q_pos
+    elif mode == "local":
+        valid &= (k_pos <= q_pos) & (k_pos > q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...][:, None], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_bhsd(
+    q: jax.Array,   # (BH, Sq, D)  — batch and heads flattened
+    k: jax.Array,   # (BH, Sk, D)  — kv heads already expanded to q heads
+    v: jax.Array,   # (BH, Sk, D)
+    *,
+    mode: str = "causal",
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    pq = (-sq) % block_q
+    pk = (-sk) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_kv
+
+    kernel = functools.partial(
+        _kernel,
+        mode=mode,
+        window=window,
+        block_q=block_q,
+        block_kv=block_kv,
+        kv_len=sk,
+        scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

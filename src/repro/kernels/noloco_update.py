@@ -1,0 +1,81 @@
+"""Fused NoLoCo outer update (Eqs. 1–3) as a Pallas kernel.
+
+The outer step is purely memory-bound: the naive jnp expression makes ~7 HBM
+round-trips per parameter (Δ_self, group means, momentum update, weight
+update).  The kernel streams all five operands tile-by-tile through VMEM and
+writes (φ′, δ′) in ONE pass — the update's arithmetic intensity is ~1 FLOP/B,
+so HBM traffic IS its runtime.
+
+    Δ_i   = θ_i − φ_i
+    δ'    = α δ + β·½(Δ_i + Δ_j) − γ(φ_i − ½(φ_i + φ_j))
+    φ'    = φ_i + δ'
+
+(with the appendix-consistent +β sign; see core/outer.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096  # 1-D tile (lane-aligned multiple of 128)
+
+
+def _kernel(theta_ref, phi_ref, delta_mom_ref, theta_p_ref, phi_p_ref,
+            phi_out_ref, delta_out_ref, *, alpha, beta, gamma):
+    theta = theta_ref[...].astype(jnp.float32)
+    phi = phi_ref[...].astype(jnp.float32)
+    dmom = delta_mom_ref[...].astype(jnp.float32)
+    theta_p = theta_p_ref[...].astype(jnp.float32)
+    phi_p = phi_p_ref[...].astype(jnp.float32)
+
+    d_self = theta - phi
+    d_partner = theta_p - phi_p
+    mean_d = 0.5 * (d_self + d_partner)
+    mean_phi = 0.5 * (phi + phi_p)
+
+    new_delta = alpha * dmom + beta * mean_d - gamma * (phi - mean_phi)
+    new_phi = phi + new_delta
+
+    phi_out_ref[...] = new_phi.astype(phi_out_ref.dtype)
+    delta_out_ref[...] = new_delta.astype(delta_out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "beta", "gamma", "interpret")
+)
+def noloco_update_flat(
+    theta: jax.Array,      # (N,) this replica's fast weights
+    phi: jax.Array,        # (N,) slow weights
+    delta_mom: jax.Array,  # (N,) outer momentum
+    theta_partner: jax.Array,
+    phi_partner: jax.Array,
+    *,
+    alpha: float,
+    beta: float,
+    gamma: float,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    n = theta.shape[0]
+    pad = (-n) % BLOCK
+    args = (theta, phi, delta_mom, theta_partner, phi_partner)
+    if pad:
+        args = tuple(jnp.pad(a, (0, pad)) for a in args)
+    grid = (args[0].shape[0] // BLOCK,)
+    kernel = functools.partial(_kernel, alpha=alpha, beta=beta, gamma=gamma)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    phi_out, delta_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(args[1].shape, phi.dtype),
+            jax.ShapeDtypeStruct(args[2].shape, delta_mom.dtype),
+        ],
+        interpret=interpret,
+    )(*args)
+    return phi_out[:n], delta_out[:n]

@@ -1,0 +1,120 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` by default: this box is CPU-only and the TPU is the
+TARGET; on a real TPU pass interpret=False (kernels use MXU-aligned 128
+blocks and explicit VMEM BlockSpecs — see each kernel's module docstring).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.noloco_update import noloco_update_flat
+from repro.kernels.ssd_scan import ssd_chunk_kernel
+
+__all__ = ["flash_attention", "noloco_update_pytree", "ssd_chunk"]
+
+
+def flash_attention(
+    q: jax.Array,   # (B, Sq, H, D)
+    k: jax.Array,   # (B, Sk, KV, D)
+    v: jax.Array,   # (B, Sk, KV, D)
+    *,
+    mode: str = "causal",
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """GQA flash attention: kv heads are expanded to q heads (gather), batch
+    and heads flattened into the kernel's grid dim."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    head_map = (jnp.arange(h) * kvh) // h
+    k = jnp.take(k, head_map, axis=2)
+    v = jnp.take(v, head_map, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    out = flash_attention_bhsd(
+        qf, kf, vf, mode=mode, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def noloco_update_pytree(
+    theta, phi, delta_mom, theta_partner, phi_partner,
+    *, alpha: float, beta: float, gamma: float, interpret: bool = True,
+):
+    """Fused Eq. 1–3 over whole pytrees: leaves are raveled, concatenated
+    conceptually per-leaf (each leaf gets its own kernel launch — leaves are
+    large enough that launch overhead is negligible)."""
+    flat, treedef = jax.tree.flatten(theta)
+    phis = jax.tree.leaves(phi)
+    dms = jax.tree.leaves(delta_mom)
+    tps = jax.tree.leaves(theta_partner)
+    pps = jax.tree.leaves(phi_partner)
+    new_phi, new_delta = [], []
+    for t, p, d, tp_, pp_ in zip(flat, phis, dms, tps, pps):
+        shape = p.shape
+        np_, nd_ = noloco_update_flat(
+            t.ravel(), p.ravel(), d.ravel(), tp_.ravel(), pp_.ravel(),
+            alpha=alpha, beta=beta, gamma=gamma, interpret=interpret,
+        )
+        new_phi.append(np_.reshape(shape))
+        new_delta.append(nd_.reshape(shape))
+    return (
+        jax.tree.unflatten(treedef, new_phi),
+        jax.tree.unflatten(treedef, new_delta),
+    )
+
+
+def ssd_chunk(x, dt, a, b_mat, c_mat, *, chunk: int, interpret: bool = True):
+    """Full SSD via the Pallas intra-chunk kernel + jnp inter-chunk scan.
+    Matches ref.reference_ssd. x (B,S,H,P), dt (B,S,H), a (H,), B/C (B,S,N)."""
+    import math
+
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    nc = math.ceil(s / q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b_mat.reshape(bsz, nc, q, n)
+    cc = c_mat.reshape(bsz, nc, q, n)
+
+    y_diag, states = ssd_chunk_kernel(xc, dtc, a, bc, cc, interpret=interpret)
+
+    # inter-chunk state recurrence (cheap, sequential)
+    da = dtc.astype(jnp.float32) * a[None, None, None, :]
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))            # (B,nc,H)
+    cums = jnp.cumsum(da, axis=2)
+
+    def body(prev, inp):
+        st, dec = inp
+        new = prev * dec[:, :, None, None] + st
+        return new, prev
+
+    final, prev_states = jax.lax.scan(
+        body, jnp.zeros((bsz, h, n, p), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,N,P)
+
+    y_off = jnp.einsum(
+        "bcin,bchnp,bcih->bcihp",
+        cc.astype(jnp.float32), prev_states, jnp.exp(cums),
+    )
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(bsz, nc * q, h, p)[:, :s]
+    final = final.transpose(0, 1, 3, 2)                    # (B,H,P,N)
+    return y.astype(x.dtype), final

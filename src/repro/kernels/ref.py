@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(
+    q: jax.Array,   # (BH, Sq, D)
+    k: jax.Array,   # (BH, Sk, D)
+    v: jax.Array,   # (BH, Sk, D)
+    *,
+    mode: str = "causal",
+    window: int = 0,
+) -> jax.Array:
+    """Naive full-softmax attention (O(S²) memory — oracle only)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    sq, sk = q.shape[1], k.shape[1]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    if mode == "causal":
+        valid = kp <= qp
+    elif mode == "local":
+        valid = (kp <= qp) & (kp > qp - window)
+    else:
+        valid = jnp.ones((sq, sk), bool)
+    s = jnp.where(valid[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def reference_noloco_update(
+    theta, phi, delta_mom, theta_partner, phi_partner, *, alpha, beta, gamma
+):
+    """Eqs. 1–3 with the appendix-consistent +β sign (see core/outer.py)."""
+    f = jnp.float32
+    d_self = theta.astype(f) - phi.astype(f)
+    d_partner = theta_partner.astype(f) - phi_partner.astype(f)
+    mean_d = 0.5 * (d_self + d_partner)
+    mean_phi = 0.5 * (phi.astype(f) + phi_partner.astype(f))
+    new_delta = alpha * delta_mom.astype(f) + beta * mean_d - gamma * (phi.astype(f) - mean_phi)
+    new_phi = phi.astype(f) + new_delta
+    return new_phi.astype(phi.dtype), new_delta.astype(delta_mom.dtype)
+
+
+def reference_ssd(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)
+    a: jax.Array,     # (H,) negative rates
+    b_mat: jax.Array,  # (B, S, N)
+    c_mat: jax.Array,  # (B, S, N)
+    initial_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Token-by-token SSM recurrence (the gold semantics of SSD):
+        h_t = exp(dt_t·a)·h_{t-1} + dt_t·(B_t ⊗ x_t);   y_t = C_t · h_t
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    f = jnp.float32
+    h0 = (
+        jnp.zeros((bsz, h, p, n), f)
+        if initial_state is None
+        else initial_state.astype(f)
+    )
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a[None, :])                        # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    xs = (
+        x.astype(f).transpose(1, 0, 2, 3),
+        dt.astype(f).transpose(1, 0, 2),
+        b_mat.astype(f).transpose(1, 0, 2),
+        c_mat.astype(f).transpose(1, 0, 2),
+    )
+    final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

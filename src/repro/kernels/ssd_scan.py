@@ -1,0 +1,86 @@
+"""Mamba-2 SSD intra-chunk kernel (the quadratic hot-spot of the SSD
+algorithm) in Pallas.
+
+Per (batch, chunk, head) program:
+    inputs  x (Q,P), dt (Q,), B (Q,N), C (Q,N), a (scalar decay rate)
+    L[i,j]  = exp(cums_i − cums_j)·[i ≥ j],  cums = cumsum(dt·a)
+    y_diag  = (C Bᵀ ∘ L) (dt ∘ x)            — intra-chunk output
+    state   = Σ_j exp(cums_Q − cums_j)·dt_j·B_j ⊗ x_j  — chunk end state
+
+The inter-chunk state recurrence is a cheap sequential scan left in jnp
+(models/ssd.py); this kernel owns the O(Q²) work.  Q = ssm_chunk (128),
+P = head_dim (64), N = d_state (128): VMEM ≈ Q·(P+2N)·4 + Q²·4 ≈ 250 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref):
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)      # (Q,)
+    a = a_ref[0].astype(jnp.float32)                 # scalar
+    b = b_ref[0, 0].astype(jnp.float32)              # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)              # (Q, N)
+
+    q = x.shape[0]
+    da = dt * a                                       # (Q,)
+    cums = jnp.cumsum(da)                             # inclusive
+
+    diff = cums[:, None] - cums[None, :]              # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_kern = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    xdt = x * dt[:, None]                             # (Q, P)
+    scores = c @ b.T                                  # (Q, Q)
+    y = (scores * l_kern) @ xdt                       # (Q, P)
+
+    decay = jnp.exp(cums[-1] - cums)                  # (Q,)
+    state = (b * (decay * dt)[:, None]).T @ x         # (N, P)
+
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+    state_ref[0, 0, 0] = state.astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_kernel(
+    x: jax.Array,    # (B, NC, Q, H, P)
+    dt: jax.Array,   # (B, NC, Q, H)
+    a: jax.Array,    # (H,)
+    b_mat: jax.Array,  # (B, NC, Q, N)
+    c_mat: jax.Array,  # (B, NC, Q, N)
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y_diag (B,NC,Q,H,P), states (B,NC,H,N,P))."""
+    bsz, nc, qlen, h, p = x.shape
+    n = b_mat.shape[-1]
+
+    # broadcast B/C over heads at the BlockSpec level (no materialized copy)
+    y, states = pl.pallas_call(
+        _kernel,
+        grid=(bsz, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, qlen, 1, p), lambda b, c, hh: (b, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, qlen, 1), lambda b, c, hh: (b, c, 0, hh)),
+            pl.BlockSpec((1,), lambda b, c, hh: (hh,)),
+            pl.BlockSpec((1, 1, qlen, n), lambda b, c, hh: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, qlen, n), lambda b, c, hh: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, qlen, 1, p), lambda b, c, hh: (b, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda b, c, hh: (b, c, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, qlen, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, nc, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, b_mat, c_mat)
+    return y, states

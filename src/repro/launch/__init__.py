@@ -1,0 +1,2 @@
+# Launchers: mesh.py (production meshes), dryrun.py (multi-pod dry-run +
+# roofline), train.py (training driver), serve.py (decode driver).

@@ -1,0 +1,253 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs            / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_accessed   / (chips × 819e9  B/s HBM)
+    collective = collective_bytes     / (chips × 50e9   B/s ICI per link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+are NOT in cost_analysis, so we parse the optimized HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (per-device shapes — the module is SPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+PEAK_FLOPS = 197e12   # bf16 per chip
+HBM_BW = 819e9        # B/s per chip
+ICI_BW = 50e9         # B/s per link per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "bf16[16,512,128]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt == "token" or dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*(?:\},\{[^}]*)*)\}\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\[[^\]]*\]<=\[([\d,]+)\]")
+
+
+def _result_shapes(line: str, kind: str) -> list[str]:
+    """Result shapes of an HLO instruction: between '=' and the op name."""
+    if "=" not in line:
+        return []
+    rhs = line.split("=", 1)[1]
+    op_pos = rhs.find(kind)
+    if op_pos < 0:
+        return []
+    return [m.group(0) for m in _SHAPE_RE.finditer(rhs[:op_pos])]
+
+
+def _groups_cross_replica(line: str, model_size: int) -> bool | None:
+    """True if any replica group spans multiple model-axis blocks (i.e. the
+    collective crosses gossip replicas / the data axis), False if every group
+    stays within one contiguous model block (intra-replica TP traffic), None
+    if no group info found.
+
+    With mesh (pod, data, model) the model axis is minor, so a TP group is a
+    contiguous id range [r*model, (r+1)*model)."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.split(",") if x.strip()]
+            if ids and (max(ids) // model_size) != (min(ids) // model_size):
+                return True
+        return False
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        # iota-style groups: replica_groups=[G,N]<=[T] — groups of size N over
+        # a transposed iota; N == model_size with trailing minor dim means TP.
+        return None
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    cross_replica_bytes: int = 0   # traffic crossing data/pod axes
+    model_axis_bytes: int = 0      # intra-replica TP traffic
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str, model_size: int = 16) -> CollectiveStats:
+    """Sum per-device result bytes of every collective op in optimized HLO,
+    classified intra-replica (model-axis TP) vs cross-replica (data/pod axes
+    — the traffic NoLoCo's gossip design minimizes).
+
+    We use the RESULT shape (what lands on the device): for all-gather that is
+    the gathered tensor, for reduce-scatter the scattered shard, for
+    collective-permute / all-to-all the moved payload — a reasonable proxy for
+    per-chip link traffic in each case."""
+    counts: dict = {k: 0 for k in _COLLECTIVES}
+    by_kind: dict = {k: 0 for k in _COLLECTIVES}
+    cross = intra = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in _COLLECTIVES:
+            if re.search(rf"\b{kind}(-start)?\(", s) and "=" in s:
+                if f"{kind}-done" in s:
+                    continue  # counted at -start
+                nbytes = sum(_shape_bytes(sh) for sh in _result_shapes(s, kind))
+                by_kind[kind] += nbytes
+                counts[kind] += 1
+                is_cross = _groups_cross_replica(s, model_size)
+                if kind == "collective-permute":
+                    # permute partners are replicas by construction here
+                    cross += nbytes
+                elif is_cross:
+                    cross += nbytes
+                else:
+                    intra += nbytes
+                break
+    return CollectiveStats(
+        counts=counts, bytes_by_kind=by_kind,
+        cross_replica_bytes=cross, model_axis_bytes=intra,
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float            # per-device HLO FLOPs (trip-count corrected)
+    hbm_bytes: float        # per-device bytes accessed
+    coll_bytes: float       # per-device collective bytes total
+    cross_replica_bytes: float  # collective bytes crossing data/pod axes
+    model_axis_bytes: float     # intra-replica TP collective bytes
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float      # 6·N_active·tokens (global)
+    useful_ratio: float     # model_flops / (hlo_flops × chips)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    flops: float,
+    hbm_bytes: float,
+    coll: CollectiveStats | None,
+    *,
+    chips: int,
+    model_flops: float,
+    cross_bytes: float | None = None,
+    intra_bytes: float | None = None,
+) -> Roofline:
+    """Roofline terms from PER-DEVICE cost numbers (XLA cost_analysis on an
+    SPMD module is per-device; the dry-run corrects while-loop trip counts by
+    depth extrapolation before calling this)."""
+    cross = float(coll.cross_replica_bytes if coll else cross_bytes or 0.0)
+    intra = float(coll.model_axis_bytes if coll else intra_bytes or 0.0)
+    total_coll = cross + intra
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = total_coll / ICI_BW
+
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * chips, 1.0)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        coll_bytes=total_coll,
+        cross_replica_bytes=cross,
+        model_axis_bytes=intra,
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=useful,
+    )
+
+
+def model_flops_estimate(cfg, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (forward-only), with N = ACTIVE
+    params for MoE (top-k experts only)."""
+    n = active_params(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def active_params(cfg) -> float:
+    """Active parameter count (MoE counts top-k of the expert FFNs)."""
+    d, l, v = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    n = v * d  # embedding (tied unembed ignored for the estimate)
+    if not cfg.tie_embeddings:
+        n += v * d
+    per_layer_attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    gated = cfg.mlp_variant in ("swiglu", "geglu")
+    for kind in cfg.layer_types:
+        if kind in ("global", "local", "encoder"):
+            n += per_layer_attn
+        elif kind == "rglru":
+            w = cfg.lru_width or d
+            n += 4 * d * w + w * d
+        elif kind == "ssd":
+            di = cfg.ssm_expand * d
+            nh = di // cfg.ssm_head_dim
+            n += 2 * d * di + 2 * d * cfg.ssm_state_dim + d * nh + di * d
+        if cfg.arch_type == "moe":
+            f = cfg.moe_d_ff or cfg.d_ff
+            k = cfg.num_experts_per_token
+            n += d * cfg.num_experts  # router
+            n += k * ((3 if gated else 2) * d * f)
+        elif cfg.d_ff > 0 and kind != "ssd":
+            n += (3 if gated else 2) * d * cfg.d_ff
+    if cfg.is_encoder_decoder:
+        n += cfg.num_encoder_layers * (per_layer_attn + (3 if gated else 2) * d * cfg.d_ff)
+        n += cfg.num_layers * (per_layer_attn)  # cross attention
+    return float(n)
+
+
+def total_params(cfg) -> float:
+    """Total parameter count (all experts)."""
+    if cfg.arch_type != "moe":
+        return active_params(cfg)
+    f = cfg.moe_d_ff or cfg.d_ff
+    gated = cfg.mlp_variant in ("swiglu", "geglu")
+    k = cfg.num_experts_per_token
+    per_layer_active = k * ((3 if gated else 2) * cfg.d_model * f)
+    per_layer_total = cfg.num_experts * ((3 if gated else 2) * cfg.d_model * f)
+    return active_params(cfg) + cfg.num_layers * (per_layer_total - per_layer_active)

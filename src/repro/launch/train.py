@@ -1,0 +1,199 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch paper-small-125m --reduced \
+        --method noloco --replicas 8 --steps 200
+
+Simulation mode (default, CPU-friendly): replicas are a stacked leading axis;
+the full NoLoCo machinery (inner AdamW, gossip outer step with random
+pairings, weight-std tracking) runs exactly as in the paper.  ``--method``
+selects noloco / diloco / fsdp (grad all-reduce every step) / none
+(independent runs — the §5.2 baseline).
+
+``run_training`` is the library entry benchmarks and examples share.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import GossipTrainer, OuterConfig, TrainerConfig
+from repro.data import LoaderConfig, shard_iterator
+from repro.models import model as model_api
+from repro.models.common import values_of
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.parallel.sharding import ShardCtx
+from repro.checkpoint import save as ckpt_save
+
+
+def method_config(
+    method: str,
+    *,
+    inner_lr: float,
+    total_steps: int,
+    warmup: int = 100,
+    inner_steps: int | None = None,
+    seed: int = 0,
+) -> TrainerConfig:
+    """Paper §4 hyper-parameters: β=0.7 both; NoLoCo α=0.5, m=50;
+    DiLoCo α=0.3, m=100; inner AdamW + clip 1.0 + warmup-cosine."""
+    sched = warmup_cosine(inner_lr, total_steps, warmup_steps=warmup)
+    inner = AdamWConfig(lr=sched, weight_decay=0.1, clip_norm=1.0)
+    if method == "noloco":
+        outer = OuterConfig(method="noloco", alpha=0.5, beta=0.7,
+                            inner_steps=inner_steps or 50, seed=seed)
+    elif method == "diloco":
+        outer = OuterConfig(method="diloco", alpha=0.3, beta=0.7,
+                            inner_steps=inner_steps or 100, seed=seed)
+    elif method in ("fsdp", "none"):
+        outer = OuterConfig(method="none", inner_steps=10**9)
+    else:  # pragma: no cover
+        raise ValueError(method)
+    return TrainerConfig(outer=outer, inner=inner, sync_grads=method == "fsdp")
+
+
+def run_training(
+    cfg: ModelConfig,
+    *,
+    method: str = "noloco",
+    replicas: int = 4,
+    per_replica_batch: int = 4,
+    seq_len: int = 128,
+    steps: int = 100,
+    inner_lr: float = 3e-3,
+    inner_steps: int | None = None,
+    warmup: int | None = None,
+    eval_every: int = 0,
+    eval_batches: int = 2,
+    seed: int = 0,
+    ckpt_dir: str | None = None,
+    log: bool = False,
+) -> dict[str, Any]:
+    """Train; returns loss/weight-std trajectories and final eval loss."""
+    ctx = ShardCtx.local()
+
+    def loss_fn(params, batch, rng):
+        return model_api.loss_fn(params, cfg, batch, ctx)[0]
+
+    tcfg = method_config(
+        method, inner_lr=inner_lr, total_steps=steps,
+        warmup=warmup if warmup is not None else max(steps // 10, 1),
+        inner_steps=inner_steps, seed=seed,
+    )
+    trainer = GossipTrainer(tcfg, loss_fn)
+
+    one = values_of(model_api.init_params(jax.random.PRNGKey(seed), cfg))
+    stacked = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (replicas,) + v.shape), one
+    )
+    state = trainer.init(stacked)
+
+    loader = shard_iterator(
+        LoaderConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len,
+            per_replica_batch=per_replica_batch, replicas=replicas, seed=seed,
+        )
+    )
+    eval_loader = shard_iterator(
+        LoaderConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len,
+            per_replica_batch=per_replica_batch, replicas=replicas, seed=seed + 777,
+        )
+    )
+    eval_set = [next(eval_loader) for _ in range(eval_batches)]
+
+    inner_jit = jax.jit(trainer.inner_step)
+    eval_jit = jax.jit(
+        lambda th, b, r: jnp.mean(trainer._vgrad(th, b, r)[0])
+    )
+
+    rng = jax.random.PRNGKey(seed + 1)
+    losses, stds, evals = [], [], []
+    t0 = time.time()
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(loader).items()}
+        rng, sub = jax.random.split(rng)
+        state, metrics = inner_jit(state, batch, sub)
+        losses.append(float(jnp.mean(metrics["loss"])))
+        if trainer.should_sync(state):
+            state = trainer.outer_step(state)
+        if eval_every and (t + 1) % eval_every == 0:
+            rng, sub = jax.random.split(rng)
+            rngs = jax.random.split(sub, replicas)
+            ev = float(np.mean([
+                float(eval_jit(state.theta, {k: jnp.asarray(v) for k, v in b.items()},
+                               rngs))
+                for b in eval_set
+            ]))
+            evals.append((t + 1, ev))
+            stds.append((t + 1, float(GossipTrainer.replica_weight_std(state.theta))))
+            if log:
+                print(f"step {t+1}: train={losses[-1]:.4f} eval={ev:.4f} "
+                      f"wstd={stds[-1][1]:.6f} ({time.time()-t0:.0f}s)", flush=True)
+    if ckpt_dir:
+        ckpt_save(ckpt_dir, steps, {"theta": state.theta, "phi": state.outer.phi,
+                                    "delta": state.outer.delta})
+    return {
+        "losses": losses,
+        "evals": evals,
+        "weight_stds": stds,
+        "final_weight_std": float(GossipTrainer.replica_weight_std(state.theta)),
+        "state": state,
+        "wall_s": time.time() - t0,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-small-125m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) variant of the arch")
+    ap.add_argument("--method", default="noloco",
+                    choices=["noloco", "diloco", "fsdp", "none"])
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--inner-steps", type=int, default=None)
+    ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(vocab_size=min(cfg.vocab_size, 512), remat=False, dtype="float32")
+    res = run_training(
+        cfg, method=args.method, replicas=args.replicas,
+        per_replica_batch=args.batch, seq_len=args.seq, steps=args.steps,
+        inner_lr=args.lr, inner_steps=args.inner_steps,
+        eval_every=args.eval_every, seed=args.seed, ckpt_dir=args.ckpt_dir,
+        log=True,
+    )
+    summary = {
+        "arch": cfg.name, "method": args.method,
+        "final_train_loss": res["losses"][-1],
+        "final_eval": res["evals"][-1][1] if res["evals"] else None,
+        "final_weight_std": res["final_weight_std"],
+        "wall_s": round(res["wall_s"], 1),
+    }
+    print(json.dumps(summary))
+    if args.out:
+        res.pop("state")
+        with open(args.out, "w") as f:
+            json.dump({k: v for k, v in res.items()}, f)
+
+
+if __name__ == "__main__":
+    main()

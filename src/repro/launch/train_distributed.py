@@ -1,0 +1,188 @@
+"""Distributed NoLoCo training driver: the production loop over the shard_map
+runtime (parallel/steps.py) — per-replica inner AdamW steps with ZERO
+cross-replica collectives, plus a gossip outer step every m steps from a
+PRECOMPILED pool of pairing programs (ppermute needs static permutations).
+
+On this CPU box it runs on forced host devices for validation:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.train_distributed --data 4 --model 2 --steps 40
+
+On TPU the same code drives the production mesh (launch/mesh.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save as ckpt_save
+from repro.configs import registry
+from repro.core import pairing
+from repro.core.outer import OuterConfig
+from repro.data import LoaderConfig, shard_iterator
+from repro.models import model as model_api
+from repro.models.common import unzip
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.parallel import plans as plans_lib
+from repro.parallel import steps as steps_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class DistributedTrainer:
+    """Owns the compiled step functions and the replica-sharded state."""
+
+    cfg: ModelConfig
+    mesh: Any
+    plan: plans_lib.Plan
+    outer_cfg: OuterConfig
+    inner_cfg: AdamWConfig
+    pairing_pool: int = 16        # precompiled random matchings, cycled
+    schedule: str = "random"      # "random" pool | "hypercube" (log2 N programs)
+    seed: int = 0
+
+    def __post_init__(self):
+        self._outer_fns: dict[int, Any] = {}
+
+    # -- setup -------------------------------------------------------------
+
+    def init_state(self, batch_example: dict):
+        params = model_api.init_params(jax.random.PRNGKey(self.seed), self.cfg)
+        stacked = steps_lib.stack_replicas(params, self.plan.replicas)
+        vals, _ = unzip(stacked)
+        with jax.set_mesh(self.mesh):
+            self.bundle = steps_lib.build_train_step(
+                self.cfg, self.plan, self.mesh, stacked, batch_example, self.inner_cfg
+            )
+            theta = jax.device_put(vals, self.bundle.theta_shardings)
+            opt = jax.device_put(
+                steps_lib.init_opt_state(theta, self.plan.replicas),
+                self.bundle.opt_shardings,
+            )
+            phi = jax.device_put(vals, self.bundle.theta_shardings)
+            delta = jax.tree.map(jnp.zeros_like, phi)
+            rep = self.plan.replica_axes
+            rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
+            step_c = jax.device_put(
+                jnp.zeros((self.plan.replicas,), jnp.int32),
+                NamedSharding(self.mesh, P(rep_entry)),
+            )
+        self._bspecs = steps_lib.batch_pspecs(self.plan, batch_example)
+        return {"theta": theta, "opt": opt, "phi": phi, "delta": delta,
+                "outer_step": step_c, "inner_step": 0}
+
+    def _outer_fn(self, outer_index: int):
+        """Compiled gossip program for this outer step (cycled pool)."""
+        world = self.plan.replicas
+        if self.schedule == "hypercube":
+            key = outer_index % max(int(np.log2(world)), 1)
+            perm = pairing.hypercube_ppermute_pairs(key, world, seed=self.seed)
+        else:
+            key = outer_index % self.pairing_pool
+            perm = pairing.ppermute_pairs(key, world, seed=self.seed)
+        if key not in self._outer_fns:
+            with jax.set_mesh(self.mesh):
+                self._outer_fns[key] = steps_lib.build_outer_step(
+                    self.plan, self.mesh, self.bundle.pspecs, self.outer_cfg, perm
+                )
+        return self._outer_fns[key]
+
+    # -- steps ---------------------------------------------------------------
+
+    def inner_step(self, state, batch):
+        with jax.set_mesh(self.mesh):
+            batch = jax.device_put(batch, plans_lib.shardings(self.mesh, self._bspecs))
+            theta, opt, metrics = self.bundle.step_fn(state["theta"], state["opt"], batch)
+        state = dict(state, theta=theta, opt=opt, inner_step=state["inner_step"] + 1)
+        return state, metrics
+
+    def maybe_outer_step(self, state):
+        if state["inner_step"] % self.outer_cfg.inner_steps:
+            return state, False
+        outer_index = state["inner_step"] // self.outer_cfg.inner_steps - 1
+        fn = self._outer_fn(outer_index)
+        with jax.set_mesh(self.mesh):
+            theta, phi, delta, step_c = fn(
+                state["theta"], state["phi"], state["delta"], state["outer_step"]
+            )
+        return dict(state, theta=theta, phi=phi, delta=delta, outer_step=step_c), True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-small-125m")
+    ap.add_argument("--data", type=int, default=4)
+    ap.add_argument("--model", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--inner-steps", type=int, default=10)
+    ap.add_argument("--batch-per-replica", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--schedule", default="random", choices=["random", "hypercube"])
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if jax.device_count() < args.data * args.model:
+        raise SystemExit(
+            f"need {args.data * args.model} devices; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+        )
+    mesh = jax.make_mesh(
+        (args.data, args.model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    cfg = registry.get_config(args.arch).reduced(
+        vocab_size=512, dtype="float32", remat=False
+    )
+    plan = plans_lib.make_plan("gossip_dp", mesh, shape_kind="train")
+
+    trainer = DistributedTrainer(
+        cfg=cfg, mesh=mesh, plan=plan,
+        outer_cfg=OuterConfig(method="noloco", inner_steps=args.inner_steps),
+        inner_cfg=AdamWConfig(lr=args.lr, weight_decay=0.0),
+        schedule=args.schedule,
+    )
+    loader = shard_iterator(LoaderConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        per_replica_batch=args.batch_per_replica, replicas=plan.replicas,
+    ))
+
+    def to_global(b):
+        # (R, B, S) stacked -> (R*B, S) global batch rows, replica-major
+        return {k: jnp.asarray(v.reshape(-1, v.shape[-1])) for k, v in b.items()}
+
+    example = to_global(next(loader))
+    state = trainer.init_state(example)
+    t0 = time.time()
+    for t in range(args.steps):
+        state, metrics = trainer.inner_step(state, to_global(next(loader)))
+        state, synced = trainer.maybe_outer_step(state)
+        if (t + 1) % 10 == 0 or synced:
+            loss = np.asarray(metrics["loss"]).mean()
+            print(f"step {t+1}: loss={loss:.4f}"
+                  + (" [gossip]" if synced else ""), flush=True)
+    if args.ckpt_dir:
+        ckpt_save(args.ckpt_dir, args.steps,
+                  {"theta": state["theta"], "phi": state["phi"]})
+    print(json.dumps({
+        "arch": cfg.name, "replicas": plan.replicas, "tp": plan.tp,
+        "final_loss": float(np.asarray(metrics["loss"]).mean()),
+        "wall_s": round(time.time() - t0, 1),
+        "compiled_outer_programs": len(trainer._outer_fns),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.config import ModelConfig
+from repro.models.common import Param, param, unzip, values_of, specs_of
+from repro.models import model as model_api
+
+__all__ = ["ModelConfig", "Param", "param", "unzip", "values_of", "specs_of", "model_api"]

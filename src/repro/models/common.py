@@ -1,0 +1,77 @@
+"""Parameter machinery shared by all models.
+
+Every weight is created as a :class:`Param` — the array plus *logical* axis
+names describing how each dim shards:
+
+    None      replicated
+    "tp"      tensor-parallel       -> mesh "model" axis
+    "expert"  expert-parallel       -> mesh "model" axis
+    "fsdp"    ZeRO-3 weight shard   -> mesh "data" axis (fsdp_hybrid plan only)
+
+``unzip`` splits a Param tree into (values, logical_specs); the launcher maps
+logical specs to mesh PartitionSpecs according to the arch's parallelism plan
+(repro/parallel/plans.py).  Model *apply* code only ever sees plain arrays —
+at whatever local shapes shard_map hands it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["Param", "param", "unzip", "values_of", "specs_of", "truncated_normal"]
+
+
+@dataclasses.dataclass
+class Param:
+    value: jax.Array
+    logical: tuple[str | None, ...]
+
+    def __post_init__(self):
+        if hasattr(self.value, "ndim") and len(self.logical) != self.value.ndim:
+            raise ValueError(
+                f"logical spec {self.logical} does not match shape {self.value.shape}"
+            )
+
+
+# Registered as a pytree node (logical spec as static aux data) so that
+# jax.eval_shape can trace init functions abstractly — the dry-run builds
+# 235B-param trees as ShapeDtypeStructs without allocating anything.
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.logical),
+    lambda aux, ch: Param(value=ch[0], logical=aux),
+)
+
+
+def param(value: jax.Array, *logical: str | None) -> Param:
+    return Param(value=value, logical=tuple(logical))
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip(tree: PyTree) -> tuple[PyTree, PyTree]:
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+    specs = jax.tree.map(lambda p: p.logical, tree, is_leaf=_is_param)
+    return values, specs
+
+
+def values_of(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+
+
+def specs_of(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: p.logical, tree, is_leaf=_is_param)
+
+
+def truncated_normal(key, shape, stddev, dtype) -> jax.Array:
+    # fan-in scaled init; truncation at 2σ like flax.linen default
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev
+    return x.astype(dtype)

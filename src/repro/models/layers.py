@@ -1,0 +1,202 @@
+"""Norms, positional encodings, MLPs and (vocab-sharded) embeddings.
+
+Init functions build GLOBAL-shape :class:`Param` trees with logical sharding
+annotations; apply functions operate on whatever LOCAL shards ``shard_map``
+hands them, using :class:`ShardCtx` for the collectives.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, param, truncated_normal
+from repro.parallel.sharding import ShardCtx
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, dim: int) -> dict:
+    p = {"scale": param(jnp.ones((dim,), jnp.float32), None)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = param(jnp.zeros((dim,), jnp.float32), None)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-math.log(10_000.0) * jnp.arange(dim // 2, dtype=jnp.float32) / max(dim // 2 - 1, 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_mlp(key, cfg, d_model: int | None = None, d_ff: int | None = None) -> dict:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.mlp_variant in ("swiglu", "geglu")
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(f)
+    p = {
+        "w_in": param(truncated_normal(k1, (d, f), std_in, _dtype(cfg)), "fsdp", "tp"),
+        "w_out": param(truncated_normal(k2, (f, d), std_out, _dtype(cfg)), "tp", "fsdp"),
+    }
+    if gated:
+        p["w_gate"] = param(truncated_normal(k3, (d, f), std_in, _dtype(cfg)), "fsdp", "tp")
+    return p
+
+
+def apply_mlp(p: dict, cfg, x: jax.Array, ctx: ShardCtx) -> jax.Array:
+    """Column-parallel in, row-parallel out; psum (or reduce-scatter under
+    sequence parallelism) at the end."""
+    w_in = ctx.gather_param(p["w_in"], axis=0)
+    w_out = ctx.gather_param(p["w_out"], axis=1)
+    h = x @ w_in
+    if cfg.mlp_variant == "swiglu":
+        w_gate = ctx.gather_param(p["w_gate"], axis=0)
+        h = jax.nn.silu(x @ w_gate) * h
+    elif cfg.mlp_variant == "geglu":
+        w_gate = ctx.gather_param(p["w_gate"], axis=0)
+        h = jax.nn.gelu(x @ w_gate, approximate=True) * h
+    elif cfg.mlp_variant == "relu2":  # nemotron/minitron squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    y = h @ w_out  # partial sum over tp shards of f
+    return ctx.scatter_seq_sum(y, axis=x.ndim - 2)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (vocab-sharded) and logits
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg) -> dict:
+    std = 1.0 / math.sqrt(cfg.d_model)
+    emb = truncated_normal(key, (cfg.vocab_size, cfg.d_model), std, jnp.float32)
+    p = {"table": param(emb.astype(_dtype(cfg)), "tp", "fsdp")}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        w = truncated_normal(k2, (cfg.d_model, cfg.vocab_size), std, _dtype(cfg))
+        p["unembed"] = param(w, "fsdp", "tp")
+    return p
+
+
+def embed_tokens(p: dict, cfg, tokens: jax.Array, ctx: ShardCtx) -> jax.Array:
+    """Vocab-sharded lookup: each model shard owns a contiguous vocab slice;
+    out-of-range tokens contribute zero and a psum combines the slices."""
+    table = ctx.gather_param(p["table"], axis=1)  # ZeRO-3 gathers d, not vocab
+    vt = ctx.vocab_tp(cfg.vocab_size)
+    if vt == 1:
+        return jnp.take(table, tokens, axis=0)
+    shard = ctx.model_index()
+    vloc = cfg.vocab_size // vt
+    start = shard * vloc
+    local = tokens - start
+    in_range = (local >= 0) & (local < vloc)
+    local = jnp.clip(local, 0, vloc - 1)
+    out = jnp.take(table, local, axis=0)
+    out = jnp.where(in_range[..., None], out, 0)
+    return ctx.psum_model(out)
+
+
+def logits_sharded(p: dict, cfg, x: jax.Array, ctx: ShardCtx) -> jax.Array:
+    """Returns vocab-LOCAL logits (..., V/tp). Softmax/loss must psum."""
+    if cfg.tie_embeddings:
+        table = ctx.gather_param(p["table"], axis=1)
+        w = table.T  # (d, V_local)
+    else:
+        w = ctx.gather_param(p["unembed"], axis=0)
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def cross_entropy_parts(
+    logits_local: jax.Array, labels: jax.Array, cfg, ctx: ShardCtx, mask: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """(sum of token NLL, token count) from vocab-sharded logits.
+
+    Stable log-softmax with cross-shard max (pmax) and sum (psum); label hit
+    is looked up in the local vocab slice and psum'd."""
+    vt = ctx.vocab_tp(cfg.vocab_size)
+    # stability max: constant w.r.t. differentiation (log-sum-exp grads are
+    # exact with a stop_gradient'ed max; pmax has no transpose rule anyway)
+    m = jax.lax.stop_gradient(jnp.max(logits_local, axis=-1, keepdims=True))
+    m = ctx.pmax_model(m)
+    ex = jnp.exp(logits_local - m)
+    denom = ctx.psum_model(jnp.sum(ex, axis=-1))  # (...,)
+
+    if vt == 1:
+        hit = jnp.take_along_axis(logits_local, labels[..., None], axis=-1)[..., 0]
+    else:
+        shard = ctx.model_index()
+        vloc = logits_local.shape[-1]
+        local = labels - shard * vloc
+        in_range = (local >= 0) & (local < vloc)
+        local = jnp.clip(local, 0, vloc - 1)
+        hit = jnp.take_along_axis(logits_local, local[..., None], axis=-1)[..., 0]
+        hit = ctx.psum_model(jnp.where(in_range, hit, 0.0))
+
+    nll = jnp.log(denom) + m[..., 0] - hit
+    if mask is None:
+        return jnp.sum(nll), jnp.asarray(nll.size, jnp.float32)
+    w = mask.astype(jnp.float32)
+    return jnp.sum(nll * w), jnp.sum(w)
+
+
+def cross_entropy_sharded(
+    logits_local: jax.Array, labels: jax.Array, cfg, ctx: ShardCtx, mask: jax.Array | None = None
+) -> jax.Array:
+    """Mean token NLL from vocab-sharded logits."""
+    s, n = cross_entropy_parts(logits_local, labels, cfg, ctx, mask)
+    return s / jnp.maximum(n, 1.0)

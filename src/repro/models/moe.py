@@ -1,0 +1,142 @@
+"""Mixture-of-Experts block: top-k routing, capacity-bounded scatter dispatch,
+expert parallelism over the model axis with an explicit all-to-all.
+
+Design (production pattern, DeepSeek/GShard style, adapted for TPU):
+
+  * tokens enter SEQUENCE-SHARDED over the model axis (T_local = T / tp) so
+    the dispatch buffers stay small;
+  * router + top-k run locally; each (token, k) assignment is scattered into a
+    per-expert capacity buffer ``(E, C, d)`` — no (T, E, C) one-hot tensor is
+    ever materialized;
+  * one ``all_to_all`` over the model axis regroups buffers so each shard
+    holds the tokens of its E/tp local experts;
+  * local experts run as a dense batched ffn (E_local, tp*C, d);
+  * the inverse all-to-all + combine-weighted scatter-add returns outputs.
+
+Tokens above capacity are dropped (standard; capacity_factor controls it) —
+the router aux loss keeps load roughly balanced so drops are rare.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import param, truncated_normal
+from repro.parallel.sharding import ShardCtx
+
+__all__ = ["init_moe", "apply_moe"]
+
+
+def init_moe(key, cfg) -> dict:
+    d = cfg.d_model
+    e = cfg.num_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(f)
+    p = {
+        # router stays replicated (tiny) and in f32 for routing stability
+        "router": param(truncated_normal(ks[0], (d, e), std_in, jnp.float32), None, None),
+        "w_in": param(truncated_normal(ks[1], (e, d, f), std_in, dt), "expert", "fsdp", None),
+        "w_out": param(truncated_normal(ks[2], (e, f, d), std_out, dt), "expert", None, "fsdp"),
+    }
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        p["w_gate"] = param(
+            truncated_normal(ks[3], (e, d, f), std_in, dt), "expert", "fsdp", None
+        )
+    return p
+
+
+def _act(cfg, gate_h, h):
+    if cfg.mlp_variant == "swiglu":
+        return jax.nn.silu(gate_h) * h
+    if cfg.mlp_variant == "geglu":
+        return jax.nn.gelu(gate_h, approximate=True) * h
+    return jax.nn.gelu(h, approximate=True)
+
+
+def apply_moe(
+    p: dict, cfg, x: jax.Array, ctx: ShardCtx
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S_local, d) — sequence-sharded over the model axis when tp > 1
+    (the transformer block handles the scatter/gather around this call).
+
+    Returns (y, aux_loss) with y in the same layout as x.
+    """
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.num_experts_per_token
+    ep = ctx.experts_tp(e)
+    e_local = e // ep
+
+    xt = x.reshape(b * s, d)
+    t = b * s
+
+    # ---- routing (f32) -----------------------------------------------------
+    logits = xt.astype(jnp.float32) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize over top-k
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    # ---- capacity assignment ------------------------------------------------
+    cap = max(1, int(math.ceil(t * k / e * cfg.moe_capacity_factor)))
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_w = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+
+    # position of each assignment within its expert, via sorted segment ranks
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    rank_sorted = jnp.arange(t * k) - seg_start[sorted_e]
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+
+    # ---- scatter into per-expert capacity buffers ----------------------------
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    safe_e = jnp.where(keep, flat_e, 0)
+    safe_r = jnp.where(keep, rank, 0)
+    vals = jnp.where(keep[:, None], xt[flat_tok], 0)
+    buf = buf.at[safe_e, safe_r].add(vals.astype(x.dtype))
+
+    # ---- expert parallelism: all-to-all over the model axis -------------------
+    if ep > 1:
+        # (E, C, d) -> (ep, E_local, C, d) -> a2a -> (E_local, ep*C, d)
+        buf = buf.reshape(ep, e_local, cap, d)
+        buf = ctx.all_to_all_model(buf, split_axis=0, concat_axis=2)  # (1*,E_l,ep*C,d)
+        buf = buf.reshape(e_local, ep * cap, d)
+    # else: buf stays (E, C, d) == (E_local, C, d)
+
+    # ---- local expert FFN ------------------------------------------------------
+    w_in = ctx.gather_param(p["w_in"], axis=1)   # (E_l, d, f): ZeRO-3 dim = d
+    w_out = ctx.gather_param(p["w_out"], axis=2)  # (E_l, f, d): ZeRO-3 dim = d
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+    if "w_gate" in p:
+        w_gate = ctx.gather_param(p["w_gate"], axis=1)
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        h = _act(cfg, g, h)
+    else:
+        h = _act(cfg, None, h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_out)
+
+    # ---- inverse all-to-all ------------------------------------------------------
+    if ep > 1:
+        out_buf = out_buf.reshape(e_local, ep, cap, d)
+        out_buf = ctx.all_to_all_model(out_buf, split_axis=1, concat_axis=0)
+        out_buf = out_buf.reshape(e, cap, d)
+
+    # ---- combine -------------------------------------------------------------------
+    gathered = out_buf[safe_e, safe_r]  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[flat_tok].add(gathered.astype(jnp.float32) * flat_w[:, None])
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,226 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm (the paper's Listing 1, adapted to JAX):
+sequence is split into chunks of Q tokens; within a chunk the output is the
+"attention-like" quadratic form with the decay kernel L; across chunks a
+linear state recurrence (scanned) passes (H, P, N) states.  Both pieces are
+O(S·Q) compute and O(S) memory — mamba2 therefore runs the long_500k shape.
+
+TP: heads are sharded over the model axis (state recurrence is head-local);
+B/C projections (ngroups=1, shared across heads) are replicated; the only
+collective is the row-parallel out-proj psum.
+
+The intra-chunk quadratic form is the compute hot-spot and has a Pallas
+kernel (repro/kernels/ssd_scan.py); this module is the jnp production path
+and the kernel's shape-semantics twin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import param, truncated_normal
+from repro.parallel.sharding import ShardCtx
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def num_heads_ssm(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def init_ssd(key, cfg) -> dict:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    n = cfg.ssm_state_dim
+    h = num_heads_ssm(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    std = 1.0 / math.sqrt(d)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[0], (h,), jnp.float32, math.log(1e-3), math.log(1e-1))
+    dt_bias = jnp.exp(u)
+    dt_bias = dt_bias + jnp.log(-jnp.expm1(-dt_bias))  # inverse softplus
+    a_init = jax.random.uniform(ks[1], (h,), jnp.float32, 1.0, 16.0)
+    return {
+        "w_z": param(truncated_normal(ks[2], (d, di), std, dt), "fsdp", "tp"),
+        "w_x": param(truncated_normal(ks[3], (d, di), std, dt), "fsdp", "tp"),
+        "w_b": param(truncated_normal(ks[4], (d, n), std, dt), "fsdp", None),
+        "w_c": param(truncated_normal(ks[5], (d, n), std, dt), "fsdp", None),
+        "w_dt": param(truncated_normal(ks[6], (d, h), std, dt), "fsdp", "tp"),
+        "dt_bias": param(dt_bias, "tp"),
+        "a_log": param(jnp.log(a_init), "tp"),
+        "d_skip": param(jnp.ones((h,), jnp.float32), "tp"),
+        "conv": param(jnp.zeros((cfg.ssm_conv_width, di), dt).at[-1].set(1.0), None, "tp"),
+        "norm_scale": param(jnp.ones((di,), jnp.float32), "tp"),
+        "w_out": param(truncated_normal(jax.random.fold_in(key, 9), (di, d), 1.0 / math.sqrt(di), dt), "tp", "fsdp"),
+    }
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSDCache:
+    """Decode state: conv tail (B, K−1, di_local) + SSM state (B,H_l,P,N)."""
+
+    conv: jax.Array
+    state: jax.Array
+
+    @staticmethod
+    def init(cfg, batch: int, di_local: int, h_local: int, dtype) -> "SSDCache":
+        return SSDCache(
+            conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, di_local), dtype),
+            state=jnp.zeros((batch, h_local, cfg.ssm_head_dim, cfg.ssm_state_dim), jnp.float32),
+        )
+
+
+def _causal_conv(u, kernel, tail):
+    k = kernel.shape[0]
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = tail.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i : i + u.shape[1], :] * kernel[i][None, None, :] for i in range(k))
+    return out, full[:, -(k - 1) :, :]
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)   already dt-scaled NOT applied; raw x
+    dt: jax.Array,     # (B, S, H)      positive step sizes
+    a: jax.Array,      # (H,)           negative decay rates (−exp(a_log))
+    b_mat: jax.Array,  # (B, S, N)
+    c_mat: jax.Array,  # (B, S, N)
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD: returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    nc = math.ceil(s / q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    da = dtc * a[None, None, None, :]              # (B,nc,Q,H) log-decay per step
+    cums = jnp.cumsum(da, axis=2)                  # inclusive
+    # decay kernel L[i,j] = exp(cums_i − cums_j) for i ≥ j
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_kern = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+
+    xdt = xc * dtc[..., None]                      # dt_j · x_j
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, l_kern, xdt)
+
+    # per-chunk end states: Σ_j exp(cums_last − cums_j) dt_j B_j ⊗ x_j
+    decay_states = jnp.exp(cums[:, :, -1:, :] - cums)          # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, decay_states, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                    # (B,nc,H)
+    s0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def scan_body(prev, inp):
+        st, dec = inp
+        new = prev * dec[:, :, None, None] + st
+        return new, prev  # emit state ENTERING this chunk
+
+    final, prev_states = jax.lax.scan(
+        scan_body,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=unroll,
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, prev_states, jnp.exp(cums))
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)[:, :s]
+    return y, final
+
+
+def apply_ssd(
+    p: dict,
+    cfg,
+    x: jax.Array,  # (B, S, d)
+    ctx: ShardCtx,
+    *,
+    cache: SSDCache | None = None,
+) -> tuple[jax.Array, SSDCache | None]:
+    w_z = ctx.gather_param(p["w_z"], axis=0)
+    w_x = ctx.gather_param(p["w_x"], axis=0)
+    w_b = ctx.gather_param(p["w_b"], axis=0)
+    w_c = ctx.gather_param(p["w_c"], axis=0)
+    w_dt = ctx.gather_param(p["w_dt"], axis=0)
+    w_out = ctx.gather_param(p["w_out"], axis=1)
+
+    bsz, s, _ = x.shape
+    hd = cfg.ssm_head_dim
+
+    z = x @ w_z                                          # (B,S,di_local)
+    u = x @ w_x
+    u, new_conv = _causal_conv(u, p["conv"], cache.conv if cache is not None else None)
+    u = jax.nn.silu(u.astype(jnp.float32))
+    b_mat = (x @ w_b).astype(jnp.float32)
+    c_mat = (x @ w_c).astype(jnp.float32)
+    dt = jax.nn.softplus((x @ w_dt).astype(jnp.float32) + p["dt_bias"])  # (B,S,H_l)
+    a = -jnp.exp(p["a_log"])                             # (H_l,)
+
+    h_local = u.shape[-1] // hd
+    u_heads = u.reshape(bsz, s, h_local, hd)
+
+    decode = cache is not None and s == 1
+    if not decode:
+        y, final_state = ssd_chunked(
+            u_heads, dt, a, b_mat, c_mat, cfg.ssm_chunk,
+            initial_state=cache.state if cache is not None else None,
+            unroll=cfg.unroll_scans,
+        )
+        new_cache = (
+            SSDCache(conv=new_conv, state=final_state) if cache is not None else None
+        )
+    else:
+        # single-token recurrence: h' = exp(dt·a)·h + dt·(B ⊗ x)
+        dt1 = dt[:, 0]                                   # (B,H_l)
+        decay = jnp.exp(dt1 * a[None, :])                # (B,H_l)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, b_mat[:, 0], u_heads[:, 0])
+        state = cache.state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0], state)[:, None]
+        y = y.reshape(bsz, 1, h_local, hd)
+        new_cache = SSDCache(conv=new_conv, state=state)
+        final_state = state
+
+    y = y + p["d_skip"][None, None, :, None] * u_heads
+    y = y.reshape(bsz, s, h_local * hd)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z)) — per-channel, head-local
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    if ctx.ff_tp(d_inner(cfg)) > 1:
+        # mean over the FULL di dim needs a psum of local sums
+        ms = ctx.psum_model(ms) / ctx.tp
+    g = g * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]
+
+    out = g.astype(x.dtype) @ w_out
+    if ctx.ff_tp(d_inner(cfg)) > 1:
+        out = ctx.scatter_seq_sum(out, axis=1)
+    return out, new_cache

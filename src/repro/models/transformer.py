@@ -1,0 +1,244 @@
+"""Transformer assembly: heterogeneous layer patterns, scan-over-periods with
+remat, KV/recurrent caches, encoder-decoder support.
+
+Layer layout: ``cfg.attn_pattern`` is cycled over ``num_layers``.  Layers are
+grouped into PERIODS (one full cycle); all full periods are stacked and run
+under one ``jax.lax.scan`` (compile time stays O(period), crucial for the
+94-layer MoE dry-runs at 512 devices); the remainder (num_layers % period)
+is unrolled.
+
+Per-layer caches are pytrees stacked along the scan dim and threaded through
+the scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssd as ssd_lib
+from repro.models.attention import AttnCache
+from repro.models.common import Param
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.parallel.sharding import ShardCtx
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg, kind: str, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict = {"ln1": init_norm(cfg, cfg.d_model)}
+    if kind in ("global", "local", "encoder"):
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_lib.init_rglru(ks[0], cfg)
+    elif kind == "ssd":
+        p["mixer"] = ssd_lib.init_ssd(ks[0], cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if cross:
+        p["ln_cross"] = init_norm(cfg, cfg.d_model)
+        p["cross_attn"] = attn_lib.init_attention(ks[1], cfg, cross=True)
+    if cfg.d_ff > 0 or cfg.arch_type == "moe":
+        p["ln2"] = init_norm(cfg, cfg.d_model)
+        if cfg.arch_type == "moe":
+            p["moe"] = moe_lib.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[2], cfg)
+    return p
+
+
+def _split_seq(x: jax.Array, ctx: ShardCtx) -> tuple[jax.Array, bool]:
+    """Slice the local sequence chunk out of a model-axis-replicated tensor
+    (free — no collective) so MoE dispatch buffers stay small."""
+    s = x.shape[1]
+    if ctx.model_axis is None or ctx.tp == 1 or s % ctx.tp != 0 or s < ctx.tp:
+        return x, False
+    loc = s // ctx.tp
+    start = ctx.model_index() * loc
+    return jax.lax.dynamic_slice_in_dim(x, start, loc, 1), True
+
+
+def apply_block(
+    p: dict,
+    cfg,
+    x: jax.Array,
+    ctx: ShardCtx,
+    kind: str,
+    *,
+    positions: jax.Array | None = None,
+    cache: PyTree | None = None,
+    cross_cache: AttnCache | None = None,
+    enc_out: jax.Array | None = None,
+    decode: bool = False,
+) -> tuple[jax.Array, PyTree | None, jax.Array]:
+    """Pre-norm block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["ln1"], x)
+
+    if kind in ("global", "local"):
+        mode = "local" if kind == "local" else "causal"
+        y, new_cache = attn_lib.apply_attention(
+            p["attn"], cfg, h, ctx, mode=mode, positions=positions, cache=cache
+        )
+    elif kind == "encoder":  # bidirectional self-attention (whisper encoder)
+        y, new_cache = attn_lib.apply_attention(
+            p["attn"], cfg, h, ctx, mode="full", positions=positions, cache=None
+        )
+    elif kind == "rglru":
+        y, new_cache = rglru_lib.apply_rglru(p["mixer"], cfg, h, ctx, cache=cache)
+    elif kind == "ssd":
+        y, new_cache = ssd_lib.apply_ssd(p["mixer"], cfg, h, ctx, cache=cache)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    x = x + y
+
+    if "cross_attn" in p:
+        h = apply_norm(p["ln_cross"], x)
+        if enc_out is not None and cross_cache is not None:
+            # PREFILL with a cache: build the encoder K/V cache now; decode
+            # steps (enc_out=None) then reuse it read-only.
+            cross_cache = attn_lib.build_cross_cache(p["cross_attn"], cfg, enc_out, ctx)
+        y, cross_cache = attn_lib.apply_attention(
+            p["cross_attn"], cfg, h, ctx, mode="full",
+            positions=positions, kv_source=enc_out, cache=cross_cache,
+        )
+        x = x + y
+
+    if "moe" in p:
+        h = apply_norm(p["ln2"], x)
+        h_loc, did_split = _split_seq(h, ctx)
+        y, aux = moe_lib.apply_moe(p["moe"], cfg, h_loc, ctx)
+        if did_split:
+            y = ctx.all_gather_model(y, axis=1)
+        x = x + y
+    elif "mlp" in p:
+        h = apply_norm(p["ln2"], x)
+        x = x + apply_mlp(p["mlp"], cfg, h, ctx)
+
+    return x, (new_cache, cross_cache), aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked layers: scan over periods + unrolled remainder
+# ---------------------------------------------------------------------------
+
+
+def _stack_trees(trees: list[PyTree]) -> PyTree:
+    def stack(*leaves):
+        if isinstance(leaves[0], Param):
+            return Param(
+                value=jnp.stack([l.value for l in leaves]),
+                logical=(None,) + leaves[0].logical,
+            )
+        return jnp.stack(list(leaves))
+
+    return jax.tree.map(stack, *trees, is_leaf=lambda x: isinstance(x, Param))
+
+
+def layer_plan(cfg) -> tuple[tuple[str, ...], int, int]:
+    """(period pattern, n_full periods, n remainder layers)."""
+    period = cfg.attn_pattern
+    n = len(period)
+    return period, cfg.num_layers // n, cfg.num_layers % n
+
+
+def init_stack(key, cfg, *, cross: bool = False) -> dict:
+    period, n_full, rem = layer_plan(cfg)
+    params: dict = {"scan": [], "rem": []}
+    for pos, kind in enumerate(period):
+        layers = [
+            init_block(jax.random.fold_in(key, pos * 1000 + i), cfg, kind, cross=cross)
+            for i in range(n_full)
+        ]
+        params["scan"].append(_stack_trees(layers) if n_full else None)
+    for j in range(rem):
+        kind = period[j]
+        params["rem"].append(
+            init_block(jax.random.fold_in(key, 999_000 + j), cfg, kind, cross=cross)
+        )
+    return params
+
+
+def apply_stack(
+    params: dict,
+    cfg,
+    x: jax.Array,
+    ctx: ShardCtx,
+    *,
+    positions: jax.Array | None = None,
+    caches: dict | None = None,
+    enc_out: jax.Array | None = None,
+    decode: bool = False,
+    kinds: tuple[str, ...] | None = None,
+) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Run all layers. ``caches`` mirrors the params structure:
+    {"scan": [stacked cache per position], "rem": [cache per layer]}."""
+    period, n_full, rem = layer_plan(cfg)
+    if kinds is not None:
+        period = kinds  # e.g. ("encoder",) for the whisper encoder
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: dict | None = {"scan": [], "rem": []} if caches is not None else None
+
+    if n_full:
+        def scan_body(h, slices):
+            param_slices, cache_slices = slices
+            new_slices = []
+            aux_sum = jnp.zeros((), jnp.float32)
+            for pos, kind in enumerate(period):
+                c = cache_slices[pos] if cache_slices is not None else None
+                cc = c[1] if c is not None else None
+                c0 = c[0] if c is not None else None
+                h, nc, aux = apply_block(
+                    param_slices[pos], cfg, h, ctx, kind,
+                    positions=positions,
+                    cache=c0,
+                    cross_cache=cc,
+                    enc_out=enc_out,
+                    decode=decode,
+                )
+                aux_sum = aux_sum + aux
+                new_slices.append(nc)
+            return h, (tuple(new_slices), aux_sum)
+
+        body = scan_body
+        if cfg.remat and caches is None:
+            body = jax.checkpoint(scan_body, prevent_cse=False)
+
+        param_stacks = tuple(params["scan"][pos] for pos in range(len(period)))
+        cache_stacks = (
+            tuple(caches["scan"][pos] for pos in range(len(period)))
+            if caches is not None
+            else None
+        )
+        xs = (param_stacks, cache_stacks)
+        x, (cache_out, auxs) = jax.lax.scan(body, x, xs, unroll=cfg.unroll_scans)
+        aux_total = aux_total + jnp.sum(auxs)
+        if new_caches is not None:
+            new_caches["scan"] = list(cache_out)
+
+    for j in range(rem):
+        kind = period[j % len(period)]
+        c = caches["rem"][j] if caches is not None else None
+        cc = c[1] if c is not None else None
+        c0 = c[0] if c is not None else None
+        x, nc, aux = apply_block(
+            params["rem"][j], cfg, x, ctx, kind,
+            positions=positions, cache=c0, cross_cache=cc,
+            enc_out=enc_out, decode=decode,
+        )
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches["rem"].append(nc)
+
+    return x, new_caches, aux_total

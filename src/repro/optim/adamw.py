@@ -1,0 +1,97 @@
+"""Pure-JAX AdamW (the paper's inner optimizer) — no optax on this box.
+
+State and update follow Loshchilov & Hutter decoupled weight decay with bias
+correction, matching torch.optim.AdamW semantics used by the paper's
+reference implementation.  First/second moments are kept in float32 regardless
+of parameter dtype (bf16-safe), matching standard mixed-precision practice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # Paper §4: "gradient clipping for gradients larger than unity".
+    clip_norm: float | None = 1.0
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), jnp.float32)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    mu: PyTree       # first moment  (f32)
+    nu: PyTree       # second moment (f32)
+    count: jax.Array  # int32 step counter
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        mu=jax.tree.map(zeros32, params),
+        nu=jax.tree.map(zeros32, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: PyTree, state: AdamWState, params: PyTree, cfg: AdamWConfig
+) -> tuple[PyTree, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    count = state.count + 1
+    lr = cfg.lr_at(count)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def _moment(m, g):
+        return cfg.b1 * m + (1.0 - cfg.b1) * g.astype(jnp.float32)
+
+    def _second(v, g):
+        g32 = g.astype(jnp.float32)
+        return cfg.b2 * v + (1.0 - cfg.b2) * g32 * g32
+
+    mu = jax.tree.map(_moment, state.mu, grads)
+    nu = jax.tree.map(_second, state.nu, grads)
+
+    def _param(p, m, v):
+        update = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (update + cfg.weight_decay * p32)
+        return p32.astype(p.dtype)
+
+    new_params = jax.tree.map(_param, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count), gnorm

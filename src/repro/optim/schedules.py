@@ -1,0 +1,49 @@
+"""Learning-rate schedules (paper §4: 1000-step linear warm-up, then cosine
+decay to 10% of peak over the remaining steps)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup", "warmup_cosine", "Schedule"]
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant(value: float) -> Schedule:
+    return lambda step: jnp.full((), value, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        frac = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return peak * frac
+
+    return fn
+
+
+def warmup_cosine(
+    peak: float,
+    total_steps: int,
+    warmup_steps: int = 1000,
+    final_ratio: float = 0.1,
+) -> Schedule:
+    """Linear warm-up to ``peak`` over ``warmup_steps``; cosine decay to
+    ``final_ratio * peak`` at ``total_steps`` (paper: decay by one magnitude)."""
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        progress = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        floor = final_ratio * peak
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(math.pi * progress))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import ShardCtx
+
+__all__ = ["ShardCtx"]

@@ -1,0 +1,213 @@
+"""Parallelism plans: map LOGICAL sharding annotations to mesh PartitionSpecs.
+
+Two plans (DESIGN.md §3):
+
+  gossip_dp    — every (pod, data) coordinate is one NoLoCo replica with its
+                 own divergent weights; params carry a leading replica dim
+                 sharded over (pod, data); weight matrices TP-shard over
+                 `model`.  The inner step has NO cross-replica collectives.
+  fsdp_hybrid  — for archs too big to replicate 16× (internvl2-76b,
+                 qwen3-moe-235b): ZeRO-3 over `data` + TP over `model` within
+                 a replica; gossip replicas = pods only (the paper's
+                 geo-distributed deployment: the all-reduce being removed is
+                 the slow cross-DCN one).
+
+Logical axis vocabulary (see models/common.py):
+  params: "tp" | "tp_attn"(via size check) | "expert" -> model axis,
+          "fsdp" -> data axis (fsdp_hybrid only), None -> replicated
+  caches/activations: "dp" -> all replica+data axes, "seq_kv" -> model axis
+          (decode flash-decode), "tp" -> model axis
+Divisibility is checked per-dim: a dim that does not divide the axis size is
+replicated (e.g. whisper's 8 heads or 51865 vocab on a 16-way model axis) —
+the SAME rule ShardCtx applies, so specs and collectives always agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import Param
+from repro.parallel.sharding import ShardCtx
+
+PyTree = Any
+
+__all__ = ["Plan", "make_plan", "spec_for", "param_pspecs", "shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    name: str                       # gossip_dp | fsdp_hybrid
+    mesh_axes: tuple[str, ...]      # mesh axis names, e.g. ("pod","data","model")
+    replica_axes: tuple[str, ...]   # axes enumerating gossip replicas
+    model_axis: str = "model"
+    fsdp_axis: str | None = None    # ZeRO-3 axis (fsdp_hybrid: "data")
+    tp: int = 16
+    fsdp: int = 1
+    replicas: int = 1
+    kv_shard_seq: bool = False      # decode: shard KV cache sequence on model
+    seq_parallel: bool = False      # hillclimb option
+    replicate_experts: bool = False  # hillclimb option (small-expert MoE)
+
+    def ctx(self) -> ShardCtx:
+        return ShardCtx(
+            model_axis=self.model_axis,
+            data_axis=self.fsdp_axis,
+            tp=self.tp,
+            fsdp=self.fsdp,
+            seq_parallel=self.seq_parallel,
+            kv_shard_seq=self.kv_shard_seq,
+            replicate_experts=self.replicate_experts,
+        )
+
+    @property
+    def data_axes(self) -> tuple[str, ...]:
+        """All non-model axes: batch/token parallelism dims."""
+        return tuple(a for a in self.mesh_axes if a != self.model_axis)
+
+
+def make_plan(
+    plan_name: str,
+    mesh: Mesh,
+    *,
+    shape_kind: str = "train",
+    has_global_attention: bool = True,
+    seq_parallel: bool = False,
+    replicate_experts: bool = False,
+) -> Plan:
+    axes = tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    if plan_name == "gossip_dp":
+        replica_axes = tuple(a for a in axes if a in ("pod", "data"))
+        fsdp_axis, fsdp = None, 1
+    elif plan_name == "fsdp_hybrid":
+        replica_axes = tuple(a for a in axes if a == "pod")
+        fsdp_axis, fsdp = ("data", sizes.get("data", 1))
+    else:  # pragma: no cover
+        raise ValueError(plan_name)
+    if seq_parallel:
+        # Megatron-style sequence parallelism needs the residual stream kept
+        # seq-sharded between blocks; measured wire-equal to psum under the
+        # HLO result-bytes proxy (EXPERIMENTS.md §Perf P1-H2) and its real
+        # win (activation memory) is outside this roofline model — left
+        # unimplemented deliberately.
+        raise NotImplementedError(
+            "seq_parallel: refuted-by-methodology, see EXPERIMENTS.md §Perf P1-H2"
+        )
+    replicas = int(np.prod([sizes[a] for a in replica_axes])) if replica_axes else 1
+    kv_shard_seq = shape_kind == "decode" and has_global_attention and tp > 1
+    return Plan(
+        name=plan_name,
+        mesh_axes=axes,
+        replica_axes=replica_axes,
+        fsdp_axis=fsdp_axis,
+        tp=tp,
+        fsdp=fsdp,
+        replicas=replicas,
+        kv_shard_seq=kv_shard_seq,
+        seq_parallel=seq_parallel,
+        replicate_experts=replicate_experts,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logical -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(plan: Plan, mesh: Mesh, axis: str | tuple) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, tuple):
+        return int(np.prod([sizes[a] for a in axis]))
+    return sizes[axis]
+
+
+def spec_for(plan: Plan, mesh: Mesh, logical: tuple, shape: tuple[int, ...]) -> P:
+    """One leaf: logical dims + concrete GLOBAL shape -> PartitionSpec."""
+    entries = []
+    for name, size in zip(logical, shape):
+        axis: Any = None
+        if name == "expert" and plan.replicate_experts:
+            axis = None
+        elif name in ("tp", "expert"):
+            if size % plan.tp == 0 and plan.tp > 1:
+                axis = plan.model_axis
+        elif name == "fsdp":
+            if plan.fsdp_axis is not None and plan.fsdp > 1 and size % plan.fsdp == 0:
+                axis = plan.fsdp_axis
+        elif name == "replica":
+            if plan.replica_axes and size % plan.replicas == 0 and plan.replicas > 1:
+                axis = plan.replica_axes if len(plan.replica_axes) > 1 else plan.replica_axes[0]
+        elif name == "dp":
+            dp_axes = plan.data_axes
+            if dp_axes:
+                total = _axis_size(plan, mesh, tuple(dp_axes))
+                if size % total == 0:
+                    axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                else:
+                    # fall back to the replica axes only (e.g. batch 1: replicate)
+                    axis = None
+        elif name == "seq_kv":
+            if plan.kv_shard_seq and size % plan.tp == 0 and plan.tp > 1:
+                axis = plan.model_axis
+        elif name is None:
+            axis = None
+        else:  # pragma: no cover
+            raise ValueError(f"unknown logical axis {name!r}")
+        entries.append(axis)
+    return P(*entries)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def param_pspecs(plan: Plan, mesh: Mesh, tree: PyTree) -> PyTree:
+    """Param tree -> PartitionSpec tree (same structure, values dropped)."""
+    return jax.tree.map(
+        lambda p: spec_for(plan, mesh, p.logical, p.value.shape), tree, is_leaf=_is_param
+    )
+
+
+def shardings(mesh: Mesh, pspecs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention-param special case under kv_shard_seq
+# ---------------------------------------------------------------------------
+# ShardCtx.heads_tp forces attention replication when the model axis shards
+# the KV-cache sequence instead; the HEAD dims of attention params must then
+# be replicated too.  Head dims are identified by SIZE == num_heads; to avoid
+# fragile size-matching we instead rewrite specs for the attention subtrees
+# by path. Param trees keep attention params under keys "attn"/"cross_attn".
+
+
+def adjust_attn_specs_for_decode(plan: Plan, pspec_tree: PyTree, param_tree: PyTree) -> PyTree:
+    """Replace model-axis entries with None inside attn/cross_attn subtrees
+    when the plan shards KV sequence (kv_shard_seq)."""
+    if not plan.kv_shard_seq:
+        return pspec_tree
+
+    def walk(spec_node, path=()):
+        if isinstance(spec_node, dict):
+            return {
+                k: walk(v, path + (k,)) for k, v in spec_node.items()
+            }
+        if isinstance(spec_node, list):
+            return [walk(v, path) for v in spec_node]
+        if isinstance(spec_node, tuple) and not isinstance(spec_node, P):
+            return tuple(walk(v, path) for v in spec_node)
+        if isinstance(spec_node, P) and any(k in ("attn", "cross_attn") for k in path):
+            return P(*[None if e == plan.model_axis else e for e in spec_node])
+        return spec_node
+
+    return walk(pspec_tree)

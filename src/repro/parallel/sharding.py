@@ -1,0 +1,145 @@
+"""ShardCtx — the single abstraction that lets every model run unchanged
+
+  * on one device (tests, smoke runs):  ``ShardCtx.local()`` — all collectives
+    are identity, weights are full-size;
+  * inside ``shard_map`` over the production mesh: collectives are real
+    ``lax`` ops over named axes, weights are the local TP/FSDP shards.
+
+We deliberately use MANUAL SPMD (shard_map) rather than GSPMD auto-sharding:
+with 512 host devices and 94-layer MoE graphs, hand-written collectives keep
+compile times tractable and make the HLO collective schedule exactly what we
+wrote — which is what the roofline analysis reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ShardCtx"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Axis names and parallelism flags visible to model code.
+
+    ``model_axis``   — tensor/expert-parallel axis name (None => tp == 1).
+    ``data_axis``    — FSDP (ZeRO-3) axis name used *within* a replica; only
+                       set for ``fsdp_hybrid`` plans.  For ``gossip_dp`` plans
+                       the data axis indexes replicas and never appears inside
+                       the per-replica model code.
+    ``tp``           — model-axis size (static).
+    ``fsdp``         — data-axis size for ZeRO-3 weight sharding (static).
+    ``seq_parallel`` — all_gather/reduce_scatter activations on the sequence
+                       dim instead of psum (hillclimb option; see §Perf).
+    """
+
+    model_axis: str | None = None
+    data_axis: str | None = None
+    tp: int = 1
+    fsdp: int = 1
+    seq_parallel: bool = False
+    # decode-only: KV caches are sharded over the model axis on the SEQUENCE
+    # dim (flash-decode); q-head compute is then replicated per shard and the
+    # partial softmax is psum-combined (see models/attention.py).
+    kv_shard_seq: bool = False
+    # §Perf option: replicate (small) expert weights across the model axis and
+    # skip the all-to-all — pays off when expert weights are tiny relative to
+    # token traffic (granite: 32 experts × 1024×512×3 ≈ 100 MB replicated).
+    replicate_experts: bool = False
+
+    # -- constructors -------------------------------------------------------
+
+    @staticmethod
+    def local() -> "ShardCtx":
+        return ShardCtx()
+
+    # -- model-axis collectives ---------------------------------------------
+
+    def psum_model(self, x: jax.Array) -> jax.Array:
+        if self.model_axis is None:
+            return x
+        return jax.lax.psum(x, self.model_axis)
+
+    def pmax_model(self, x: jax.Array) -> jax.Array:
+        if self.model_axis is None:
+            return x
+        return jax.lax.pmax(x, self.model_axis)
+
+    def all_gather_model(self, x: jax.Array, axis: int = 0) -> jax.Array:
+        if self.model_axis is None:
+            return x
+        return jax.lax.all_gather(x, self.model_axis, axis=axis, tiled=True)
+
+    def reduce_scatter_model(self, x: jax.Array, axis: int = 0) -> jax.Array:
+        if self.model_axis is None:
+            return x
+        return jax.lax.psum_scatter(x, self.model_axis, scatter_dimension=axis, tiled=True)
+
+    def all_to_all_model(self, x: jax.Array, split_axis: int, concat_axis: int) -> jax.Array:
+        if self.model_axis is None:
+            return x
+        return jax.lax.all_to_all(
+            x, self.model_axis, split_axis=split_axis, concat_axis=concat_axis, tiled=True
+        )
+
+    def model_index(self) -> jax.Array:
+        if self.model_axis is None:
+            return jnp.zeros((), jnp.int32)
+        return jax.lax.axis_index(self.model_axis)
+
+    # -- data-axis (ZeRO-3) helpers ------------------------------------------
+
+    def gather_param(self, w: jax.Array, axis: int = 0) -> jax.Array:
+        """ZeRO-3: weights are stored sharded on ``axis`` along the data axis
+        and all-gathered just-in-time at use.  The transpose (grad) of this
+        gather is a reduce-scatter, which is exactly ZeRO's grad sharding."""
+        if self.data_axis is None or self.fsdp == 1:
+            return w
+        return jax.lax.all_gather(w, self.data_axis, axis=axis, tiled=True)
+
+    # -- sequence-parallel activation movement --------------------------------
+
+    def gather_seq(self, x: jax.Array, axis: int) -> jax.Array:
+        """seq-parallel -> full sequence (entering attention/moe)."""
+        if self.model_axis is None or not self.seq_parallel:
+            return x
+        return jax.lax.all_gather(x, self.model_axis, axis=axis, tiled=True)
+
+    def scatter_seq_sum(self, x: jax.Array, axis: int) -> jax.Array:
+        """partial-sum full sequence -> seq-parallel (leaving row-parallel
+        matmul): reduce-scatter instead of psum."""
+        if self.model_axis is None:
+            return x
+        if not self.seq_parallel:
+            return jax.lax.psum(x, self.model_axis)
+        return jax.lax.psum_scatter(x, self.model_axis, scatter_dimension=axis, tiled=True)
+
+    # -- sizing helpers -------------------------------------------------------
+
+    def heads_tp(self, num_heads: int) -> int:
+        """TP degree used for an attention block: shard heads over the model
+        axis when divisible, otherwise replicate attention (tiny models).
+        Forced to 1 under kv_shard_seq (the model axis then shards the KV
+        cache sequence instead of heads)."""
+        if self.model_axis is None or self.kv_shard_seq:
+            return 1
+        return self.tp if num_heads % self.tp == 0 else 1
+
+    def ff_tp(self, d_ff: int) -> int:
+        if self.model_axis is None:
+            return 1
+        return self.tp if d_ff % self.tp == 0 else 1
+
+    def vocab_tp(self, vocab: int) -> int:
+        if self.model_axis is None:
+            return 1
+        return self.tp if vocab % self.tp == 0 else 1
+
+    def experts_tp(self, num_experts: int) -> int:
+        if self.model_axis is None or self.replicate_experts:
+            return 1
+        return self.tp if num_experts % self.tp == 0 else 1

@@ -1,0 +1,333 @@
+"""Distributed step builders: train / prefill / decode / outer (gossip &
+all-reduce), all built from the same per-replica model code via shard_map.
+
+Pattern (see DESIGN.md): the per-replica LOSS runs inside ``shard_map`` with
+manual collectives (ShardCtx); ``jax.value_and_grad`` is taken OUTSIDE the
+shard_map, so JAX's shard_map transposition inserts the correct gradient
+collectives (replicated-over-model params automatically get their cotangents
+psum'd over the model axis — no hand-written f/g operators to get wrong).
+The AdamW update is a vmap over the leading replica dim under plain GSPMD
+(elementwise, partitions trivially).
+
+The NoLoCo outer step is a shard_map whose ONLY cross-replica communication
+is one ``lax.ppermute`` (collective-permute); the DiLoCo baseline outer step
+uses ``lax.pmean`` (all-reduce).  Roofline reads these straight from the HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import outer as outer_lib
+from repro.core.outer import OuterConfig, OuterState
+from repro.models import model as model_api
+from repro.models.common import unzip
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.parallel import plans as plans_lib
+from repro.parallel.plans import Plan
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter stacking (leading replica dim)
+# ---------------------------------------------------------------------------
+
+
+def stack_replicas(params: PyTree, replicas: int) -> PyTree:
+    """Add the leading replica dim to every Param leaf (logical "replica").
+
+    For simulation each replica starts from the SAME weights (the paper
+    initializes all instances identically: φ_{0,i} ≡ φ_0)."""
+    from repro.models.common import Param, param as mk
+
+    def stk(p: Param) -> Param:
+        v = jnp.broadcast_to(p.value[None], (replicas,) + p.value.shape)
+        return mk(v, "replica", *p.logical)
+
+    return jax.tree.map(stk, params, is_leaf=lambda x: isinstance(x, Param))
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(plan: Plan, batch: dict) -> dict:
+    """tokens/labels (B, S): batch dim over all data axes; embeds likewise.
+
+    A batch that does not divide the data axes (e.g. long_500k's batch of 1)
+    is REPLICATED — every replica decodes the same stream (ensemble decode,
+    noted in DESIGN.md)."""
+    dp = plan.data_axes
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    # product of data-axis sizes: replicas × fsdp covers (pod, data)
+    dp_total = plan.replicas * plan.fsdp
+    out = {}
+    for k, v in batch.items():
+        nd = v.ndim if hasattr(v, "ndim") else len(v.shape)
+        b = v.shape[0]
+        entry = dp_entry if (dp and b % max(dp_total, 1) == 0) else None
+        out[k] = P(entry, *([None] * (nd - 1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainStepBundle:
+    step_fn: Callable              # (theta, opt, batch) -> (theta, opt, metrics)
+    theta_shardings: PyTree
+    opt_shardings: PyTree
+    pspecs: PyTree                 # theta PartitionSpecs (for checkpoint/outer)
+
+
+def _squeeze_replica(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def _unsqueeze_replica(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: x[None], tree)
+
+
+def build_loss_shard(
+    cfg: ModelConfig, plan: Plan, mesh: Mesh, param_specs: PyTree, batch_specs: dict
+):
+    """shard_map'd per-replica loss: (stacked theta, batch) -> (R,) losses."""
+    ctx = plan.ctx()
+    rep = plan.replica_axes
+    rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
+
+    def body(theta_local, batch_local):
+        theta = _squeeze_replica(theta_local)  # drop leading local replica dim
+        loss, metrics = model_api.loss_fn(theta, cfg, batch_local, ctx)
+        # fsdp plan: tokens are sharded over `data` WITHIN the replica — the
+        # per-replica loss is the mean over data shards of the local means
+        # (equal token counts per shard).
+        if plan.fsdp_axis is not None and plan.fsdp > 1:
+            loss = jax.lax.pmean(loss, plan.fsdp_axis)
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, plan.fsdp_axis), metrics)
+        out = jnp.reshape(loss, (1,))
+        mets = jax.tree.map(lambda m: jnp.reshape(m, (1,)), metrics)
+        return out, mets
+
+    in_specs = (param_specs, batch_specs)
+    out_specs = (P(rep_entry), {"lm_loss": P(rep_entry), "aux_loss": P(rep_entry)})
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    plan: Plan,
+    mesh: Mesh,
+    params: PyTree,          # Param tree WITH leading replica dim (stack_replicas)
+    batch_example: dict,     # arrays or ShapeDtypeStructs
+    inner: AdamWConfig,
+    *,
+    data_sync: bool = False,  # DDP/FSDP baseline: all-reduce grads over replicas
+) -> TrainStepBundle:
+    pspecs = plans_lib.param_pspecs(plan, mesh, params)
+    bspecs = batch_pspecs(plan, batch_example)
+    loss_shard = build_loss_shard(cfg, plan, mesh, pspecs, bspecs)
+    replicas = plan.replicas
+
+    def total_loss(theta, batch):
+        losses, metrics = loss_shard(theta, batch)
+        return jnp.sum(losses) / replicas, (losses, metrics)
+
+    def step(theta, opt, batch):
+        (_, (losses, metrics)), grads = jax.value_and_grad(total_loss, has_aux=True)(
+            theta, batch
+        )
+        if data_sync and replicas > 1:
+            # traditional data-parallel baseline: gradient all-reduce across
+            # the replica axes EVERY step (what NoLoCo removes entirely)
+            grads = jax.tree.map(
+                lambda g: jnp.broadcast_to(
+                    jnp.mean(g, axis=0, keepdims=True), g.shape
+                ),
+                grads,
+            )
+        new_theta, new_opt, gnorm = jax.vmap(
+            lambda g, o, p: adamw_update(g, o, p, inner)
+        )(grads, opt, theta)
+        metrics = dict(metrics)
+        metrics["loss"] = losses
+        metrics["grad_norm"] = gnorm
+        return new_theta, new_opt, metrics
+
+    theta_sh = plans_lib.shardings(mesh, pspecs)
+    # AdamW moments mirror param specs (f32); count is per-replica (R,)
+    rep = plan.replica_axes
+    rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
+    opt_pspecs = AdamWState(
+        mu=pspecs, nu=jax.tree.map(lambda s: s, pspecs), count=P(rep_entry)
+    )
+    opt_sh = plans_lib.shardings(mesh, opt_pspecs)
+    bsh = plans_lib.shardings(mesh, bspecs)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(theta_sh, opt_sh, bsh),
+        donate_argnums=(0, 1),
+    )
+    return TrainStepBundle(
+        step_fn=jitted, theta_shardings=theta_sh, opt_shardings=opt_sh, pspecs=pspecs
+    )
+
+
+def init_opt_state(params_stacked_values: PyTree, replicas: int) -> AdamWState:
+    """Per-replica AdamW state over stacked params (vmapped init)."""
+    return jax.vmap(adamw_init)(params_stacked_values)
+
+
+# ---------------------------------------------------------------------------
+# Outer step (gossip / all-reduce)
+# ---------------------------------------------------------------------------
+
+
+def build_outer_step(
+    plan: Plan,
+    mesh: Mesh,
+    param_specs: PyTree,     # stacked-theta PartitionSpecs
+    outer_cfg: OuterConfig,
+    perm: list[tuple[int, int]] | None,
+    *,
+    fuse_payload: bool = False,
+):
+    """One outer step over (theta, phi, delta) -> (theta', phi', delta').
+
+    NoLoCo: ``perm`` is the static partner permutation over the LINEARIZED
+    replica axes (pod-major), realized as one collective-permute.  The
+    launcher precompiles a rotating set of random matchings (pairings are
+    data-independent, so a small cycling pool preserves the paper's random-
+    matching statistics without per-step recompilation)."""
+    rep = plan.replica_axes
+    rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
+
+    def body(theta_l, phi_l, delta_l, step_l):
+        theta = _squeeze_replica(theta_l)
+        phi = _squeeze_replica(phi_l)
+        delta = _squeeze_replica(delta_l)
+        state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
+        new_state, new_theta = outer_lib.outer_step_sharded(
+            state, theta, outer_cfg, axis_names=rep, perm=perm,
+            fuse_payload=fuse_payload,
+        )
+        return (
+            _unsqueeze_replica(new_theta),
+            _unsqueeze_replica(new_state.phi),
+            _unsqueeze_replica(new_state.delta),
+            new_state.step.reshape((1,)),
+        )
+
+    in_specs = (param_specs, param_specs, param_specs, P(rep_entry))
+    out_specs = (param_specs, param_specs, param_specs, P(rep_entry))
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    sh = plans_lib.shardings(mesh, param_specs)
+    step_sh = NamedSharding(mesh, P(rep_entry))
+    return jax.jit(
+        fn,
+        in_shardings=(sh, sh, sh, step_sh),
+        donate_argnums=(0, 1, 2),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def build_decode_step(
+    cfg: ModelConfig,
+    plan: Plan,
+    mesh: Mesh,
+    params: PyTree,      # stacked Param tree
+    caches: PyTree,      # Param-annotated cache tree (global shapes)
+    batch_specs: dict,
+):
+    pspecs = plans_lib.param_pspecs(plan, mesh, params)
+    pspecs = plans_lib.adjust_attn_specs_for_decode(plan, pspecs, params)
+    cspecs = plans_lib.param_pspecs(plan, mesh, caches)
+    ctx = plan.ctx()
+    rep = plan.replica_axes
+    dp = plan.data_axes
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def body(theta_l, caches_local, tokens, index):
+        theta = _squeeze_replica(theta_l)
+        logits, new_caches = model_api.decode_step(
+            theta, cfg, tokens, index.reshape(()), caches_local, ctx
+        )
+        return logits, new_caches
+
+    in_specs = (pspecs, cspecs, batch_specs["tokens"], P())
+    vocab_entry = (
+        plan.model_axis if cfg.vocab_size % plan.tp == 0 and plan.tp > 1 else None
+    )
+    out_specs = (P(dp_entry, None, vocab_entry), cspecs)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    logits_sh = NamedSharding(mesh, out_specs[0])
+    return jax.jit(
+        fn,
+        in_shardings=(
+            plans_lib.shardings(mesh, pspecs),
+            plans_lib.shardings(mesh, cspecs),
+            NamedSharding(mesh, batch_specs["tokens"]),
+            NamedSharding(mesh, P()),
+        ),
+        # cache outputs must carry the SAME shardings as the inputs so the
+        # serve loop can feed them straight back in (donated)
+        out_shardings=(logits_sh, plans_lib.shardings(mesh, cspecs)),
+        donate_argnums=(1,),
+    ), (pspecs, cspecs)
+
+
+def build_prefill_step(
+    cfg: ModelConfig,
+    plan: Plan,
+    mesh: Mesh,
+    params: PyTree,
+    caches: PyTree,
+    batch_example: dict,
+):
+    pspecs = plans_lib.param_pspecs(plan, mesh, params)
+    cspecs = plans_lib.param_pspecs(plan, mesh, caches)
+    bspecs = batch_pspecs(plan, batch_example)
+    ctx = plan.ctx()
+    dp = plan.data_axes
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def body(theta_l, caches_local, batch_local):
+        theta = _squeeze_replica(theta_l)
+        last_hidden, new_caches = model_api.prefill(theta, cfg, batch_local, caches_local, ctx)
+        return last_hidden, new_caches
+
+    in_specs = (pspecs, cspecs, bspecs)
+    out_specs = (P(dp_entry, None, None), cspecs)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    return jax.jit(
+        fn,
+        in_shardings=(
+            plans_lib.shardings(mesh, pspecs),
+            plans_lib.shardings(mesh, cspecs),
+            plans_lib.shardings(mesh, bspecs),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, out_specs[0]),
+            plans_lib.shardings(mesh, cspecs),
+        ),
+        donate_argnums=(1,),
+    ), (pspecs, cspecs)

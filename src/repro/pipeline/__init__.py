@@ -1,0 +1,3 @@
+from repro.pipeline.runner import PipelineTrainer, split_stages
+
+__all__ = ["PipelineTrainer", "split_stages"]

@@ -1,0 +1,6 @@
+# NOTE: do NOT set XLA_FLAGS here — smoke tests and benches must see ONE
+# device; only launch/dryrun.py forces 512 host devices (in its own process).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,109 @@
+"""Prefill+decode must reproduce the full-forward logits (cache correctness)
+for every cache type: global attention, sliding window, RG-LRU, SSD."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import model as M
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.common import values_of
+from repro.models.layers import apply_norm, logits_sharded
+from repro.parallel.sharding import ShardCtx
+
+CTX = ShardCtx.local()
+
+CFGS = {
+    "global": ModelConfig(num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+                          d_ff=128, vocab_size=128, qk_norm=True,
+                          dtype="float32", remat=False),
+    "local": ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=1,
+                         d_ff=128, vocab_size=128, attn_pattern=("local",),
+                         sliding_window=6, dtype="float32", remat=False),
+    "rglru": ModelConfig(arch_type="hybrid", num_layers=3, d_model=64, num_heads=4,
+                         num_kv_heads=1, d_ff=128, vocab_size=128,
+                         attn_pattern=("rglru", "rglru", "local"), sliding_window=6,
+                         lru_width=64, dtype="float32", remat=False),
+    "ssd": ModelConfig(arch_type="ssm", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=4, d_ff=0, vocab_size=128, attn_pattern=("ssd",),
+                       ssm_state_dim=16, ssm_head_dim=32, ssm_chunk=4,
+                       use_rope=False, dtype="float32", remat=False),
+}
+
+
+def _full_logits(vals, cfg, toks):
+    x, _ = M.embed_input(vals, cfg, {"tokens": toks}, CTX)
+    x, _, _ = tfm.apply_stack(vals["stack"], cfg, x, CTX,
+                              positions=jnp.arange(toks.shape[1]))
+    x = apply_norm(vals["final_norm"], x)
+    return logits_sharded(vals["embed"], cfg, x, CTX)
+
+
+@pytest.mark.parametrize("kind", list(CFGS))
+def test_decode_equals_full_forward(kind):
+    cfg = CFGS[kind]
+    vals = values_of(M.init_params(jax.random.PRNGKey(0), cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 12), 0, cfg.vocab_size)
+    full = _full_logits(vals, cfg, toks)
+
+    caches = values_of(M.init_cache_tree(cfg, 1, 16))
+    _, caches = M.prefill(vals, cfg, {"tokens": toks[:, :6]}, caches, CTX)
+    errs = []
+    for i in range(6, 12):
+        lg, caches = M.decode_step(vals, cfg, toks[:, i:i + 1], jnp.asarray(i), caches, CTX)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, i]))))
+    assert max(errs) < 2e-3, f"{kind}: {errs}"
+
+
+def test_local_ring_buffer_wraps_correctly():
+    """Decode far past the window: ring writes must keep exactly the last
+    `window` positions."""
+    cfg = CFGS["local"]
+    vals = values_of(M.init_params(jax.random.PRNGKey(0), cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 20), 0, cfg.vocab_size)
+    full = _full_logits(vals, cfg, toks)
+    caches = values_of(M.init_cache_tree(cfg, 1, 20))
+    _, caches = M.prefill(vals, cfg, {"tokens": toks[:, :4]}, caches, CTX)
+    for i in range(4, 20):
+        lg, caches = M.decode_step(vals, cfg, toks[:, i:i + 1], jnp.asarray(i), caches, CTX)
+    err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, 19])))
+    assert err < 2e-3, err
+
+
+def test_encdec_cross_cache_built_at_prefill():
+    """Whisper-style enc-dec: prefill must BUILD the cross-attention K/V from
+    the encoder output; decode logits must then match the full forward."""
+    import dataclasses
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        arch_type="encdec", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=128, is_encoder_decoder=True,
+        num_encoder_layers=2, encoder_seq=8, use_rope=False,
+        norm_type="layernorm", frontend="audio", frontend_dim=64,
+        frontend_tokens=8, dtype="float32", remat=False,
+    )
+    key = jax.random.PRNGKey(0)
+    vals = values_of(M.init_params(key, cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 0, 128)
+    enc = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 64))
+
+    # full forward logits
+    enc_out = M.encode(vals, cfg, enc, CTX)
+    x, _ = M.embed_input(vals, cfg, {"tokens": toks}, CTX)
+    x, _, _ = tfm.apply_stack(vals["stack"], cfg, x, CTX,
+                              positions=jnp.arange(10), enc_out=enc_out)
+    x = apply_norm(vals["final_norm"], x)
+    full = logits_sharded(vals["embed"], cfg, x, CTX)
+
+    caches = values_of(M.init_cache_tree(cfg, 1, 16))
+    _, caches = M.prefill(
+        vals, cfg, {"tokens": toks[:, :5], "encoder_embeds": enc}, caches, CTX
+    )
+    errs = []
+    for i in range(5, 10):
+        lg, caches = M.decode_step(vals, cfg, toks[:, i:i + 1], jnp.asarray(i), caches, CTX)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, i]))))
+    assert max(errs) < 2e-3, errs

@@ -1,0 +1,59 @@
+"""Integration: the full GossipTrainer on a real (tiny) LM — NoLoCo vs DiLoCo
+vs FSDP, plus paper-claim sanity checks at micro scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GossipTrainer, OuterConfig, TrainerConfig
+from repro.launch.train import run_training
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+
+TINY = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                   d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+
+@pytest.mark.parametrize("method", ["noloco", "diloco", "fsdp"])
+def test_methods_train_tiny_lm(method):
+    res = run_training(
+        TINY, method=method, replicas=4, per_replica_batch=2, seq_len=32,
+        steps=30, inner_lr=3e-3, inner_steps=10, eval_every=0,
+    )
+    assert res["losses"][-1] < res["losses"][0] * 0.85, res["losses"][:3] + res["losses"][-3:]
+
+
+def test_noloco_controls_weight_divergence():
+    """Without any sync replicas drift apart; NoLoCo's γ term plus pair
+    averaging keeps the std materially smaller (paper Fig. 3B premise)."""
+    kw = dict(replicas=4, per_replica_batch=2, seq_len=32, steps=40,
+              inner_lr=3e-3, inner_steps=10)
+    none = run_training(TINY, method="none", **kw)
+    noloco = run_training(TINY, method="noloco", **kw)
+    assert noloco["final_weight_std"] < 0.7 * none["final_weight_std"], (
+        noloco["final_weight_std"], none["final_weight_std"]
+    )
+
+
+def test_fsdp_keeps_replicas_identical():
+    res = run_training(TINY, method="fsdp", replicas=4, per_replica_batch=2,
+                       seq_len=32, steps=10, inner_lr=3e-3)
+    assert res["final_weight_std"] < 1e-6
+
+
+def test_outer_state_reset_semantics():
+    """After an outer step, fast weights are reset to new slow weights."""
+    def loss_fn(params, batch, rng):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    cfg = TrainerConfig(outer=OuterConfig(inner_steps=2),
+                        inner=AdamWConfig(lr=1e-2, weight_decay=0.0))
+    tr = GossipTrainer(cfg, loss_fn)
+    key = jax.random.PRNGKey(0)
+    st = tr.init({"w": jax.random.normal(key, (4, 8, 1))})
+    batch = (jax.random.normal(key, (4, 16, 8)), jnp.zeros((4, 16, 1)))
+    for _ in range(2):
+        st, _ = tr.inner_step(st, batch, key)
+    st = tr.outer_step(st)
+    np.testing.assert_allclose(np.asarray(st.theta["w"]), np.asarray(st.outer.phi["w"]))

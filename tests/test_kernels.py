@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(b, sq, sk, h, kv, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, sk, kv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, sk, kv, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _gold_attention(q, k, v, mode, window):
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    hm = (jnp.arange(h) * kvh) // h
+    ke, ve = jnp.take(k, hm, 2), jnp.take(v, hm, 2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = ke.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = ve.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    g = ref.reference_attention(qf, kf, vf, mode=mode, window=window)
+    return g.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 128, 128, 4, 4, 64),
+    (2, 256, 256, 4, 2, 64),   # GQA
+    (1, 256, 256, 2, 1, 128),  # MQA, d=128
+    (1, 200, 200, 2, 2, 64),   # non-block-multiple
+    (1, 128, 384, 2, 2, 64),   # cross lengths
+])
+@pytest.mark.parametrize("mode,window", [("causal", 0), ("local", 64), ("full", 0)])
+def test_flash_attention_sweep(shape, mode, window):
+    b, sq, sk, h, kv, d = shape
+    q, k, v = _qkv(b, sq, sk, h, kv, d, jnp.float32)
+    out = ops.flash_attention(q, k, v, mode=mode, window=window)
+    gold = _gold_attention(q, k, v, mode, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold), atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    q, k, v = _qkv(1, 128, 128, 4, 2, 64, dtype)
+    out = ops.flash_attention(q, k, v, mode="causal")
+    gold = _gold_attention(q, k, v, "causal", 0)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(gold, np.float32), atol=atol, rtol=1e-2
+    )
+
+
+@pytest.mark.parametrize("n", [100, 4096, 10_000, 50_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_noloco_update_sweep(n, dtype):
+    args = [
+        jax.random.normal(jax.random.fold_in(KEY, i), (n,), jnp.float32).astype(dtype)
+        for i in range(5)
+    ]
+    p1, d1 = ops.noloco_update_pytree(
+        {"w": args[0]}, {"w": args[1]}, {"w": args[2]}, {"w": args[3]}, {"w": args[4]},
+        alpha=0.5, beta=0.7, gamma=1.0,
+    )
+    p2, d2 = ref.reference_noloco_update(*args, alpha=0.5, beta=0.7, gamma=1.0)
+    atol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(p1["w"], np.float32), np.asarray(p2, np.float32), atol=atol)
+    np.testing.assert_allclose(np.asarray(d1["w"], np.float32), np.asarray(d2, np.float32), atol=atol)
+
+
+def test_noloco_kernel_matches_outer_module():
+    """Kernel must agree with the core outer optimizer (same Eq. 1-3)."""
+    from repro.core import outer as outer_lib
+
+    n = 1000
+    args = [jax.random.normal(jax.random.fold_in(KEY, 10 + i), (n,)) for i in range(5)]
+    theta, phi, dmom, theta_p, phi_p = args
+    p1, d1 = ops.noloco_update_pytree(
+        {"w": theta}, {"w": phi}, {"w": dmom}, {"w": theta_p}, {"w": phi_p},
+        alpha=0.5, beta=0.7, gamma=1.0,
+    )
+    mean_d = {"w": 0.5 * ((theta - phi) + (theta_p - phi_p))}
+    mean_phi = {"w": 0.5 * (phi + phi_p)}
+    p2, d2 = outer_lib.noloco_momentum_update(
+        {"w": phi}, {"w": dmom}, mean_d, mean_phi, alpha=0.5, beta=0.7, gamma=1.0
+    )
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d1["w"]), np.asarray(d2["w"]), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 64, 2, 16, 8, 32),
+    (2, 96, 2, 16, 8, 32),    # pad (96 = 3 chunks of 32)
+    (1, 130, 1, 8, 4, 64),    # non-multiple length
+])
+def test_ssd_chunk_kernel_sweep(shape):
+    b, s, h, p, n, chunk = shape
+    x = jax.random.normal(jax.random.fold_in(KEY, 20), (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 21), (b, s, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 22), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 23), (b, s, n)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(KEY, 24), (b, s, n)) * 0.5
+    y1, f1 = ops.ssd_chunk(x, dt, a, bm, cm, chunk=chunk)
+    y2, f2 = ref.reference_ssd(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=2e-4, rtol=1e-3)
+
+
+def test_models_ssd_matches_oracle_too():
+    """The jnp production path (models/ssd.ssd_chunked) is the kernel's
+    shape-twin; it must match the token-recurrence oracle as well."""
+    from repro.models.ssd import ssd_chunked
+
+    b, s, h, p, n = 2, 64, 2, 16, 8
+    x = jax.random.normal(jax.random.fold_in(KEY, 30), (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 31), (b, s, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 32), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 33), (b, s, n)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(KEY, 34), (b, s, n)) * 0.5
+    y1, f1 = ssd_chunked(x, dt, a, bm, cm, 16)
+    y2, f2 = ref.reference_ssd(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=1e-3)

@@ -1,0 +1,36 @@
+"""Section 5.3 latency model tests (Eq. 5-7, Fig. 5)."""
+import math
+
+import pytest
+
+from repro.core import latency
+
+
+def test_eq7_closed_form_matches_monte_carlo():
+    mu, sigma = 0.3, 0.8
+    mc = latency.simulate_pair_average(mu, sigma, rounds=20000, seed=0) / 2
+    cf = latency.expected_pairwise_max(mu, sigma)
+    assert mc == pytest.approx(cf, rel=0.05)
+
+
+def test_speedup_grows_log2_n():
+    s64 = latency.speedup_closed_form(64, 0.0, 0.5)
+    s256 = latency.speedup_closed_form(256, 0.0, 0.5)
+    assert s256 > s64
+    assert s256 == pytest.approx(math.log2(256), rel=1e-6)
+
+
+def test_tree_allreduce_simulation_close_to_closed_form():
+    n, mu, sigma = 64, 0.0, 0.5
+    sim = latency.simulate_tree_allreduce(n, mu, sigma, rounds=2000, seed=1)
+    cf = latency.tree_allreduce_time_closed_form(n, mu, sigma)
+    # closed form uses E[max of 2]; the sim takes the max over ALL pairs per
+    # level, so sim >= cf and within a small factor
+    assert cf * 0.9 < sim < cf * 3.0
+
+
+def test_blocking_overhead_favors_noloco_and_grows_with_world():
+    r64 = latency.simulate_blocking_overhead(64, outer_rounds=50, inner_steps=20)
+    r512 = latency.simulate_blocking_overhead(512, outer_rounds=50, inner_steps=20)
+    assert r64["ratio"] > 1.0          # DiLoCo pays the straggler barrier
+    assert r512["ratio"] > r64["ratio"]  # and it worsens with world size

@@ -1,0 +1,59 @@
+"""AdamW / clipping / schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig, adamw_init, adamw_update, clip_by_global_norm, global_norm,
+    warmup_cosine,
+)
+
+
+def test_adamw_first_step_is_lr_sized():
+    """With bias correction, |Δp| ≈ lr on step 1 (ignoring eps/decay)."""
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 0.5)}
+    st = adamw_init(p)
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0, clip_norm=None)
+    new_p, st, _ = adamw_update(g, st, p, cfg)
+    np.testing.assert_allclose(np.asarray(p["w"] - new_p["w"]), 1e-2, rtol=1e-3)
+
+
+def test_adamw_converges_quadratic():
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    st = adamw_init(p)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=1.0)
+    for _ in range(300):
+        g = {"w": p["w"]}
+        p, st, _ = adamw_update(g, st, p, cfg)
+    assert float(jnp.abs(p["w"]).max()) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert norm == pytest.approx(np.sqrt(300), rel=1e-5)
+    assert global_norm(clipped) == pytest.approx(1.0, rel=1e-5)
+    g2 = {"a": jnp.full((3,), 1e-3)}
+    clipped2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), 1e-3)  # untouched
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, total_steps=1000, warmup_steps=100, final_ratio=0.1)
+    assert float(sched(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(1.0, abs=0.02)
+    assert float(sched(jnp.asarray(1000))) == pytest.approx(0.1, abs=0.01)
+    # monotone decay after warmup
+    vals = [float(sched(jnp.asarray(s))) for s in range(100, 1001, 100)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_mixed_precision_moments_are_f32():
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw_init(p)
+    assert st.mu["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_p, st, _ = adamw_update(g, st, p, AdamWConfig(lr=1e-2))
+    assert new_p["w"].dtype == jnp.bfloat16

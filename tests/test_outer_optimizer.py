@@ -1,0 +1,143 @@
+"""NoLoCo/DiLoCo outer optimizer math (paper §3.2, Eq. 1-3, Eq. 74)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import outer as outer_lib
+from repro.core.outer import OuterConfig
+
+
+def _mk_state(world=4, dim=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    phi = {"w": jax.random.normal(key, (world, dim))}
+    theta = {"w": phi["w"] + 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (world, dim))}
+    return outer_lib.init_outer_state(phi), theta
+
+
+def test_gamma_band_eq74():
+    lo, hi = outer_lib.gamma_band(0.5, 2)
+    assert lo == pytest.approx(0.5)
+    assert hi == pytest.approx(np.sqrt(2.25))
+    g = outer_lib.default_gamma(0.5)
+    assert lo < g < hi
+
+
+def test_invalid_gamma_rejected():
+    with pytest.raises(ValueError):
+        OuterConfig(method="noloco", alpha=0.5, gamma=0.1).validate()
+    with pytest.raises(ValueError):
+        OuterConfig(method="noloco", alpha=0.5, gamma=5.0).validate()
+
+
+def test_beta_must_exceed_alpha():
+    with pytest.raises(ValueError):
+        OuterConfig(method="diloco", alpha=0.9, beta=0.5).validate()
+
+
+def test_diloco_reduces_to_group_of_all():
+    """With the group = ALL replicas, NoLoCo's Eq. 2 == DiLoCo (γ term
+    vanishes because φ_i == mean φ when... here: check diloco directly)."""
+    state, theta = _mk_state()
+    cfg = OuterConfig(method="diloco", alpha=0.3, beta=0.7)
+    new_state, new_theta = outer_lib.outer_step_stacked(state, theta, cfg)
+    # manual: delta = beta * mean(theta - phi); phi' = phi + delta
+    md = jnp.mean(theta["w"] - state.phi["w"], axis=0, keepdims=True)
+    expect = state.phi["w"] + 0.7 * md
+    np.testing.assert_allclose(new_state.phi["w"], expect, rtol=1e-5)
+    np.testing.assert_allclose(new_theta["w"], expect, rtol=1e-5)
+
+
+def test_noloco_pair_math():
+    state, theta = _mk_state(world=4)
+    partner = jnp.asarray([1, 0, 3, 2])
+    cfg = OuterConfig(method="noloco", alpha=0.5, beta=0.7)
+    g = cfg.resolved_gamma()
+    new_state, _ = outer_lib.outer_step_stacked(state, theta, cfg, partner=partner)
+    phi, th = state.phi["w"], theta["w"]
+    d = th - phi
+    i, j = 0, 1
+    mean_d = 0.5 * (d[i] + d[j])
+    mean_phi = 0.5 * (phi[i] + phi[j])
+    delta = 0.7 * mean_d - g * (phi[i] - mean_phi)
+    np.testing.assert_allclose(new_state.phi["w"][i], phi[i] + delta, rtol=1e-5)
+
+
+def test_identical_replicas_stay_identical():
+    """φ_{0,i} ≡ φ_0 and identical Δ ⇒ all replicas evolve identically
+    (Lemma 1 sanity)."""
+    key = jax.random.PRNGKey(0)
+    phi0 = jax.random.normal(key, (6, 5))
+    phi = {"w": jnp.broadcast_to(phi0[:1], (6, 5))}
+    theta = {"w": phi["w"] + 0.3}
+    state = outer_lib.init_outer_state(phi)
+    cfg = OuterConfig(method="noloco")
+    for t in range(3):
+        state, theta = outer_lib.outer_step_stacked(state, theta, cfg)
+        theta = {"w": theta["w"] + 0.1}  # same inner progress everywhere
+    w = np.asarray(state.phi["w"])
+    assert np.abs(w - w[0]).max() < 1e-5
+
+
+def test_none_method_tracks_theta():
+    state, theta = _mk_state()
+    cfg = OuterConfig(method="none")
+    new_state, new_theta = outer_lib.outer_step_stacked(state, theta, cfg)
+    np.testing.assert_allclose(new_state.phi["w"], theta["w"])
+
+
+def test_paper_sign_convention_diverges():
+    """The literal '−β' of Eq. 2 diverges on the quadratic model while the
+    appendix '+β' converges — this documents why we follow the appendix."""
+    from repro.core import theory
+
+    res = theory.simulate_quadratic(
+        theory.QuadraticModel(), world=4, outer_steps=40, inner_steps=5, omega=0.1
+    )
+    assert res["mean_norm"][-1] < res["mean_norm"][0]  # + sign converges
+
+
+def test_overlapped_outer_step_matches_baseline():
+    """§3.2 φ-prefetch overlap: same numbers as the baseline gossip step when
+    the prefetched φ equals the partner's current φ."""
+    import jax
+    from repro.core import pairing
+
+    state, theta = _mk_state(world=4, seed=2)
+    cfg = OuterConfig(method="noloco", alpha=0.5, beta=0.7)
+    partner = jnp.asarray(pairing.partner_table(0, 4))
+    base_state, _ = outer_lib.outer_step_stacked(state, theta, cfg, partner=partner)
+
+    # stacked emulation of the overlapped variant: phi_prefetched = phi[partner]
+    phi_p = {"w": jnp.take(state.phi["w"], partner, axis=0)}
+    delta = outer_lib.outer_gradient(theta, state.phi)
+    delta_p = {"w": jnp.take(delta["w"], partner, axis=0)}
+    mean_d = {"w": 0.5 * (delta["w"] + delta_p["w"])}
+    mean_phi = {"w": 0.5 * (state.phi["w"] + phi_p["w"])}
+    phi_next, _ = outer_lib.noloco_momentum_update(
+        state.phi, state.delta, mean_d, mean_phi,
+        alpha=0.5, beta=0.7, gamma=cfg.resolved_gamma(),
+    )
+    np.testing.assert_allclose(
+        np.asarray(base_state.phi["w"]), np.asarray(phi_next["w"]), rtol=1e-6
+    )
+
+
+def test_fused_payload_matches_per_leaf(monkeypatch):
+    """_fused_ppermute must be a pure re-layout: same values as per-leaf
+    permutes (validated without devices by substituting a fake permute)."""
+    import jax
+
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": [jnp.ones((4,), jnp.float32) * 2, jnp.zeros((2, 2), jnp.float32)],
+    }
+
+    def fake_ppermute(x, axis_names, perm):
+        return x + 100.0  # stand-in for "partner's values"
+
+    monkeypatch.setattr(outer_lib.jax.lax, "ppermute", fake_ppermute)
+    out = outer_lib._fused_ppermute(tree, ("data",), [(0, 1), (1, 0)])
+    ref = jax.tree.map(lambda x: x + 100.0, tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))

@@ -1,0 +1,82 @@
+"""Property tests for the gossip pairing machinery (paper §3.2)."""
+import numpy as np
+import pytest
+
+from repro.core import pairing
+
+
+@pytest.mark.parametrize("world", [2, 4, 8, 16, 17, 32, 33])
+@pytest.mark.parametrize("step", [0, 1, 7, 100])
+def test_partner_table_is_involution(world, step):
+    pt = pairing.partner_table(step, world)
+    # partner of my partner is me
+    assert (pt[pt] == np.arange(world)).all()
+    # even world: nobody is alone; odd world: exactly one self-pair
+    fixed = int((pt == np.arange(world)).sum())
+    assert fixed == (world % 2)
+
+
+@pytest.mark.parametrize("world", [4, 8, 16])
+def test_pairings_differ_across_steps(world):
+    tables = {tuple(pairing.partner_table(s, world)) for s in range(20)}
+    # world=4 has only 3 perfect matchings; larger worlds should show many
+    expect = {4: 3, 8: 8, 16: 12}[world]
+    assert len(tables) >= expect
+
+
+def test_group_assignment_sizes():
+    groups = pairing.group_assignment(3, 12, n=3)
+    _, counts = np.unique(groups, return_counts=True)
+    assert (counts == 3).all()
+
+
+def test_ppermute_pairs_cover_all_sources():
+    perm = pairing.ppermute_pairs(5, 8)
+    srcs = sorted(p[0] for p in perm)
+    dsts = sorted(p[1] for p in perm)
+    assert srcs == list(range(8)) and dsts == list(range(8))
+
+
+def test_epidemic_mixing():
+    """Information reaches every pair in O(log N)-ish rounds (epidemic
+    property the paper inherits from gossip averaging)."""
+    seen = pairing.all_pairs_seen(steps=30, world=16)
+    # direct-meeting coverage after k rounds ~ 1-(1-1/(n-1))^k ~ 0.87; the
+    # transitive (epidemic) spread is much faster, but we check direct pairs
+    assert seen.mean() > 0.8
+
+
+def test_determinism_across_processes():
+    a = pairing.partner_table(11, 10, seed=3)
+    b = pairing.partner_table(11, 10, seed=3)
+    assert (a == b).all()
+    c = pairing.partner_table(11, 10, seed=4)
+    assert not (a == c).all()
+
+
+@pytest.mark.parametrize("world", [2, 4, 8, 16, 32])
+def test_hypercube_schedule(world):
+    """XOR schedule: involution, no self-pairs, only log2(world) distinct
+    matchings, and every pair exchanges info within log2(world) rounds."""
+    import math
+
+    dims = int(math.log2(world))
+    tables = set()
+    for s in range(4 * dims):
+        pt = pairing.hypercube_partner_table(s, world)
+        assert (pt[pt] == np.arange(world)).all()
+        assert (pt != np.arange(world)).all()
+        tables.add(tuple(pt))
+    assert len(tables) == dims  # exactly log2(world) compiled programs needed
+    # dissemination: one epoch (dims consecutive steps) touches every dim
+    touched = set()
+    for s in range(dims):
+        pt = pairing.hypercube_partner_table(s, world)
+        touched.add(int(pt[0]) ^ 0)
+    assert len(touched) == dims
+
+
+def test_hypercube_rejects_non_power_of_two():
+    import pytest as _pt
+    with _pt.raises(ValueError):
+        pairing.hypercube_partner_table(0, 12)

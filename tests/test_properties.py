@@ -1,0 +1,89 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import latency, pairing
+from repro.core.outer import gamma_band
+from repro.core.theory import variance_bounded
+from repro.data import pack_documents
+from repro.kernels import ops, ref
+
+
+@given(world=st.integers(2, 64), step=st.integers(0, 1000), seed=st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_pairing_always_involution(world, step, seed):
+    pt = pairing.partner_table(step, world, seed=seed)
+    assert (pt[pt] == np.arange(world)).all()
+    assert int((pt == np.arange(world)).sum()) == world % 2
+
+
+@given(alpha=st.floats(0.0, 0.99), n=st.integers(2, 16))
+@settings(max_examples=50, deadline=None)
+def test_gamma_band_always_stabilizes_variance(alpha, n):
+    """Any γ strictly inside the Eq. 74 band gives |d_V| < 1."""
+    lo, hi = gamma_band(alpha, n)
+    for frac in (0.01, 0.5, 0.99):
+        g = lo + frac * (hi - lo)
+        if lo < g < hi:
+            assert variance_bounded(alpha, g, n)
+    # and ε outside the band fails
+    assert not variance_bounded(alpha, lo * 0.99, n)
+
+
+@given(
+    doc_lens=st.lists(st.integers(1, 60), min_size=2, max_size=8),
+    seq_len=st.integers(4, 32),
+)
+@settings(max_examples=30, deadline=None)
+def test_packing_preserves_stream(doc_lens, seq_len):
+    docs = [np.arange(1, n + 1) for n in doc_lens]
+    total = sum(doc_lens) + len(docs)
+    if total < seq_len + 1:
+        return
+    tokens, labels, mask = pack_documents(docs, seq_len, eos_id=0)
+    # labels are tokens shifted by one within each row
+    stream = []
+    for d in docs:
+        stream.extend(d.tolist())
+        stream.append(0)
+    n = tokens.shape[0]
+    row = seq_len + 1
+    arr = np.asarray(stream[: n * row]).reshape(n, row)
+    np.testing.assert_array_equal(tokens, arr[:, :-1])
+    np.testing.assert_array_equal(labels, arr[:, 1:])
+
+
+@given(
+    sq=st.integers(8, 96),
+    h=st.sampled_from([1, 2, 4]),
+    kv=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 32]),
+)
+@settings(max_examples=15, deadline=None)
+def test_flash_attention_property_sweep(sq, h, kv, d):
+    if h % kv:
+        return
+    key = jax.random.PRNGKey(sq * 131 + h)
+    q = jax.random.normal(key, (1, sq, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, sq, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, sq, kv, d))
+    out = ops.flash_attention(q, k, v, mode="causal", block_q=32, block_kv=32)
+    hm = (jnp.arange(h) * kv) // h
+    qf = q.transpose(0, 2, 1, 3).reshape(h, sq, d)
+    kf = jnp.take(k, hm, 2).transpose(0, 2, 1, 3).reshape(h, sq, d)
+    vf = jnp.take(v, hm, 2).transpose(0, 2, 1, 3).reshape(h, sq, d)
+    gold = ref.reference_attention(qf, kf, vf, mode="causal")
+    gold = gold.reshape(1, h, sq, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold), atol=5e-5, rtol=1e-3)
+
+
+@given(mu=st.floats(-1.0, 1.0), sigma=st.floats(0.05, 1.5), n=st.sampled_from([4, 16, 64, 256]))
+@settings(max_examples=30, deadline=None)
+def test_gossip_always_beats_tree_allreduce_in_expectation(mu, sigma, n):
+    """The paper's headline latency claim holds for ALL lognormal params:
+    ratio ≈ log2(n) ≥ 2 for n ≥ 4."""
+    s = latency.speedup_closed_form(n, mu, sigma)
+    assert s >= np.log2(n) - 1e-9

@@ -1,0 +1,71 @@
+"""Roofline machinery unit tests: HLO collective parsing + model FLOPs."""
+import pytest
+
+from repro.configs import registry
+from repro.launch import roofline as rf
+
+HLO_SAMPLE = """
+HloModule test
+fused_computation {
+  %p = bf16[16,512,128]{2,1,0} parameter(0)
+}
+ENTRY main {
+  %x = bf16[16,512,128]{2,1,0} parameter(0)
+  %ag = bf16[16,8192,128]{2,1,0} all-gather(bf16[16,512,128]{2,1,0} %x), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={1}
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %y), replica_groups={{0,1},{2,3},{4,5},{6,7}}, to_apply=%add
+  %arx = f32[64]{0} all-reduce(f32[64]{0} %z), replica_groups={{0,2,4,6},{1,3,5,7}}, to_apply=%add
+  %cp = bf16[1024]{0} collective-permute(bf16[1024]{0} %w), source_target_pairs={{0,1},{1,0}}
+  %rs = f32[256]{0} reduce-scatter(f32[1024]{0} %v), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = (bf16[32]{0}, bf16[32]{0}) all-to-all(bf16[32]{0} %q, bf16[32]{0} %r), replica_groups={{0,1}}
+}
+"""
+
+
+def test_collective_parse_counts_and_bytes():
+    # model axis size 2 => groups {0,1} are INTRA (same block), {0,2,...} CROSS
+    stats = rf.collective_bytes(HLO_SAMPLE, model_size=2)
+    assert stats.counts["all-gather"] == 1
+    assert stats.counts["all-reduce"] == 2
+    assert stats.counts["collective-permute"] == 1
+    assert stats.counts["reduce-scatter"] == 1
+    assert stats.counts["all-to-all"] == 1
+    # all-gather result: 16*8192*128*2 bytes
+    assert stats.bytes_by_kind["all-gather"] == 16 * 8192 * 128 * 2
+    # permutes always count as cross-replica traffic
+    assert stats.cross_replica_bytes >= 1024 * 2
+    # the {0,1} AR is intra (within one model block), the strided one cross
+    assert stats.model_axis_bytes >= 128 * 4
+
+
+def test_cross_replica_classification():
+    assert rf._groups_cross_replica("replica_groups={{0,1}}", 2) is False
+    assert rf._groups_cross_replica("replica_groups={{0,2}}", 2) is True
+    assert rf._groups_cross_replica("replica_groups={{0,1,2,3}}", 4) is False
+    assert rf._groups_cross_replica("replica_groups={{0,4},{1,5}}", 4) is True
+
+
+def test_model_flops_sane_for_all_archs():
+    """6·N·D with N = ACTIVE params: MoE active << total; dense equal."""
+    for name in registry.ASSIGNED:
+        cfg = registry.get_config(name)
+        act = rf.active_params(cfg)
+        tot = rf.total_params(cfg)
+        assert act > 0 and tot >= act * 0.99
+        if cfg.arch_type == "moe":
+            assert tot > 2 * act, name  # 32e top-8 / 128e top-8
+    # spot check magnitudes (±40% of the nominal sizes)
+    assert 0.4e9 < rf.active_params(registry.get_config("qwen3-0.6b")) < 1.2e9
+    assert 5e9 < rf.active_params(registry.get_config("minitron-8b")) < 12e9
+    q = registry.get_config("qwen3-moe-235b-a22b")
+    assert 1.4e11 < rf.total_params(q) < 3.5e11
+    assert rf.active_params(q) < 0.35e11
+
+
+def test_roofline_terms_and_bottleneck():
+    r = rf.analyze(1e12, 1e11, None, chips=256, model_flops=2e14,
+                   cross_bytes=1e9, intra_bytes=2e9)
+    assert r.compute_s == pytest.approx(1e12 / rf.PEAK_FLOPS)
+    assert r.memory_s == pytest.approx(1e11 / rf.HBM_BW)
+    assert r.collective_s == pytest.approx(3e9 / rf.ICI_BW)
+    assert r.bottleneck == "memory"
+    assert r.useful_ratio == pytest.approx(2e14 / (1e12 * 256))

@@ -1,0 +1,48 @@
+"""Theorem 1 (Appendix A) empirical validation on the quadratic model."""
+import numpy as np
+import pytest
+
+from repro.core import theory
+from repro.core.outer import OuterConfig
+
+
+def test_expected_phi_spectrum_matches_eq53():
+    d = theory.expected_phi_spectrum(0.5, 0.7, 0.1, 10, [1.0])
+    expect = 1 + 0.5 - (1 - 0.9 ** 10) * 0.7
+    assert d[0] == pytest.approx(expect)
+
+
+def test_convergence_condition_beta_gt_alpha():
+    assert theory.expected_phi_converges(0.5, 0.7, 0.1, 20, [1.0, 0.3])
+    assert not theory.expected_phi_converges(0.5, 0.7, 0.0, 20, [1.0])  # no inner progress
+
+
+def test_variance_coefficient_band():
+    # inside Eq. 74 band -> |d_V| < 1; outside -> >= 1
+    assert theory.variance_bounded(0.5, 1.0)
+    assert not theory.variance_bounded(0.5, 0.3)
+
+
+def test_theorem1_expected_value_converges():
+    res = theory.simulate_quadratic(
+        theory.QuadraticModel(), world=8, outer_steps=150, inner_steps=5, omega=0.1
+    )
+    assert res["mean_norm"][-1] < 0.05 * res["mean_norm"][0]
+
+
+def test_theorem1_variance_scales_with_omega_squared():
+    """V(φ) ∝ ω² (Thm. 1): halving ω should roughly quarter the stationary
+    variance (Monte-Carlo: accept 2.5-6x)."""
+    kw = dict(world=8, outer_steps=150, inner_steps=5, seed=1)
+    v1 = theory.simulate_quadratic(theory.QuadraticModel(), omega=0.1, **kw)["var"][-75:].mean()
+    v2 = theory.simulate_quadratic(theory.QuadraticModel(), omega=0.05, **kw)["var"][-75:].mean()
+    ratio = v1 / v2
+    assert 2.0 < ratio < 8.0, ratio
+
+
+def test_diloco_also_converges_on_quadratic():
+    res = theory.simulate_quadratic(
+        theory.QuadraticModel(), world=8, outer_steps=150, inner_steps=5, omega=0.1,
+        cfg=OuterConfig(method="diloco", alpha=0.3, beta=0.7),
+    )
+    assert res["mean_norm"][-1] < 0.05 * res["mean_norm"][0]
