@@ -1,9 +1,12 @@
 """Fig. 5 reproduction: (A) tree-allreduce vs gossip pair-averaging expected
 time ratio across world sizes and latency variances; (B) DiLoCo global-
-blocking overhead vs NoLoCo pairwise blocking."""
+blocking overhead vs NoLoCo pairwise blocking; (C) size-aware outer-round
+times on paper_llama shapes, with the payload bytes taken from
+repro.comm.bytes_model for each wire codec × overlap setting."""
 import math
 import time
 
+from repro.comm import CommConfig, bytes_model
 from repro.core import latency
 from benchmarks.common import emit
 
@@ -32,6 +35,35 @@ def main() -> None:
             )
             us = (time.perf_counter() - t0) * 1e6
             emit(f"fig5b_n{n}_m{inner}", us, f"diloco_over_noloco={r['ratio']:.3f}")
+
+    # --- Fig 5C: codec-aware payload bytes & outer-round time ----------------
+    # Exact per-outer-step byte counts from the comm layer (fp32 Δ/φ master
+    # copies on paper_llama shapes), fed into the size-aware latency model.
+    sigma = math.sqrt(0.5)
+    params = bytes_model.abstract_params("paper-small-125m")
+    base = bytes_model.outer_step_cost(params, CommConfig())
+    for codec in ("none", "fp16", "int8"):
+        for overlap in (False, True):
+            t0 = time.perf_counter()
+            cost = bytes_model.outer_step_cost(
+                params, CommConfig(codec=codec, overlap=overlap)
+            )
+            t_pair = latency.pair_average_time_bytes(
+                0.0, sigma, payload_bytes=cost.blocking_bytes
+            )
+            us = (time.perf_counter() - t0) * 1e6
+            tag = f"fig5c_{codec}" + ("_overlap" if overlap else "")
+            emit(
+                tag, us,
+                f"blocking_MB={cost.blocking_bytes / 1e6:.1f};"
+                f"messages={cost.blocking_messages};"
+                f"bytes_reduction_vs_none={base.payload_bytes / cost.payload_bytes:.2f};"
+                f"pair_round_s={t_pair:.2f}",
+            )
+    # message-count cost of NOT fusing (one permute per leaf)
+    unfused = bytes_model.outer_step_cost(params, CommConfig(fuse=False))
+    emit("fig5c_unfused_messages", 0.0,
+         f"messages={unfused.messages};fused_messages={base.messages}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from repro.comm import CommConfig, bytes_model, get_codec
 from repro.kernels import ref
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
@@ -48,6 +49,23 @@ def main() -> None:
     fn3 = jax.jit(lambda *args: ref.reference_ssd(*args)[0])
     us3 = _time(fn3, x, dt, a, bm, cm)
     emit("kernel_ssd_s512", us3, "oracle_recurrence")
+
+    # comm codecs: encode+decode round trip of a 16M-element fp32 gossip
+    # buffer (the compute cost of compressing the outer payload), plus the
+    # wire-byte reduction the codec buys (from the exact bytes model).
+    n = 1 << 24
+    buf = jax.random.normal(jax.random.fold_in(key, 10), (n,), jnp.float32)
+    for name in ("fp16", "int8"):
+        cfg = CommConfig(codec=name)
+        codec = get_codec(cfg)
+        rt = jax.jit(lambda b: codec.decode(codec.encode(b), jnp.float32, n))
+        us4 = _time(rt, buf)
+        wire = codec.wire_bytes(n, jnp.float32)
+        raw = n * 4
+        tpu_us4 = (raw + wire) / HBM_BW * 1e6  # read raw + write wire
+        emit(f"kernel_comm_codec_{name}_16M", us4,
+             f"wire_bytes={wire:.3g};reduction={raw / wire:.2f}x;"
+             f"tpu_roofline_us={tpu_us4:.1f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the fast suite, one command (see ROADMAP.md).
+# Slow multi-device subprocess tests can be skipped with:
+#   scripts/tier1.sh -m "not multidevice"
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,130 @@
+"""Exact bytes-on-the-wire / message counts for one outer step.
+
+The outer exchange IS NoLoCo's product: these numbers feed the Fig. 5 latency
+model (:mod:`repro.core.latency`) and the roofline so the estimates reflect
+the configured codec / fusing / overlap instead of assuming raw fp32 leaves.
+
+Everything here is static arithmetic over a :class:`~repro.comm.payload.
+PayloadSpec`; ``param_tree`` may be a tree of ``jax.ShapeDtypeStruct``
+(``abstract_params`` builds one via ``jax.eval_shape``), so costing a
+6.8B-parameter exchange allocates nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.comm import payload as payload_lib
+from repro.comm.compress import CommConfig, get_codec
+
+PyTree = Any
+
+__all__ = ["CommCost", "spec_cost", "outer_step_cost", "abstract_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommCost:
+    """Per-replica, per-outer-step communication cost (one direction).
+
+    ``payload_bytes``/``messages`` count everything a replica sends for one
+    outer round (including any overlapped φ′ pre-send); ``blocking_bytes``/
+    ``blocking_messages`` count only the part the outer step must WAIT for —
+    with ``overlap=True`` the φ half moved during the inner phase, so only Δ
+    blocks.  ``raw_bytes`` is the uncompressed fused baseline, making
+    ``compression_ratio = raw_bytes / payload_bytes``.
+    """
+
+    method: str
+    codec: str
+    fuse: bool
+    overlap: bool
+    payload_bytes: int
+    messages: int
+    blocking_bytes: int
+    blocking_messages: int
+    raw_bytes: int
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.raw_bytes / max(self.payload_bytes, 1)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["compression_ratio"] = self.compression_ratio
+        return d
+
+
+def spec_cost(spec: payload_lib.PayloadSpec, cfg: CommConfig) -> tuple[int, int]:
+    """(wire_bytes, messages) to send one packed payload under ``cfg``.
+
+    Every codec emits exactly one wire array per buffer (int8 bitcasts its
+    fp32 scales into the byte stream), so messages == number of buffers.
+    """
+    codec = get_codec(cfg)
+    nbytes = sum(codec.wire_bytes(b.size, b.dtype) for b in spec.buffers)
+    return nbytes, len(spec.buffers)
+
+
+def outer_step_cost(
+    param_tree: PyTree, cfg: CommConfig, *, method: str = "noloco", world: int = 2
+) -> CommCost:
+    """Cost of one outer step for a replica holding ``param_tree`` shards.
+
+    NoLoCo exchanges the fused (Δ, φ) payload with ONE partner; with
+    ``overlap`` only Δ blocks (φ′ pre-sent along the next pairing).  DiLoCo
+    ring-all-reduces Δ over all ``world`` replicas: each replica sends
+    ``2·(world−1)/world`` of the payload in ``2·(world−1)`` messages per
+    buffer.  ``method="none"`` costs nothing.
+    """
+    cfg.validate()
+    if method == "none":
+        return CommCost(method, cfg.codec, cfg.fuse, cfg.overlap, 0, 0, 0, 0, 0)
+
+    delta_spec = payload_lib.make_spec(param_tree, fuse=cfg.fuse)
+    delta_bytes, delta_msgs = spec_cost(delta_spec, cfg)
+
+    if method == "diloco":
+        # The DiLoCo baseline all-reduce is UNCOMPRESSED: no implementation
+        # applies a codec to pmean, and affine-quantized payloads cannot be
+        # summed hop-to-hop in a ring anyway — so cost it at raw bytes
+        # regardless of cfg.codec (fusing still determines the message count).
+        steps = 2 * (world - 1)
+        raw = int(round(delta_spec.nbytes * steps / world))
+        msgs = steps * len(delta_spec.buffers)
+        return CommCost(method, "none", cfg.fuse, cfg.overlap, raw, msgs, raw, msgs, raw)
+
+    if method != "noloco":
+        raise ValueError(f"unknown outer method: {method}")
+
+    pair_spec = payload_lib.make_spec((param_tree, param_tree), fuse=cfg.fuse)
+    pair_bytes, pair_msgs = spec_cost(pair_spec, cfg)
+    if cfg.overlap:
+        # total traffic unchanged (Δ now + φ′ pre-send), but only Δ blocks
+        return CommCost(
+            method, cfg.codec, cfg.fuse, cfg.overlap,
+            pair_bytes, delta_msgs + delta_msgs, delta_bytes, delta_msgs,
+            pair_spec.nbytes,
+        )
+    return CommCost(
+        method, cfg.codec, cfg.fuse, cfg.overlap,
+        pair_bytes, pair_msgs, pair_bytes, pair_msgs, pair_spec.nbytes,
+    )
+
+
+def abstract_params(arch: str = "paper-small-125m", *, dtype: str = "float32") -> PyTree:
+    """ShapeDtypeStruct parameter tree for ``arch`` (no allocation).
+
+    ``dtype`` defaults to float32 — the precision the outer Δ/φ master copies
+    are exchanged in (the momentum math runs in fp32).
+    """
+    import jax  # local: keep bytes_model importable without pulling jax at module load
+
+    from repro.configs import registry
+    from repro.models import model as model_api
+    from repro.models.common import values_of
+
+    cfg = dataclasses.replace(registry.get_config(arch), dtype=dtype)
+    return jax.eval_shape(
+        lambda: values_of(model_api.init_params(jax.random.PRNGKey(0), cfg))
+    )

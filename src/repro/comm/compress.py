@@ -1,0 +1,198 @@
+"""Wire codecs for packed gossip payloads + the CommConfig that selects them.
+
+Each codec maps a packed 1-D buffer (:mod:`repro.comm.payload`) to exactly ONE
+wire array, so the message count of the exchange never grows with compression:
+
+  * ``none``  — identity (wire dtype == buffer dtype).
+  * ``fp16`` / ``bf16`` — cast floating buffers to half precision (Hivemind's
+    Float16Compression; 2× on fp32 payloads, free on bf16).
+  * ``int8``  — per-chunk affine quantization: each chunk of ``chunk`` values
+    is mapped to uint8 with an fp32 (scale, min) pair; the fp32 metadata is
+    bitcast to bytes and concatenated onto the quantized payload, keeping the
+    whole thing one uint8 wire array (~3.97× on fp32 at chunk=1024).
+
+Codecs are stateless value transforms — safe inside jit/vmap/shard_map.  The
+optional error-feedback hook (:meth:`Codec.encode_with_residual`) accumulates
+the quantization residual locally so it can be re-added next round (LoCo-style
+low-bit adaptors); it is designed-in but not enabled by any trainer path yet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CommConfig",
+    "Codec",
+    "NoneCodec",
+    "CastCodec",
+    "Int8Codec",
+    "get_codec",
+    "CODECS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """How the outer-step payload travels: codec × fusing × overlap.
+
+    ``codec``:   "none" | "fp16" | "bf16" | "int8" — wire compression.
+    ``fuse``:    pack the pytree into one buffer per dtype (message count 1–2)
+                 instead of one message per leaf.
+    ``overlap``: pre-send φ′ for the NEXT pairing during the inner phase
+                 (paper §3.2) so only Δ blocks the outer step.
+    ``chunk``:   int8 quantization group size (fp32 scale+min per chunk).
+    ``error_feedback``: reserved for LoCo-style residual accumulation; only
+                 meaningful for lossy codecs.
+    """
+
+    codec: str = "none"
+    fuse: bool = True
+    overlap: bool = False
+    chunk: int = 1024
+    error_feedback: bool = False
+
+    def validate(self) -> None:
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; options: {sorted(CODECS)}")
+        if self.codec == "int8" and self.chunk < 2:
+            raise ValueError("int8 chunk size must be >= 2")
+        if self.error_feedback and self.codec in ("none",):
+            raise ValueError("error feedback only applies to lossy codecs")
+
+
+def _is_float(dtype) -> bool:
+    return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+
+
+class Codec:
+    """encode(buffer) -> one wire array; decode(wire, dtype, size) -> buffer."""
+
+    name = "abstract"
+
+    def encode(self, buf: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def decode(self, wire: jax.Array, dtype, size: int) -> jax.Array:
+        raise NotImplementedError
+
+    def wire_bytes(self, size: int, dtype) -> int:
+        """Exact bytes on the wire for a buffer of ``size`` elements."""
+        raise NotImplementedError
+
+    def encode_with_residual(
+        self, buf: jax.Array, residual: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        """Error-feedback encode: fold the accumulated residual into the
+        buffer before quantizing and return the new residual (what this
+        round's wire failed to carry)."""
+        corrected = buf + residual.astype(buf.dtype)
+        wire = self.encode(corrected)
+        decoded = self.decode(wire, corrected.dtype, corrected.shape[0])
+        return wire, (corrected - decoded).astype(residual.dtype)
+
+
+class NoneCodec(Codec):
+    name = "none"
+
+    def encode(self, buf):
+        return buf
+
+    def decode(self, wire, dtype, size):
+        return wire
+
+    def wire_bytes(self, size, dtype):
+        return size * jnp.dtype(dtype).itemsize
+
+
+class CastCodec(Codec):
+    """Cast floating buffers to a 2-byte dtype; pass everything else through."""
+
+    def __init__(self, target: str):
+        self.name = {"float16": "fp16", "bfloat16": "bf16"}[target]
+        self._target = jnp.dtype(target)
+
+    def _applies(self, dtype) -> bool:
+        return _is_float(dtype) and jnp.dtype(dtype).itemsize > self._target.itemsize
+
+    def encode(self, buf):
+        return buf.astype(self._target) if self._applies(buf.dtype) else buf
+
+    def decode(self, wire, dtype, size):
+        return wire.astype(dtype)
+
+    def wire_bytes(self, size, dtype):
+        it = jnp.dtype(dtype).itemsize
+        return size * (self._target.itemsize if self._applies(dtype) else it)
+
+
+class Int8Codec(Codec):
+    """Per-chunk affine uint8 quantization with fp32 (scale, min) metadata.
+
+    The metadata is bitcast to uint8 and appended to the quantized values so
+    the wire stays a single contiguous byte array (one message per buffer).
+    """
+
+    name = "int8"
+    _META_BYTES_PER_CHUNK = 8  # fp32 scale + fp32 min
+
+    def __init__(self, chunk: int = 1024):
+        self.chunk = int(chunk)
+
+    def _nchunks(self, size: int) -> int:
+        return -(-size // self.chunk)
+
+    def encode(self, buf):
+        if not _is_float(buf.dtype):
+            return buf
+        n = buf.shape[0]
+        nc = self._nchunks(n)
+        # edge-pad (repeat the last value) so padding never widens the tail
+        # chunk's [min, max] range and thus never degrades its scale
+        x = jnp.pad(buf.astype(jnp.float32), (0, nc * self.chunk - n), mode="edge")
+        x = x.reshape(nc, self.chunk)
+        lo = x.min(axis=1, keepdims=True)
+        scale = (x.max(axis=1, keepdims=True) - lo) / 255.0
+        safe = jnp.where(scale > 0.0, scale, 1.0)
+        q = jnp.clip(jnp.round((x - lo) / safe), 0.0, 255.0).astype(jnp.uint8)
+        meta = jnp.concatenate([safe[:, 0], lo[:, 0]])              # (2·nc,) fp32
+        meta_bytes = jax.lax.bitcast_convert_type(meta, jnp.uint8)  # (2·nc, 4)
+        return jnp.concatenate([q.reshape(-1), meta_bytes.reshape(-1)])
+
+    def decode(self, wire, dtype, size):
+        if not _is_float(dtype):
+            return wire
+        nc = self._nchunks(size)
+        q = wire[: nc * self.chunk].reshape(nc, self.chunk).astype(jnp.float32)
+        meta = jax.lax.bitcast_convert_type(
+            wire[nc * self.chunk :].reshape(2 * nc, 4), jnp.float32
+        )
+        scale, lo = meta[:nc, None], meta[nc:, None]
+        x = q * scale + lo
+        return x.reshape(-1)[:size].astype(dtype)
+
+    def wire_bytes(self, size, dtype):
+        if not _is_float(dtype):
+            return size * jnp.dtype(dtype).itemsize
+        nc = self._nchunks(size)
+        return nc * self.chunk + nc * self._META_BYTES_PER_CHUNK
+
+
+CODECS = ("none", "fp16", "bf16", "int8")
+
+
+def get_codec(cfg: CommConfig | str) -> Codec:
+    """Codec instance for a :class:`CommConfig` (or bare codec name)."""
+    if isinstance(cfg, str):
+        cfg = CommConfig(codec=cfg)
+    cfg.validate()
+    if cfg.codec == "none":
+        return NoneCodec()
+    if cfg.codec == "fp16":
+        return CastCodec("float16")
+    if cfg.codec == "bf16":
+        return CastCodec("bfloat16")
+    return Int8Codec(chunk=cfg.chunk)

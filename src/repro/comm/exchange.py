@@ -1,0 +1,166 @@
+"""Communicator backends for the outer step + the §3.2 φ-prefetch overlap.
+
+A :class:`Communicator` hides WHERE partner values come from; the outer-step
+math in :mod:`repro.core.outer` is written once against this interface:
+
+  * :class:`StackedGather`  — replicas on a leading pytree axis (simulation /
+    vmap / GSPMD-with-replica-dim); partner values come from a gather with the
+    deterministic :mod:`repro.core.pairing` tables.  Lossy codecs are applied
+    as an encode→decode round trip on the gathered values, so simulation sees
+    exactly the values a compressed wire would deliver.
+  * :class:`ShardedPermute` — inside ``shard_map``; the packed, encoded payload
+    moves with ``jax.lax.ppermute`` (collective-permute — NO all-reduce).
+  * :class:`AllReduce`      — ``jax.lax.pmean`` for the DiLoCo baseline.
+
+``exchange_gossip`` expresses the paper's §3.2 overlap once: when the
+partner's φ was pre-sent during the previous inner phase (it does not change
+during inner steps), only Δ blocks the outer step — half the blocking payload.
+``presend`` issues the φ′ transfer along the NEXT pairing; on hardware it
+overlaps the next m inner steps.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import payload as payload_lib
+from repro.comm.compress import CommConfig, get_codec
+
+PyTree = Any
+
+__all__ = [
+    "Communicator",
+    "StackedGather",
+    "ShardedPermute",
+    "AllReduce",
+    "wire_roundtrip",
+    "exchange_gossip",
+    "presend",
+]
+
+
+def wire_roundtrip(tree: PyTree, cfg: CommConfig) -> PyTree:
+    """pack → encode → decode → unpack: the values the partner would receive.
+
+    Identity for ``codec="none"``; for lossy codecs this is the simulation-mode
+    stand-in for a compressed wire (no collectives involved).
+    """
+    codec = get_codec(cfg)
+    buffers, spec = payload_lib.pack(tree, fuse=cfg.fuse)
+    out = [
+        codec.decode(codec.encode(buf), jnp.dtype(bs.dtype), bs.size)
+        for buf, bs in zip(buffers, spec.buffers)
+    ]
+    return payload_lib.unpack(out, spec)
+
+
+class Communicator:
+    """Pairwise gossip exchange and group mean over the replica dimension."""
+
+    cfg: CommConfig
+
+    def exchange(self, tree: PyTree) -> PyTree:
+        """Return the PARTNER's copy of ``tree`` (this replica's view)."""
+        raise NotImplementedError
+
+    def allreduce_mean(self, tree: PyTree) -> PyTree:
+        """Group mean of ``tree`` over all replicas (DiLoCo baseline)."""
+        raise NotImplementedError
+
+
+class StackedGather(Communicator):
+    """Replicas stacked on axis 0 of every leaf; partner via index gather."""
+
+    def __init__(self, partner: jax.Array | None, cfg: CommConfig | None = None):
+        self.partner = None if partner is None else jnp.asarray(partner)
+        self.cfg = cfg or CommConfig()
+        self.cfg.validate()
+
+    def exchange(self, tree: PyTree) -> PyTree:
+        if self.partner is None:
+            raise ValueError("StackedGather.exchange needs a partner table")
+        gathered = jax.tree.map(lambda x: jnp.take(x, self.partner, axis=0), tree)
+        if self.cfg.codec == "none":
+            return gathered
+        # Apply the wire codec per replica (vmap over the stacked axis), so the
+        # stacked simulation matches the distributed wire bit-for-bit.
+        return jax.vmap(lambda sub: wire_roundtrip(sub, self.cfg))(gathered)
+
+    def allreduce_mean(self, tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape), tree
+        )
+
+
+class ShardedPermute(Communicator):
+    """Inside shard_map: one ppermute per packed buffer moves the payload."""
+
+    def __init__(
+        self,
+        axis_names: Sequence[str],
+        perm: Sequence[tuple[int, int]],
+        cfg: CommConfig | None = None,
+    ):
+        if perm is None:
+            raise ValueError("ShardedPermute requires an explicit ppermute perm")
+        self.axis_names = tuple(axis_names)
+        self.perm = [tuple(p) for p in perm]
+        self.cfg = cfg or CommConfig()
+        self.cfg.validate()
+
+    def _permute(self, x: jax.Array) -> jax.Array:
+        return jax.lax.ppermute(x, self.axis_names, perm=list(self.perm))
+
+    def exchange(self, tree: PyTree) -> PyTree:
+        codec = get_codec(self.cfg)
+        buffers, spec = payload_lib.pack(tree, fuse=self.cfg.fuse)
+        out = []
+        for buf, bs in zip(buffers, spec.buffers):
+            moved = self._permute(codec.encode(buf))
+            out.append(codec.decode(moved, jnp.dtype(bs.dtype), bs.size))
+        return payload_lib.unpack(out, spec)
+
+    def allreduce_mean(self, tree: PyTree) -> PyTree:
+        # Provided for completeness; DiLoCo uses the AllReduce communicator.
+        return jax.tree.map(lambda x: jax.lax.pmean(x, self.axis_names), tree)
+
+
+class AllReduce(Communicator):
+    """lax.pmean over the replica axes — the DiLoCo all-reduce baseline."""
+
+    def __init__(self, axis_names: Sequence[str], cfg: CommConfig | None = None):
+        self.axis_names = tuple(axis_names)
+        self.cfg = cfg or CommConfig()
+
+    def exchange(self, tree: PyTree) -> PyTree:
+        raise NotImplementedError("AllReduce has no pairwise exchange; use pmean")
+
+    def allreduce_mean(self, tree: PyTree) -> PyTree:
+        return jax.tree.map(lambda x: jax.lax.pmean(x, self.axis_names), tree)
+
+
+def exchange_gossip(
+    comm: Communicator,
+    delta: PyTree,
+    phi: PyTree,
+    *,
+    phi_prefetched: PyTree | None = None,
+) -> tuple[PyTree, PyTree]:
+    """Blocking part of the gossip exchange: partner's (Δ, φ).
+
+    With ``phi_prefetched`` (§3.2 overlap) the partner's φ already arrived
+    during the previous inner phase, so only Δ is exchanged here; otherwise
+    Δ and φ travel together as one fused payload.
+    """
+    if phi_prefetched is not None:
+        return comm.exchange(delta), phi_prefetched
+    return comm.exchange((delta, phi))
+
+
+def presend(comm_next: Communicator, phi_next: PyTree) -> PyTree:
+    """Issue the φ′ transfer along the NEXT pairing (overlappable with the
+    next m inner steps — nothing downstream of this round consumes it)."""
+    return comm_next.exchange(phi_next)

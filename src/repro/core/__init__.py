@@ -8,7 +8,9 @@ from repro.core.outer import (
     gamma_band,
     init_outer_state,
     outer_gradient,
+    outer_step,
     outer_step_sharded,
+    outer_step_sharded_overlapped,
     outer_step_stacked,
 )
 from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
@@ -21,7 +23,9 @@ __all__ = [
     "gamma_band",
     "init_outer_state",
     "outer_gradient",
+    "outer_step",
     "outer_step_sharded",
+    "outer_step_sharded_overlapped",
     "outer_step_stacked",
     "GossipTrainer",
     "TrainState",

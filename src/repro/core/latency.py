@@ -13,6 +13,13 @@ binary tree (each level waits for the max of its children), which is what
 Fig. 5A plots; ``simulate_blocking_overhead`` reproduces Fig. 5B: total time of
 R outer rounds when DiLoCo must wait for the slowest of n workers each round
 while NoLoCo only waits pairwise.
+
+Size-aware variants: the closed forms above model LATENCY only (the paper's
+per-message t_c).  ``pair_average_time_bytes`` / ``tree_allreduce_time_bytes``
+add a bandwidth term ``payload_bytes / bandwidth`` per message, with the byte
+counts supplied by :mod:`repro.comm.bytes_model` so the estimate reflects the
+configured codec / fusing / overlap (fp16 halves the serialization term, int8
+quarters it, overlap removes the φ half from the blocking path).
 """
 
 from __future__ import annotations
@@ -27,10 +34,18 @@ __all__ = [
     "tree_allreduce_time_closed_form",
     "pair_average_time_closed_form",
     "speedup_closed_form",
+    "transfer_time",
+    "pair_average_time_bytes",
+    "tree_allreduce_time_bytes",
     "simulate_tree_allreduce",
     "simulate_pair_average",
     "simulate_blocking_overhead",
+    "WAN_BANDWIDTH",
 ]
+
+# Default slow-link bandwidth for the internet-scale setting the paper targets:
+# 1 Gbit/s in bytes per second.
+WAN_BANDWIDTH = 1.25e8
 
 
 def expected_message_time(mu: float, sigma: float) -> float:
@@ -58,6 +73,45 @@ def speedup_closed_form(n: int, mu: float, sigma: float) -> float:
     """Expected tree-allreduce time / pair-average time ≈ log2(n)."""
     return tree_allreduce_time_closed_form(n, mu, sigma) / pair_average_time_closed_form(
         mu, sigma
+    )
+
+
+def transfer_time(payload_bytes: float, bandwidth: float = WAN_BANDWIDTH) -> float:
+    """Serialization time of one message: bytes / (bytes per second)."""
+    return float(payload_bytes) / float(bandwidth)
+
+
+def pair_average_time_bytes(
+    mu: float,
+    sigma: float,
+    *,
+    payload_bytes: float,
+    bandwidth: float = WAN_BANDWIDTH,
+) -> float:
+    """NoLoCo gossip round with a size-aware message model: the Eq. 7 latency
+    term plus the serialization of the BLOCKING payload each way.
+
+    ``payload_bytes`` should be ``CommCost.blocking_bytes`` from
+    :func:`repro.comm.bytes_model.outer_step_cost` — with overlap enabled only
+    the Δ half serializes on the blocking path."""
+    return pair_average_time_closed_form(mu, sigma) + 2.0 * transfer_time(
+        payload_bytes, bandwidth
+    )
+
+
+def tree_allreduce_time_bytes(
+    n: int,
+    mu: float,
+    sigma: float,
+    *,
+    payload_bytes: float,
+    bandwidth: float = WAN_BANDWIDTH,
+) -> float:
+    """Binary-tree all-reduce with a size-aware message model: each of the
+    2·log2(n) levels pays the level latency plus one payload serialization."""
+    levels = 2.0 * math.log2(max(n, 2))
+    return tree_allreduce_time_closed_form(n, mu, sigma) + levels * transfer_time(
+        payload_bytes, bandwidth
     )
 
 

@@ -17,8 +17,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommConfig
 from repro.core import outer as outer_lib
-from repro.core import pairing
 from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
 
 PyTree = Any
@@ -32,6 +32,10 @@ __all__ = ["TrainerConfig", "TrainState", "GossipTrainer"]
 class TrainerConfig:
     outer: outer_lib.OuterConfig = dataclasses.field(default_factory=outer_lib.OuterConfig)
     inner: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    # Wire codec / payload fusing for the gossip exchange (repro.comm); the
+    # stacked trainer applies lossy codecs to the partner's values exactly as
+    # the distributed wire would, so compression ablations run in simulation.
+    comm: CommConfig = dataclasses.field(default_factory=CommConfig)
     # FSDP/DDP baseline: all-reduce (mean) gradients across replicas EVERY
     # inner step — the fully-synchronous comparison point in the paper.
     sync_grads: bool = False
@@ -98,15 +102,14 @@ class GossipTrainer:
         self, state: TrainState, partner: jax.Array | None = None
     ) -> TrainState:
         """Gossip/all-reduce sync of slow weights; fast weights reset to the
-        new slow weights (look-ahead semantics)."""
-        if partner is None and self.cfg.outer.method == "noloco":
-            partner = jnp.asarray(
-                pairing.partner_table(
-                    int(state.outer.step), state.world, seed=self.cfg.outer.seed
-                )
-            )
+        new slow weights (look-ahead semantics).
+
+        When ``partner`` is None the pairing is derived HOST-side from the
+        outer step counter inside :func:`outer_step_stacked`; jitted callers
+        must pass a precomputed table (a clear error is raised otherwise)."""
         new_outer, new_theta = outer_lib.outer_step_stacked(
-            state.outer, state.theta, self.cfg.outer, partner=partner
+            state.outer, state.theta, self.cfg.outer, partner=partner,
+            comm_cfg=self.cfg.comm,
         )
         return TrainState(
             theta=new_theta, opt=state.opt, outer=new_outer, inner_step=state.inner_step

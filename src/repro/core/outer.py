@@ -1,17 +1,29 @@
 """Outer optimizers: NoLoCo (gossip, modified Nesterov), DiLoCo (all-reduce
 Nesterov) and plain FSDP-style no-op.
 
-All math is expressed once over ``(mean_delta, mean_phi)`` *group statistics*
-and reused by three communication backends:
+Architecture: the update math is expressed ONCE over ``(mean_delta, mean_phi)``
+group statistics and composed with a :class:`repro.comm.Communicator` that
+hides where partner values come from:
 
-  * ``stacked``  — replicas live on a leading pytree axis (simulation / vmap /
-                   GSPMD-with-replica-dim).  Partner values come from a gather
-                   with the deterministic :mod:`repro.core.pairing` tables.
-  * ``sharded``  — inside ``shard_map``; partner values come from a single
-                   ``jax.lax.ppermute`` (collective-permute — the point of the
-                   paper: NO all-reduce anywhere in the outer step).
-  * DiLoCo uses ``jax.lax.pmean`` (all-reduce) in sharded mode / a full mean in
-    stacked mode, as the communication-heavy baseline.
+  * :class:`repro.comm.StackedGather`  — replicas on a leading pytree axis
+    (simulation / vmap / GSPMD-with-replica-dim); partner values come from a
+    gather with the deterministic :mod:`repro.core.pairing` tables.  Used by
+    :func:`outer_step_stacked`.
+  * :class:`repro.comm.ShardedPermute` — inside ``shard_map``; the packed
+    (optionally fused + compressed, see :class:`repro.comm.CommConfig`)
+    payload moves with ONE ``jax.lax.ppermute`` per buffer (collective-permute
+    — the point of the paper: NO all-reduce anywhere in the outer step).  Used
+    by :func:`outer_step_sharded`.
+  * :class:`repro.comm.AllReduce`      — ``jax.lax.pmean`` for DiLoCo, the
+    communication-heavy baseline (a full mean in stacked mode).
+
+The §3.2 φ-prefetch overlap is a property of the EXCHANGE, not a separate
+algorithm: :func:`repro.comm.exchange_gossip` sends only Δ on the blocking
+path when the partner's φ was pre-sent during the previous inner phase, and
+:func:`repro.comm.presend` issues the φ′ transfer along the next pairing.
+:func:`outer_step_sharded_overlapped` is a thin wrapper wiring those two calls
+to the shared update — every NoLoCo caller can opt in via
+``CommConfig(overlap=True)``; there is no duplicated ppermute/mean logic here.
 
 Equations (paper §3.2)::
 
@@ -33,6 +45,8 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommConfig
+from repro.comm import exchange as exchange_lib
 from repro.core import pairing
 
 PyTree = Any
@@ -46,8 +60,10 @@ __all__ = [
     "outer_gradient",
     "noloco_momentum_update",
     "diloco_momentum_update",
+    "outer_step",
     "outer_step_stacked",
     "outer_step_sharded",
+    "outer_step_sharded_overlapped",
 ]
 
 
@@ -141,6 +157,13 @@ def outer_gradient(theta: PyTree, phi: PyTree) -> PyTree:
     return jax.tree.map(lambda t, p: (t - p.astype(t.dtype)).astype(p.dtype), theta, phi)
 
 
+def _unzip_pairs(template: PyTree, pairs: PyTree) -> tuple[PyTree, PyTree]:
+    """Split a template-shaped tree of (a, b) tuples into two trees."""
+    return jax.tree.transpose(
+        jax.tree.structure(template), jax.tree.structure((0, 0)), pairs
+    )
+
+
 def noloco_momentum_update(
     phi: PyTree,
     delta_mom: PyTree,
@@ -171,10 +194,7 @@ def noloco_momentum_update(
         new_p = p.astype(jnp.float32) + new_d
         return new_p.astype(p.dtype), new_d.astype(d.dtype)
 
-    out = jax.tree.map(_upd, phi, delta_mom, mean_delta, mean_phi)
-    phi_next = jax.tree.map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
-    delta_next = jax.tree.map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
-    return phi_next, delta_next
+    return _unzip_pairs(phi, jax.tree.map(_upd, phi, delta_mom, mean_delta, mean_phi))
 
 
 def diloco_momentum_update(
@@ -193,64 +213,48 @@ def diloco_momentum_update(
         new_p = p.astype(jnp.float32) + new_d
         return new_p.astype(p.dtype), new_d.astype(d.dtype)
 
-    out = jax.tree.map(_upd, phi, delta_mom, mean_delta)
-    phi_next = jax.tree.map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
-    delta_next = jax.tree.map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
-    return phi_next, delta_next
+    return _unzip_pairs(phi, jax.tree.map(_upd, phi, delta_mom, mean_delta))
 
 
 # ---------------------------------------------------------------------------
-# Stacked backend (leading replica axis)
+# The one outer step (all backends)
 # ---------------------------------------------------------------------------
 
 
-def _gather_replica_axis(tree: PyTree, index: jax.Array) -> PyTree:
-    """tree[index] along the leading replica axis for every leaf."""
-    return jax.tree.map(lambda x: jnp.take(x, index, axis=0), tree)
-
-
-def outer_step_stacked(
+def outer_step(
     state: OuterState,
     theta: PyTree,
     cfg: OuterConfig,
+    comm: exchange_lib.Communicator | None,
     *,
-    partner: jax.Array | None = None,
-) -> tuple[OuterState, PyTree]:
-    """One outer step where replicas are stacked on axis 0 of every leaf.
+    phi_prefetched: PyTree | None = None,
+    comm_next: exchange_lib.Communicator | None = None,
+) -> tuple[OuterState, PyTree, PyTree | None]:
+    """One outer step against any :class:`~repro.comm.Communicator`.
 
-    Returns (new_state, new_theta) — fast weights are reset to the new slow
-    weights (look-ahead semantics), ready for the next ``m`` inner steps.
-
-    ``partner``: optional precomputed partner index table (world,), e.g. from
-    :func:`repro.core.pairing.partner_table`. When None it is derived from the
-    (traced) outer step counter via a host-independent PRNG — but note that
-    under ``jit`` the step is traced, so callers that jit this function should
-    pass ``partner`` explicitly (the launcher does).
+    Returns ``(new_state, new_theta, phi_presend)`` — fast weights are reset to
+    the new slow weights (look-ahead semantics); ``phi_presend`` is the φ′
+    payload exchanged along ``comm_next`` for the NEXT pairing (None unless
+    ``comm_next`` is given).
     """
     cfg.validate()
-    world = jax.tree.leaves(theta)[0].shape[0]
     delta = outer_gradient(theta, state.phi)
 
     if cfg.method == "none":
         # Pure local / FSDP-style: slow weights track fast weights exactly.
         new_state = OuterState(phi=theta, delta=state.delta, step=state.step + 1)
-        return new_state, theta
+        return new_state, theta, None
 
     if cfg.method == "diloco":
-        mean_delta = jax.tree.map(
-            lambda d: jnp.broadcast_to(jnp.mean(d, axis=0, keepdims=True), d.shape), delta
-        )
+        mean_delta = comm.allreduce_mean(delta)
         phi_next, delta_next = diloco_momentum_update(
             state.phi, state.delta, mean_delta, alpha=cfg.alpha, beta=cfg.beta
         )
+        phi_presend = None
     else:  # noloco
-        if partner is None:
-            partner = jnp.asarray(
-                pairing.partner_table(int(state.step), world, seed=cfg.seed)
-            )
-        partner = jnp.asarray(partner)
-        delta_p = _gather_replica_axis(delta, partner)
-        phi_p = _gather_replica_axis(state.phi, partner)
+        delta_p, phi_p = exchange_lib.exchange_gossip(
+            comm, delta, state.phi, phi_prefetched=phi_prefetched
+        )
         mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta, delta_p)
         mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), state.phi, phi_p)
         phi_next, delta_next = noloco_momentum_update(
@@ -262,9 +266,121 @@ def outer_step_stacked(
             beta=cfg.beta,
             gamma=cfg.resolved_gamma(),
         )
+        phi_presend = (
+            exchange_lib.presend(comm_next, phi_next) if comm_next is not None else None
+        )
 
     new_state = OuterState(phi=phi_next, delta=delta_next, step=state.step + 1)
-    return new_state, phi_next
+    return new_state, phi_next, phi_presend
+
+
+def _host_partner_table(step, world: int, cfg: OuterConfig) -> jax.Array:
+    """Derive the pairing from the HOST-side outer step counter.
+
+    The pairing PRNG needs a concrete step index; inside jit/scan the counter
+    is a tracer, so callers must precompute the table (the launchers do).
+    """
+    try:
+        step_int = int(step)
+    except (jax.errors.ConcretizationTypeError, jax.errors.TracerIntegerConversionError) as e:
+        raise ValueError(
+            "outer_step_stacked: cannot derive the gossip pairing from a traced "
+            "step counter (this function was called inside jit/vmap/scan). "
+            "Compute the table host-side and pass it explicitly, e.g. "
+            "partner=pairing.partner_table(int(outer_step), world, seed=cfg.seed)."
+        ) from e
+    return jnp.asarray(pairing.partner_table(step_int, world, seed=cfg.seed))
+
+
+# ---------------------------------------------------------------------------
+# Stacked backend (leading replica axis)
+# ---------------------------------------------------------------------------
+
+
+def outer_step_stacked(
+    state: OuterState,
+    theta: PyTree,
+    cfg: OuterConfig,
+    *,
+    partner: jax.Array | None = None,
+    comm_cfg: CommConfig | None = None,
+) -> tuple[OuterState, PyTree]:
+    """One outer step where replicas are stacked on axis 0 of every leaf.
+
+    Returns (new_state, new_theta) — fast weights are reset to the new slow
+    weights (look-ahead semantics), ready for the next ``m`` inner steps.
+
+    ``partner``: optional precomputed partner index table (world,), e.g. from
+    :func:`repro.core.pairing.partner_table`. When None it is derived from the
+    host-side outer step counter; under ``jit`` the counter is traced, so
+    jitted callers MUST pass ``partner`` explicitly (a clear error is raised
+    otherwise — the launchers precompute it).
+
+    ``comm_cfg`` selects the wire codec/fusing; lossy codecs are applied to
+    the partner's gathered values exactly as the distributed wire would.
+    """
+    cfg.validate()
+    comm = None
+    if cfg.method == "noloco":
+        if partner is None:
+            world = jax.tree.leaves(theta)[0].shape[0]
+            partner = _host_partner_table(state.step, world, cfg)
+        comm = exchange_lib.StackedGather(jnp.asarray(partner), comm_cfg)
+    elif cfg.method == "diloco":
+        comm = exchange_lib.StackedGather(None, comm_cfg)
+    new_state, new_theta, _ = outer_step(state, theta, cfg, comm)
+    return new_state, new_theta
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend (inside shard_map; axis-name collectives)
+# ---------------------------------------------------------------------------
+
+
+def _fused_ppermute(tree: PyTree, axis_names, perm) -> PyTree:
+    """Back-compat shim: ppermute a whole pytree as one flat buffer per dtype.
+
+    Now a thin wrapper over :class:`repro.comm.ShardedPermute` with
+    ``fuse=True`` — see :mod:`repro.comm.payload` for the packing layout.
+    """
+    comm = exchange_lib.ShardedPermute(axis_names, perm, CommConfig(fuse=True))
+    return comm.exchange(tree)
+
+
+def outer_step_sharded(
+    state: OuterState,
+    theta: PyTree,
+    cfg: OuterConfig,
+    *,
+    axis_names: Sequence[str],
+    perm: Sequence[tuple[int, int]] | None = None,
+    fuse_payload: bool = False,
+    comm_cfg: CommConfig | None = None,
+) -> tuple[OuterState, PyTree]:
+    """One outer step inside ``shard_map``: each program instance holds ONE
+    replica's (φ, δ, θ) shards.
+
+    NoLoCo: a :class:`~repro.comm.ShardedPermute` moves the packed (Δ, φ)
+    payload to the partner — the ONLY cross-replica communication, and
+    explicitly not an all-reduce.  DiLoCo: :class:`~repro.comm.AllReduce`
+    (``lax.pmean``) over the replica axes.
+
+    ``fuse_payload`` is the legacy switch for ``comm_cfg.fuse``; pass a full
+    :class:`~repro.comm.CommConfig` to also select a wire codec.
+    """
+    cfg.validate()
+    axis_names = tuple(axis_names)
+    if comm_cfg is None:
+        comm_cfg = CommConfig(fuse=fuse_payload)
+    comm = None
+    if cfg.method == "noloco":
+        if perm is None:
+            raise ValueError("sharded NoLoCo requires an explicit ppermute perm")
+        comm = exchange_lib.ShardedPermute(axis_names, perm, comm_cfg)
+    elif cfg.method == "diloco":
+        comm = exchange_lib.AllReduce(axis_names)
+    new_state, new_theta, _ = outer_step(state, theta, cfg, comm)
+    return new_state, new_theta
 
 
 def outer_step_sharded_overlapped(
@@ -276,6 +392,7 @@ def outer_step_sharded_overlapped(
     axis_names: Sequence[str],
     perm: Sequence[tuple[int, int]],
     perm_next: Sequence[tuple[int, int]],
+    comm_cfg: CommConfig | None = None,
 ) -> tuple[OuterState, PyTree, PyTree]:
     """NoLoCo outer step with the φ-exchange OVERLAP of §3.2.
 
@@ -285,117 +402,18 @@ def outer_step_sharded_overlapped(
     baseline gossip step.  The φ′ pre-send for the NEXT pairing is issued in
     the same program; on hardware it overlaps the next m inner steps.
 
-    Returns (new_state, new_theta, phi_prefetched_for_next_step).
+    Returns (new_state, new_theta, phi_prefetched_for_next_step).  This is a
+    thin wrapper: both the exchange and the update live in :mod:`repro.comm` /
+    :func:`outer_step`.
     """
     cfg.validate()
     if cfg.method != "noloco":
         raise ValueError("overlap variant is NoLoCo-only")
     axis_names = tuple(axis_names)
-    delta = outer_gradient(theta, state.phi)
-
-    # blocking exchange: Δ only
-    delta_p = jax.tree.map(
-        lambda x: jax.lax.ppermute(x, axis_names, perm=list(perm)), delta
+    comm_cfg = comm_cfg or CommConfig()
+    comm = exchange_lib.ShardedPermute(axis_names, perm, comm_cfg)
+    comm_next = exchange_lib.ShardedPermute(axis_names, perm_next, comm_cfg)
+    new_state, new_theta, phi_pre = outer_step(
+        state, theta, cfg, comm, phi_prefetched=phi_prefetched, comm_next=comm_next
     )
-    phi_p = phi_prefetched
-    mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta, delta_p)
-    mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), state.phi, phi_p)
-    phi_next, delta_next = noloco_momentum_update(
-        state.phi, state.delta, mean_delta, mean_phi,
-        alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.resolved_gamma(),
-    )
-    # overlappable pre-send of φ′ along the NEXT pairing
-    phi_next_prefetched = jax.tree.map(
-        lambda x: jax.lax.ppermute(x, axis_names, perm=list(perm_next)), phi_next
-    )
-    new_state = OuterState(phi=phi_next, delta=delta_next, step=state.step + 1)
-    return new_state, phi_next, phi_next_prefetched
-
-
-# ---------------------------------------------------------------------------
-# Sharded backend (inside shard_map; axis-name collectives)
-# ---------------------------------------------------------------------------
-
-
-def _fused_ppermute(tree: PyTree, axis_names, perm) -> PyTree:
-    """ppermute a whole pytree as ONE flat buffer per dtype.
-
-    One leaf-per-permute costs one network message each (26–62 for our archs);
-    on the high-latency links the paper targets, message COUNT dominates
-    (Fig. 5's t_c is per message).  Fusing to one buffer per dtype reduces the
-    gossip exchange to 1–2 collective-permutes total (§Perf P3 iteration)."""
-    leaves, treedef = jax.tree.flatten(tree)
-    by_dtype: dict = {}
-    for i, x in enumerate(leaves):
-        by_dtype.setdefault(x.dtype, []).append(i)
-    out = [None] * len(leaves)
-    for dt, idxs in by_dtype.items():
-        flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
-        moved = jax.lax.ppermute(flat, axis_names, perm=list(perm))
-        off = 0
-        for i in idxs:
-            n = leaves[i].size
-            out[i] = moved[off : off + n].reshape(leaves[i].shape)
-            off += n
-    return jax.tree.unflatten(treedef, out)
-
-
-def outer_step_sharded(
-    state: OuterState,
-    theta: PyTree,
-    cfg: OuterConfig,
-    *,
-    axis_names: Sequence[str],
-    perm: Sequence[tuple[int, int]] | None = None,
-    fuse_payload: bool = False,
-) -> tuple[OuterState, PyTree]:
-    """One outer step inside ``shard_map``: each program instance holds ONE
-    replica's (φ, δ, θ) shards.
-
-    NoLoCo: a single ``lax.ppermute`` (collective-permute) moves the packed
-    (Δ, φ) payload to the partner — the ONLY cross-replica communication, and
-    explicitly not an all-reduce.  The φ half of the payload is the part the
-    paper notes can be pre-sent during the previous inner phase (§3.2); we keep
-    it in the same permute here and account for the overlap in the latency
-    model instead.
-
-    DiLoCo: ``lax.pmean`` over the replica axes — lowers to all-reduce.
-    """
-    cfg.validate()
-    axis_names = tuple(axis_names)
-    delta = outer_gradient(theta, state.phi)
-
-    if cfg.method == "none":
-        new_state = OuterState(phi=theta, delta=state.delta, step=state.step + 1)
-        return new_state, theta
-
-    if cfg.method == "diloco":
-        mean_delta = jax.tree.map(lambda d: jax.lax.pmean(d, axis_names), delta)
-        phi_next, delta_next = diloco_momentum_update(
-            state.phi, state.delta, mean_delta, alpha=cfg.alpha, beta=cfg.beta
-        )
-    else:
-        if perm is None:
-            raise ValueError("sharded NoLoCo requires an explicit ppermute perm")
-        payload = (delta, state.phi)
-        if fuse_payload:
-            recv = _fused_ppermute(payload, axis_names, perm)
-        else:
-            recv = jax.tree.map(
-                lambda x: jax.lax.ppermute(x, axis_names, perm=list(perm)), payload
-            )
-        delta_p, phi_p = recv
-        mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta, delta_p)
-        mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), state.phi, phi_p)
-        phi_next, delta_next = noloco_momentum_update(
-            state.phi,
-            state.delta,
-            mean_delta,
-            mean_phi,
-            alpha=cfg.alpha,
-            beta=cfg.beta,
-            gamma=cfg.resolved_gamma(),
-        )
-
-    new_state = OuterState(phi=phi_next, delta=delta_next, step=state.step + 1)
-    return new_state, phi_next
+    return new_state, new_theta, phi_pre

@@ -33,8 +33,7 @@ import jax.numpy as jnp
 from repro.configs import registry
 from repro.configs.shapes import SHAPES
 from repro.core import pairing
-from repro.core.outer import OuterConfig, OuterState
-from repro.core import outer as outer_lib
+from repro.core.outer import OuterConfig
 from repro.launch import dryrun as dr
 from repro.launch import roofline as rf
 from repro.launch.mesh import make_production_mesh
@@ -42,7 +41,6 @@ from repro.models import model as model_api
 from repro.models.common import unzip
 from repro.parallel import plans as plans_lib
 from repro.parallel import steps as steps_lib
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def outer_variant(arch: str, overlapped: bool, mesh) -> dict:
@@ -56,33 +54,20 @@ def outer_variant(arch: str, overlapped: bool, mesh) -> dict:
     perm = pairing.ppermute_pairs(0, plan.replicas)
     perm_next = pairing.ppermute_pairs(1, plan.replicas)
     ocfg = OuterConfig(method="noloco")
-    rep = plan.replica_axes
-    rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
     model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
 
     with jax.set_mesh(mesh):
+        rep_sh = jax.ShapeDtypeStruct((plan.replicas,), jnp.int32)
         if not overlapped:
             fn = steps_lib.build_outer_step(plan, mesh, pspecs, ocfg, perm)
-            rep_sh = jax.ShapeDtypeStruct((plan.replicas,), jnp.int32)
             compiled = fn.lower(theta_abs, theta_abs, theta_abs, rep_sh).compile()
         else:
-            def body(theta_l, phi_l, delta_l, phi_pref_l, step_l):
-                sq = steps_lib._squeeze_replica
-                state = OuterState(phi=sq(phi_l), delta=sq(delta_l), step=step_l.reshape(()))
-                new_state, new_theta, pref = outer_lib.outer_step_sharded_overlapped(
-                    state, sq(theta_l), sq(phi_pref_l), ocfg,
-                    axis_names=rep, perm=perm, perm_next=perm_next,
-                )
-                us = steps_lib._unsqueeze_replica
-                return (us(new_theta), us(new_state.phi), us(new_state.delta),
-                        us(pref), new_state.step.reshape((1,)))
-
-            in_specs = (pspecs, pspecs, pspecs, pspecs, P(rep_entry))
-            out_specs = (pspecs, pspecs, pspecs, pspecs, P(rep_entry))
-            fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                               out_specs=out_specs, check_vma=False)
-            rep_sh = jax.ShapeDtypeStruct((plan.replicas,), jnp.int32)
-            compiled = jax.jit(fn).lower(
+            # the §3.2 overlap is now a first-class build_outer_step variant
+            # (extra phi_prefetched input / φ′ pre-send output)
+            fn = steps_lib.build_outer_step(
+                plan, mesh, pspecs, ocfg, perm, perm_next=perm_next
+            )
+            compiled = fn.lower(
                 theta_abs, theta_abs, theta_abs, theta_abs, rep_sh
             ).compile()
 

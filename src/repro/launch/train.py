@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CommConfig
 from repro.configs import registry
 from repro.core import GossipTrainer, OuterConfig, TrainerConfig
 from repro.data import LoaderConfig, shard_iterator
@@ -43,9 +44,11 @@ def method_config(
     warmup: int = 100,
     inner_steps: int | None = None,
     seed: int = 0,
+    comm: CommConfig | None = None,
 ) -> TrainerConfig:
     """Paper §4 hyper-parameters: β=0.7 both; NoLoCo α=0.5, m=50;
-    DiLoCo α=0.3, m=100; inner AdamW + clip 1.0 + warmup-cosine."""
+    DiLoCo α=0.3, m=100; inner AdamW + clip 1.0 + warmup-cosine.
+    ``comm`` selects the gossip wire codec / payload fusing (repro.comm)."""
     sched = warmup_cosine(inner_lr, total_steps, warmup_steps=warmup)
     inner = AdamWConfig(lr=sched, weight_decay=0.1, clip_norm=1.0)
     if method == "noloco":
@@ -58,7 +61,8 @@ def method_config(
         outer = OuterConfig(method="none", inner_steps=10**9)
     else:  # pragma: no cover
         raise ValueError(method)
-    return TrainerConfig(outer=outer, inner=inner, sync_grads=method == "fsdp")
+    return TrainerConfig(outer=outer, inner=inner, comm=comm or CommConfig(),
+                         sync_grads=method == "fsdp")
 
 
 def run_training(
@@ -77,8 +81,14 @@ def run_training(
     seed: int = 0,
     ckpt_dir: str | None = None,
     log: bool = False,
+    codec: str = "none",
+    fuse: bool = True,
 ) -> dict[str, Any]:
-    """Train; returns loss/weight-std trajectories and final eval loss."""
+    """Train; returns loss/weight-std trajectories and final eval loss.
+
+    ``codec``/``fuse`` configure the gossip wire (repro.comm.CommConfig): the
+    stacked simulation applies lossy codecs to the partner's exchanged values
+    exactly as the distributed ppermute path would."""
     ctx = ShardCtx.local()
 
     def loss_fn(params, batch, rng):
@@ -88,6 +98,7 @@ def run_training(
         method, inner_lr=inner_lr, total_steps=steps,
         warmup=warmup if warmup is not None else max(steps // 10, 1),
         inner_steps=inner_steps, seed=seed,
+        comm=CommConfig(codec=codec, fuse=fuse),
     )
     trainer = GossipTrainer(tcfg, loss_fn)
 
@@ -165,6 +176,11 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--inner-steps", type=int, default=None)
+    ap.add_argument("--codec", default="none",
+                    choices=["none", "fp16", "bf16", "int8"],
+                    help="gossip wire codec (repro.comm)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="per-leaf exchange instead of one fused buffer per dtype")
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -179,10 +195,10 @@ def main() -> None:
         per_replica_batch=args.batch, seq_len=args.seq, steps=args.steps,
         inner_lr=args.lr, inner_steps=args.inner_steps,
         eval_every=args.eval_every, seed=args.seed, ckpt_dir=args.ckpt_dir,
-        log=True,
+        log=True, codec=args.codec, fuse=not args.no_fuse,
     )
     summary = {
-        "arch": cfg.name, "method": args.method,
+        "arch": cfg.name, "method": args.method, "codec": args.codec,
         "final_train_loss": res["losses"][-1],
         "final_eval": res["evals"][-1][1] if res["evals"] else None,
         "final_weight_std": res["final_weight_std"],

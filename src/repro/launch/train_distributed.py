@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import save as ckpt_save
+from repro.comm import CommConfig
 from repro.configs import registry
 from repro.core import pairing
 from repro.core.outer import OuterConfig
@@ -49,12 +50,13 @@ class DistributedTrainer:
     plan: plans_lib.Plan
     outer_cfg: OuterConfig
     inner_cfg: AdamWConfig
+    comm_cfg: CommConfig = dataclasses.field(default_factory=CommConfig)
     pairing_pool: int = 16        # precompiled random matchings, cycled
     schedule: str = "random"      # "random" pool | "hypercube" (log2 N programs)
     seed: int = 0
 
     def __post_init__(self):
-        self._outer_fns: dict[int, Any] = {}
+        self._outer_fns: dict[Any, Any] = {}
 
     # -- setup -------------------------------------------------------------
 
@@ -80,22 +82,39 @@ class DistributedTrainer:
                 NamedSharding(self.mesh, P(rep_entry)),
             )
         self._bspecs = steps_lib.batch_pspecs(self.plan, batch_example)
-        return {"theta": theta, "opt": opt, "phi": phi, "delta": delta,
-                "outer_step": step_c, "inner_step": 0}
+        state = {"theta": theta, "opt": opt, "phi": phi, "delta": delta,
+                 "outer_step": step_c, "inner_step": 0}
+        if self.comm_cfg.overlap:
+            # Bootstrap for the §3.2 φ-prefetch: all replicas start from the
+            # SAME φ_0, so "the partner's φ" for the first outer step is just
+            # our own copy — no exchange needed before round 0.
+            state["phi_pre"] = jax.tree.map(jnp.copy, phi)
+        return state
 
-    def _outer_fn(self, outer_index: int):
-        """Compiled gossip program for this outer step (cycled pool)."""
+    def _pool_perm(self, outer_index: int):
+        """(pool key, static ppermute pairs) for one outer step index."""
         world = self.plan.replicas
         if self.schedule == "hypercube":
             key = outer_index % max(int(np.log2(world)), 1)
-            perm = pairing.hypercube_ppermute_pairs(key, world, seed=self.seed)
-        else:
-            key = outer_index % self.pairing_pool
-            perm = pairing.ppermute_pairs(key, world, seed=self.seed)
+            return key, pairing.hypercube_ppermute_pairs(key, world, seed=self.seed)
+        key = outer_index % self.pairing_pool
+        return key, pairing.ppermute_pairs(key, world, seed=self.seed)
+
+    def _outer_fn(self, outer_index: int):
+        """Compiled gossip program for this outer step (cycled pool).
+
+        With ``comm_cfg.overlap`` the program also pre-sends φ′ along the NEXT
+        pairing, so it is keyed by the (this, next) pool-key pair."""
+        key, perm = self._pool_perm(outer_index)
+        perm_next = None
+        if self.comm_cfg.overlap and self.outer_cfg.method == "noloco":
+            key_next, perm_next = self._pool_perm(outer_index + 1)
+            key = (key, key_next)
         if key not in self._outer_fns:
             with jax.set_mesh(self.mesh):
                 self._outer_fns[key] = steps_lib.build_outer_step(
-                    self.plan, self.mesh, self.bundle.pspecs, self.outer_cfg, perm
+                    self.plan, self.mesh, self.bundle.pspecs, self.outer_cfg, perm,
+                    comm_cfg=self.comm_cfg, perm_next=perm_next,
                 )
         return self._outer_fns[key]
 
@@ -114,6 +133,13 @@ class DistributedTrainer:
         outer_index = state["inner_step"] // self.outer_cfg.inner_steps - 1
         fn = self._outer_fn(outer_index)
         with jax.set_mesh(self.mesh):
+            if self.comm_cfg.overlap and self.outer_cfg.method == "noloco":
+                theta, phi, delta, phi_pre, step_c = fn(
+                    state["theta"], state["phi"], state["delta"],
+                    state["phi_pre"], state["outer_step"],
+                )
+                return dict(state, theta=theta, phi=phi, delta=delta,
+                            phi_pre=phi_pre, outer_step=step_c), True
             theta, phi, delta, step_c = fn(
                 state["theta"], state["phi"], state["delta"], state["outer_step"]
             )
@@ -131,6 +157,13 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--schedule", default="random", choices=["random", "hypercube"])
+    ap.add_argument("--codec", default="none",
+                    choices=["none", "fp16", "bf16", "int8"],
+                    help="gossip wire codec (repro.comm)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="one ppermute per leaf instead of one fused buffer per dtype")
+    ap.add_argument("--overlap", action="store_true",
+                    help="§3.2 φ-prefetch: pre-send φ′ along the next pairing")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -152,6 +185,8 @@ def main() -> None:
         cfg=cfg, mesh=mesh, plan=plan,
         outer_cfg=OuterConfig(method="noloco", inner_steps=args.inner_steps),
         inner_cfg=AdamWConfig(lr=args.lr, weight_decay=0.0),
+        comm_cfg=CommConfig(codec=args.codec, fuse=not args.no_fuse,
+                            overlap=args.overlap),
         schedule=args.schedule,
     )
     loader = shard_iterator(LoaderConfig(
@@ -178,6 +213,7 @@ def main() -> None:
                   {"theta": state["theta"], "phi": state["phi"]})
     print(json.dumps({
         "arch": cfg.name, "replicas": plan.replicas, "tp": plan.tp,
+        "codec": args.codec, "fuse": not args.no_fuse, "overlap": args.overlap,
         "final_loss": float(np.asarray(metrics["loss"]).mean()),
         "wall_s": round(time.time() - t0, 1),
         "compiled_outer_programs": len(trainer._outer_fns),

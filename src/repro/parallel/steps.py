@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm import CommConfig
 from repro.core import outer as outer_lib
 from repro.core.outer import OuterConfig, OuterState
 from repro.models import model as model_api
@@ -206,6 +207,8 @@ def build_outer_step(
     perm: list[tuple[int, int]] | None,
     *,
     fuse_payload: bool = False,
+    comm_cfg: CommConfig | None = None,
+    perm_next: list[tuple[int, int]] | None = None,
 ):
     """One outer step over (theta, phi, delta) -> (theta', phi', delta').
 
@@ -213,18 +216,41 @@ def build_outer_step(
     replica axes (pod-major), realized as one collective-permute.  The
     launcher precompiles a rotating set of random matchings (pairings are
     data-independent, so a small cycling pool preserves the paper's random-
-    matching statistics without per-step recompilation)."""
+    matching statistics without per-step recompilation).
+
+    ``comm_cfg`` selects the wire codec / payload fusing (``fuse_payload`` is
+    the legacy switch for ``comm_cfg.fuse``).  With ``perm_next`` the §3.2
+    φ-prefetch overlap is compiled in: the program takes an extra
+    ``phi_prefetched`` input and returns the φ′ pre-send for the NEXT pairing
+    as an extra output — (theta, phi, delta, phi_pre, step) in and out."""
     rep = plan.replica_axes
     rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
+    if comm_cfg is None:
+        comm_cfg = CommConfig(fuse=fuse_payload)
+    overlapped = perm_next is not None and outer_cfg.method == "noloco"
 
-    def body(theta_l, phi_l, delta_l, step_l):
+    def body(theta_l, phi_l, delta_l, *rest):
         theta = _squeeze_replica(theta_l)
         phi = _squeeze_replica(phi_l)
         delta = _squeeze_replica(delta_l)
+        if overlapped:
+            phi_pre_l, step_l = rest
+            state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
+            new_state, new_theta, phi_pre = outer_lib.outer_step_sharded_overlapped(
+                state, theta, _squeeze_replica(phi_pre_l), outer_cfg,
+                axis_names=rep, perm=perm, perm_next=perm_next, comm_cfg=comm_cfg,
+            )
+            return (
+                _unsqueeze_replica(new_theta),
+                _unsqueeze_replica(new_state.phi),
+                _unsqueeze_replica(new_state.delta),
+                _unsqueeze_replica(phi_pre),
+                new_state.step.reshape((1,)),
+            )
+        (step_l,) = rest
         state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
         new_state, new_theta = outer_lib.outer_step_sharded(
-            state, theta, outer_cfg, axis_names=rep, perm=perm,
-            fuse_payload=fuse_payload,
+            state, theta, outer_cfg, axis_names=rep, perm=perm, comm_cfg=comm_cfg,
         )
         return (
             _unsqueeze_replica(new_theta),
@@ -233,15 +259,16 @@ def build_outer_step(
             new_state.step.reshape((1,)),
         )
 
-    in_specs = (param_specs, param_specs, param_specs, P(rep_entry))
-    out_specs = (param_specs, param_specs, param_specs, P(rep_entry))
+    n_params = 4 if overlapped else 3
+    in_specs = (param_specs,) * n_params + (P(rep_entry),)
+    out_specs = (param_specs,) * n_params + (P(rep_entry),)
     fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
     sh = plans_lib.shardings(mesh, param_specs)
     step_sh = NamedSharding(mesh, P(rep_entry))
     return jax.jit(
         fn,
-        in_shardings=(sh, sh, sh, step_sh),
-        donate_argnums=(0, 1, 2),
+        in_shardings=(sh,) * n_params + (step_sh,),
+        donate_argnums=tuple(range(n_params)),
     )
 
 

@@ -9,6 +9,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 

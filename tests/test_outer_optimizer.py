@@ -123,6 +123,44 @@ def test_overlapped_outer_step_matches_baseline():
     )
 
 
+def test_traced_step_without_partner_raises_clearly():
+    """Partner derivation is host-side: under jit with no explicit partner
+    table the old code died inside int(traced step); now it must raise a
+    clear, actionable error (and work when the table IS passed)."""
+    state, theta = _mk_state(world=4)
+    cfg = OuterConfig(method="noloco")
+    with pytest.raises(ValueError, match="traced step counter"):
+        jax.jit(lambda s, t: outer_lib.outer_step_stacked(s, t, cfg))(state, theta)
+    # explicit partner: jit-compatible
+    partner = jnp.asarray([1, 0, 3, 2])
+    new_state, _ = jax.jit(
+        lambda s, t: outer_lib.outer_step_stacked(s, t, cfg, partner=partner)
+    )(state, theta)
+    assert int(new_state.step) == 1
+
+
+def test_trainer_outer_step_traced_raises_clearly():
+    """Same footgun through GossipTrainer.outer_step (used to call
+    int(state.outer.step) unconditionally)."""
+    from repro.core import GossipTrainer, TrainerConfig
+    from repro.optim import AdamWConfig
+
+    def loss_fn(params, batch, rng):
+        return jnp.mean(params["w"] ** 2)
+
+    tr = GossipTrainer(
+        TrainerConfig(outer=OuterConfig(inner_steps=1),
+                      inner=AdamWConfig(lr=1e-2, weight_decay=0.0)),
+        loss_fn,
+    )
+    st = tr.init({"w": jax.random.normal(jax.random.PRNGKey(0), (4, 3))})
+    with pytest.raises(ValueError, match="traced step counter"):
+        jax.jit(tr.outer_step)(st)
+    # eager (host-side step counter) still derives the pairing itself
+    st2 = tr.outer_step(st)
+    assert int(st2.outer.step) == 1
+
+
 def test_fused_payload_matches_per_leaf(monkeypatch):
     """_fused_ppermute must be a pure re-layout: same values as per-leaf
     permutes (validated without devices by substituting a fake permute)."""

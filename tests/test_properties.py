@@ -1,5 +1,8 @@
 """Hypothesis property-based tests on system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax
