@@ -1,0 +1,50 @@
+"""Engine throughput benchmark: tokens/s, comm bytes per outer step and the
+blocking fraction from the unified TrainLoop's own accounting, on
+paper-small-125m (reduced), written to BENCH_engine.json so the perf
+trajectory is tracked from PR 2 onward.
+"""
+import json
+import os
+import time
+
+from benchmarks.common import emit
+from repro.configs import registry
+from repro.launch.train import run_training
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+STEPS = 30
+
+
+def main() -> None:
+    cfg = registry.get_config("paper-small-125m").reduced(
+        vocab_size=512, dtype="float32", remat=False
+    )
+    t0 = time.perf_counter()
+    res = run_training(
+        cfg, method="noloco", replicas=4, per_replica_batch=2, seq_len=64,
+        steps=STEPS, inner_lr=2e-3, inner_steps=10, eval_every=0, seed=0,
+    )
+    us = (time.perf_counter() - t0) * 1e6 / STEPS
+    comm = res["comm"] or {}
+    bench = {
+        "arch": cfg.name,
+        "steps": STEPS,
+        "tokens_per_s": round(res["tokens_per_s"], 2),
+        "wall_s": round(res["wall_s"], 3),
+        "outer_syncs": res["outer_syncs"],
+        "comm_bytes_per_outer_step": comm.get("payload_bytes", 0),
+        "blocking_bytes_per_outer_step": comm.get("blocking_bytes", 0),
+        "blocking_fraction": round(res["blocking_fraction"], 4),
+        "final_train_loss": round(res["losses"][-1], 4),
+        "final_weight_std": res["final_weight_std"],
+    }
+    with open(OUT, "w") as f:
+        json.dump(bench, f, indent=2)
+    emit("engine_tokens_per_s", us, f"tok_s={bench['tokens_per_s']}")
+    emit("engine_comm", 0.0,
+         f"bytes_per_outer={bench['comm_bytes_per_outer_step']};"
+         f"blocking_frac={bench['blocking_fraction']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,7 @@ MODULES = [
     ("fig4", "benchmarks.fig4_routing"),          # Fig 4 routing ablation
     ("table3", "benchmarks.table3_batch_size"),   # Table 3 batch-size ablation
     ("kernels", "benchmarks.kernel_bench"),       # Pallas kernel roofline est.
+    ("engine", "benchmarks.engine_bench"),        # TrainLoop throughput -> BENCH_engine.json
 ]
 
 

@@ -55,9 +55,12 @@ def _decode_tree(node: Any, leaves: list):
     raise ValueError(f"bad manifest node: {node!r}")
 
 
-def save(path: str, step: int, tree: Any) -> str:
+def save(path: str, step: int, tree: Any, *, keep: int | None = None) -> str:
     """Serialize a pytree of arrays (dataclass states should be passed as
-    dicts via dataclasses.asdict-style conversion by the caller)."""
+    dicts via dataclasses.asdict-style conversion by the caller).
+
+    ``keep``: retain only the newest ``keep`` step directories (incl. this
+    one) — bounds disk use under the engine's periodic checkpointing."""
     d = os.path.join(path, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     leaves: list[np.ndarray] = []
@@ -71,6 +74,18 @@ def save(path: str, step: int, tree: Any) -> str:
         blobs.append({"dtype": str(a.dtype), "shape": list(arr.shape), "data": a.tobytes()})
     with open(os.path.join(d, "arrays.msgpack"), "wb") as f:
         f.write(msgpack.packb(blobs))
+    if keep is not None and keep > 0:
+        import re
+        import shutil
+
+        found = sorted(
+            (int(m.group(1)), n)
+            for n in os.listdir(path)
+            for m in [re.fullmatch(r"step_(\d+)", n)]
+            if m
+        )
+        for _, name in found[:-keep]:
+            shutil.rmtree(os.path.join(path, name), ignore_errors=True)
     return d
 
 

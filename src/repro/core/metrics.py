@@ -1,0 +1,37 @@
+"""Shared ensemble diagnostics over replica-stacked parameter trees.
+
+One implementation of the cross-replica weight std (the quantity in Fig. 3B /
+Fig. 4A of the paper) shared by the stacked :class:`~repro.core.GossipTrainer`,
+the routed :class:`~repro.pipeline.PipelineTrainer` (which holds one stacked
+tree PER STAGE) and the training engine's telemetry stream.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["replica_weight_std"]
+
+
+def replica_weight_std(trees: PyTree | Iterable[PyTree]) -> jax.Array:
+    """Mean over parameters of the std across replicas (leading axis 0).
+
+    ``trees`` is either one stacked pytree or an iterable of stacked pytrees
+    (e.g. the per-stage parameter list of the pipeline trainer); every leaf
+    must carry the replica axis first.
+    """
+    if not isinstance(trees, (list, tuple)):
+        trees = [trees]
+    stds = [
+        jnp.mean(jnp.std(x.astype(jnp.float32), axis=0))
+        for t in trees
+        for x in jax.tree.leaves(t)
+    ]
+    if not stds:
+        raise ValueError("replica_weight_std: no array leaves found")
+    return jnp.mean(jnp.stack(stds))

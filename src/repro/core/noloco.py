@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import CommConfig
+from repro.core import metrics as metrics_lib
 from repro.core import outer as outer_lib
 from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
 
@@ -66,6 +67,7 @@ class GossipTrainer:
             return jax.value_and_grad(loss_fn)(params, batch, rng)
 
         self._vgrad = jax.vmap(_one_replica_grad)
+        self._vloss = jax.vmap(loss_fn)
         self._vapply = jax.vmap(lambda g, o, p: adamw_update(g, o, p, cfg.inner))
 
     # -- state ------------------------------------------------------------
@@ -115,6 +117,17 @@ class GossipTrainer:
             theta=new_theta, opt=state.opt, outer=new_outer, inner_step=state.inner_step
         )
 
+    def eval_loss(
+        self, theta: PyTree, batch: PyTree, rng: jax.Array
+    ) -> jax.Array:
+        """Grad-free per-replica losses (R,) — the public eval path.
+
+        Unlike the training path this never materializes gradients; jit it
+        once and reuse (``jax.jit(trainer.eval_loss)``)."""
+        world = jax.tree.leaves(theta)[0].shape[0]
+        rngs = jax.random.split(rng, world)
+        return self._vloss(theta, batch, rngs)
+
     def should_sync(self, state: TrainState) -> bool:
         m = self.cfg.outer.inner_steps
         return int(state.inner_step) > 0 and int(state.inner_step) % m == 0
@@ -146,9 +159,5 @@ class GossipTrainer:
     @staticmethod
     def replica_weight_std(theta: PyTree) -> jax.Array:
         """Mean over parameters of the std across replicas — the quantity in
-        Fig. 3B / Fig. 4A of the paper."""
-        stds = [
-            jnp.mean(jnp.std(x.astype(jnp.float32), axis=0))
-            for x in jax.tree.leaves(theta)
-        ]
-        return jnp.mean(jnp.stack(stds))
+        Fig. 3B / Fig. 4A of the paper (shared impl: repro.core.metrics)."""
+        return metrics_lib.replica_weight_std(theta)

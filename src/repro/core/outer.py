@@ -410,7 +410,9 @@ def outer_step_sharded_overlapped(
     if cfg.method != "noloco":
         raise ValueError("overlap variant is NoLoCo-only")
     axis_names = tuple(axis_names)
-    comm_cfg = comm_cfg or CommConfig()
+    # same default wire layout as outer_step_sharded (per-leaf, no fusing) so
+    # overlapped-vs-plain comparisons measure the overlap, not the payload
+    comm_cfg = comm_cfg or CommConfig(fuse=False)
     comm = exchange_lib.ShardedPermute(axis_names, perm, comm_cfg)
     comm_next = exchange_lib.ShardedPermute(axis_names, perm_next, comm_cfg)
     new_state, new_theta, phi_pre = outer_step(

@@ -1,5 +1,5 @@
-from repro.data.loader import LoaderConfig, TokenFileSource, shard_iterator
+from repro.data.loader import LoaderConfig, TokenFileSource, eval_batches, shard_iterator
 from repro.data.packing import pack_documents
 from repro.data.synthetic import SyntheticLM, make_batches
 
-__all__ = ["LoaderConfig", "TokenFileSource", "shard_iterator", "pack_documents", "SyntheticLM", "make_batches"]
+__all__ = ["LoaderConfig", "TokenFileSource", "eval_batches", "shard_iterator", "pack_documents", "SyntheticLM", "make_batches"]

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.data.synthetic import SyntheticLM
 
-__all__ = ["LoaderConfig", "shard_iterator", "TokenFileSource"]
+__all__ = ["LoaderConfig", "shard_iterator", "eval_batches", "TokenFileSource"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,9 +50,22 @@ def shard_iterator(
         toks = np.empty((cfg.replicas, cfg.per_replica_batch, row), np.int32)
         for r in range(cfg.replicas):
             if source is not None:
-                flat = source.slice((t * cfg.replicas + r) * need, need)
+                # the seed offsets the file cursor (in steps) so differently-
+                # seeded streams — e.g. the +777 eval convention — read
+                # different windows of the corpus, matching the synthetic path
+                flat = source.slice(((t + cfg.seed) * cfg.replicas + r) * need, need)
             else:
                 flat = lm.sample_tokens(r * 1_000_003 + t, need)
             toks[r] = flat.reshape(cfg.per_replica_batch, row)
         yield {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
         t += 1
+
+
+def eval_batches(
+    cfg: LoaderConfig, n: int, *, source: TokenFileSource | None = None
+) -> list[dict]:
+    """A fixed held-out eval set: the first ``n`` batches of the stream keyed
+    by ``cfg.seed`` (callers pass a seed offset, conventionally +777, so the
+    eval stream is disjoint from training)."""
+    it = shard_iterator(cfg, source=source)
+    return [next(it) for _ in range(n)]

@@ -1,39 +1,34 @@
-"""End-to-end training driver.
+"""Stacked-simulation training CLI — a thin shell over the unified engine.
 
     PYTHONPATH=src python -m repro.launch.train --arch paper-small-125m --reduced \
-        --method noloco --replicas 8 --steps 200
+        --method noloco --replicas 8 --steps 200 \
+        --ckpt-dir /tmp/run0 --ckpt-every 50 --resume --log-jsonl /tmp/run0.jsonl
 
-Simulation mode (default, CPU-friendly): replicas are a stacked leading axis;
-the full NoLoCo machinery (inner AdamW, gossip outer step with random
-pairings, weight-std tracking) runs exactly as in the paper.  ``--method``
-selects noloco / diloco / fsdp (grad all-reduce every step) / none
-(independent runs — the §5.2 baseline).
+Simulation mode (CPU-friendly): replicas are a stacked leading axis; the full
+NoLoCo machinery (inner AdamW, gossip outer step with random pairings,
+weight-std tracking) runs exactly as in the paper.  ``--method`` selects
+noloco / diloco / fsdp (grad all-reduce every step) / none (independent runs —
+the §5.2 baseline).
 
-``run_training`` is the library entry benchmarks and examples share.
+``run_training`` is the library entry benchmarks and examples share; the step
+loop, eval cadence, telemetry and checkpoint/resume all live in
+:mod:`repro.train` (see DESIGN.md §2) — this module only assembles the
+program + loader and forwards the knobs.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-import time
 from typing import Any
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.comm import CommConfig
 from repro.configs import registry
-from repro.core import GossipTrainer, OuterConfig, TrainerConfig
-from repro.data import LoaderConfig, shard_iterator
-from repro.models import model as model_api
-from repro.models.common import values_of
+from repro.core import OuterConfig, TrainerConfig
+from repro.data import LoaderConfig
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, warmup_cosine
-from repro.parallel.sharding import ShardCtx
-from repro.checkpoint import save as ckpt_save
+from repro.train import GossipProgram, LoopConfig, make_loop
 
 
 def method_config(
@@ -73,6 +68,7 @@ def run_training(
     per_replica_batch: int = 4,
     seq_len: int = 128,
     steps: int = 100,
+    total_steps: int | None = None,
     inner_lr: float = 3e-3,
     inner_steps: int | None = None,
     warmup: int | None = None,
@@ -80,7 +76,10 @@ def run_training(
     eval_batches: int = 2,
     seed: int = 0,
     ckpt_dir: str | None = None,
+    ckpt_every: int = 0,
+    resume: bool = False,
     log: bool = False,
+    log_jsonl: str | None = None,
     codec: str = "none",
     fuse: bool = True,
 ) -> dict[str, Any]:
@@ -88,79 +87,46 @@ def run_training(
 
     ``codec``/``fuse`` configure the gossip wire (repro.comm.CommConfig): the
     stacked simulation applies lossy codecs to the partner's exchanged values
-    exactly as the distributed ppermute path would."""
-    ctx = ShardCtx.local()
+    exactly as the distributed ppermute path would.  ``resume`` restores the
+    latest checkpoint under ``ckpt_dir`` (θ/φ/δ/opt/step counters + loader
+    fast-forward + PRNG keys) and continues the exact trajectory.
 
-    def loss_fn(params, batch, rng):
-        return model_api.loss_fn(params, cfg, batch, ctx)[0]
-
+    ``total_steps`` fixes the LR-schedule horizon independently of ``steps``
+    (default: equal).  Runs that will be interrupted and resumed must pin it,
+    so stopping early does not change the schedule the checkpoint embeds."""
+    n_eval = eval_batches
     tcfg = method_config(
-        method, inner_lr=inner_lr, total_steps=steps,
-        warmup=warmup if warmup is not None else max(steps // 10, 1),
+        method, inner_lr=inner_lr, total_steps=total_steps or steps,
+        warmup=warmup if warmup is not None else max((total_steps or steps) // 10, 1),
         inner_steps=inner_steps, seed=seed,
         comm=CommConfig(codec=codec, fuse=fuse),
     )
-    trainer = GossipTrainer(tcfg, loss_fn)
-
-    one = values_of(model_api.init_params(jax.random.PRNGKey(seed), cfg))
-    stacked = jax.tree.map(
-        lambda v: jnp.broadcast_to(v[None], (replicas,) + v.shape), one
-    )
-    state = trainer.init(stacked)
-
-    loader = shard_iterator(
+    program = GossipProgram(cfg, tcfg, replicas=replicas, seed=seed)
+    loop = make_loop(
+        program,
         LoaderConfig(
             vocab_size=cfg.vocab_size, seq_len=seq_len,
             per_replica_batch=per_replica_batch, replicas=replicas, seed=seed,
-        )
+        ),
+        LoopConfig(
+            steps=steps, eval_every=eval_every, seed=seed,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, resume=resume,
+            log_jsonl=log_jsonl, log=log, run_name=f"{cfg.name}-{method}",
+        ),
+        n_eval=n_eval,
     )
-    eval_loader = shard_iterator(
-        LoaderConfig(
-            vocab_size=cfg.vocab_size, seq_len=seq_len,
-            per_replica_batch=per_replica_batch, replicas=replicas, seed=seed + 777,
-        )
-    )
-    eval_set = [next(eval_loader) for _ in range(eval_batches)]
+    return loop.run()
 
-    inner_jit = jax.jit(trainer.inner_step)
-    eval_jit = jax.jit(
-        lambda th, b, r: jnp.mean(trainer._vgrad(th, b, r)[0])
-    )
 
-    rng = jax.random.PRNGKey(seed + 1)
-    losses, stds, evals = [], [], []
-    t0 = time.time()
-    for t in range(steps):
-        batch = {k: jnp.asarray(v) for k, v in next(loader).items()}
-        rng, sub = jax.random.split(rng)
-        state, metrics = inner_jit(state, batch, sub)
-        losses.append(float(jnp.mean(metrics["loss"])))
-        if trainer.should_sync(state):
-            state = trainer.outer_step(state)
-        if eval_every and (t + 1) % eval_every == 0:
-            rng, sub = jax.random.split(rng)
-            rngs = jax.random.split(sub, replicas)
-            ev = float(np.mean([
-                float(eval_jit(state.theta, {k: jnp.asarray(v) for k, v in b.items()},
-                               rngs))
-                for b in eval_set
-            ]))
-            evals.append((t + 1, ev))
-            stds.append((t + 1, float(GossipTrainer.replica_weight_std(state.theta))))
-            if log:
-                print(f"step {t+1}: train={losses[-1]:.4f} eval={ev:.4f} "
-                      f"wstd={stds[-1][1]:.6f} ({time.time()-t0:.0f}s)", flush=True)
-    if ckpt_dir:
-        ckpt_save(ckpt_dir, steps, {"theta": state.theta, "phi": state.outer.phi,
-                                    "delta": state.outer.delta})
-    return {
-        "losses": losses,
-        "evals": evals,
-        "weight_stds": stds,
-        "final_weight_std": float(GossipTrainer.replica_weight_std(state.theta)),
-        "state": state,
-        "wall_s": time.time() - t0,
-    }
+def add_engine_flags(ap: argparse.ArgumentParser) -> None:
+    """The engine flags shared by every runtime's CLI (see DESIGN.md §2)."""
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save every N steps (0: only a final save)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint under --ckpt-dir")
+    ap.add_argument("--log-jsonl", default=None,
+                    help="append one JSON telemetry event per line to this file")
 
 
 def main() -> None:
@@ -183,8 +149,8 @@ def main() -> None:
                     help="per-leaf exchange instead of one fused buffer per dtype")
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None)
+    add_engine_flags(ap)
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch)
@@ -194,14 +160,17 @@ def main() -> None:
         cfg, method=args.method, replicas=args.replicas,
         per_replica_batch=args.batch, seq_len=args.seq, steps=args.steps,
         inner_lr=args.lr, inner_steps=args.inner_steps,
-        eval_every=args.eval_every, seed=args.seed, ckpt_dir=args.ckpt_dir,
-        log=True, codec=args.codec, fuse=not args.no_fuse,
+        eval_every=args.eval_every, seed=args.seed,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, resume=args.resume,
+        log=True, log_jsonl=args.log_jsonl,
+        codec=args.codec, fuse=not args.no_fuse,
     )
     summary = {
         "arch": cfg.name, "method": args.method, "codec": args.codec,
-        "final_train_loss": res["losses"][-1],
+        "final_train_loss": res["losses"][-1] if res["losses"] else None,
         "final_eval": res["evals"][-1][1] if res["evals"] else None,
         "final_weight_std": res["final_weight_std"],
+        "tokens_per_s": round(res["tokens_per_s"], 1),
         "wall_s": round(res["wall_s"], 1),
     }
     print(json.dumps(summary))

@@ -1,12 +1,17 @@
-"""Distributed NoLoCo training driver: the production loop over the shard_map
-runtime (parallel/steps.py) — per-replica inner AdamW steps with ZERO
-cross-replica collectives, plus a gossip outer step every m steps from a
-PRECOMPILED pool of pairing programs (ppermute needs static permutations).
+"""Distributed NoLoCo training driver: the shard_map runtime
+(parallel/steps.py) — per-replica inner AdamW steps with ZERO cross-replica
+collectives, plus a gossip outer step every m steps from a PRECOMPILED pool
+of pairing programs (ppermute needs static permutations).
+
+:class:`DistributedTrainer` owns the compiled programs and mesh state; the
+step loop, eval cadence, telemetry and checkpoint/resume are the unified
+engine's (:mod:`repro.train`, via :class:`~repro.train.DistributedProgram`).
 
 On this CPU box it runs on forced host devices for validation:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-        python -m repro.launch.train_distributed --data 4 --model 2 --steps 40
+        python -m repro.launch.train_distributed --data 4 --model 2 --steps 40 \
+        --ckpt-dir /tmp/dist0 --ckpt-every 20 --resume --log-jsonl /tmp/dist0.jsonl
 
 On TPU the same code drives the production mesh (launch/mesh.py).
 """
@@ -16,7 +21,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import time
 from typing import Any
 
 import numpy as np
@@ -25,12 +29,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import save as ckpt_save
 from repro.comm import CommConfig
 from repro.configs import registry
 from repro.core import pairing
 from repro.core.outer import OuterConfig
-from repro.data import LoaderConfig, shard_iterator
+from repro.data import LoaderConfig
 from repro.models import model as model_api
 from repro.models.common import unzip
 from repro.models.config import ModelConfig
@@ -82,6 +85,9 @@ class DistributedTrainer:
                 NamedSharding(self.mesh, P(rep_entry)),
             )
         self._bspecs = steps_lib.batch_pspecs(self.plan, batch_example)
+        self._theta_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), theta
+        )
         state = {"theta": theta, "opt": opt, "phi": phi, "delta": delta,
                  "outer_step": step_c, "inner_step": 0}
         if self.comm_cfg.overlap:
@@ -145,8 +151,22 @@ class DistributedTrainer:
             )
         return dict(state, theta=theta, phi=phi, delta=delta, outer_step=step_c), True
 
+    def eval_loss(self, state, batch):
+        """Grad-free per-replica losses (R,) via the bundle's eval program."""
+        with jax.set_mesh(self.mesh):
+            batch = jax.device_put(batch, plans_lib.shardings(self.mesh, self._bspecs))
+            return self.bundle.eval_fn(state["theta"], batch)
+
+    def theta_struct(self):
+        """Stacked-theta ShapeDtypeStructs (for static comm costing)."""
+        if not hasattr(self, "_theta_struct"):
+            raise RuntimeError("init_state must run before theta_struct")
+        return self._theta_struct
+
 
 def main() -> None:
+    from repro.launch.train import add_engine_flags
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-small-125m")
     ap.add_argument("--data", type=int, default=4)
@@ -156,6 +176,8 @@ def main() -> None:
     ap.add_argument("--batch-per-replica", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--schedule", default="random", choices=["random", "hypercube"])
     ap.add_argument("--codec", default="none",
                     choices=["none", "fp16", "bf16", "int8"],
@@ -164,7 +186,7 @@ def main() -> None:
                     help="one ppermute per leaf instead of one fused buffer per dtype")
     ap.add_argument("--overlap", action="store_true",
                     help="§3.2 φ-prefetch: pre-send φ′ along the next pairing")
-    ap.add_argument("--ckpt-dir", default=None)
+    add_engine_flags(ap)
     args = ap.parse_args()
 
     if jax.device_count() < args.data * args.model:
@@ -187,35 +209,33 @@ def main() -> None:
         inner_cfg=AdamWConfig(lr=args.lr, weight_decay=0.0),
         comm_cfg=CommConfig(codec=args.codec, fuse=not args.no_fuse,
                             overlap=args.overlap),
-        schedule=args.schedule,
+        schedule=args.schedule, seed=args.seed,
     )
-    loader = shard_iterator(LoaderConfig(
-        vocab_size=cfg.vocab_size, seq_len=args.seq,
-        per_replica_batch=args.batch_per_replica, replicas=plan.replicas,
-    ))
 
-    def to_global(b):
-        # (R, B, S) stacked -> (R*B, S) global batch rows, replica-major
-        return {k: jnp.asarray(v.reshape(-1, v.shape[-1])) for k, v in b.items()}
+    from repro.train import DistributedProgram, LoopConfig, make_loop
 
-    example = to_global(next(loader))
-    state = trainer.init_state(example)
-    t0 = time.time()
-    for t in range(args.steps):
-        state, metrics = trainer.inner_step(state, to_global(next(loader)))
-        state, synced = trainer.maybe_outer_step(state)
-        if (t + 1) % 10 == 0 or synced:
-            loss = np.asarray(metrics["loss"]).mean()
-            print(f"step {t+1}: loss={loss:.4f}"
-                  + (" [gossip]" if synced else ""), flush=True)
-    if args.ckpt_dir:
-        ckpt_save(args.ckpt_dir, args.steps,
-                  {"theta": state["theta"], "phi": state["phi"]})
+    loop = make_loop(
+        DistributedProgram(trainer),
+        LoaderConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq,
+            per_replica_batch=args.batch_per_replica, replicas=plan.replicas,
+            seed=args.seed,
+        ),
+        LoopConfig(
+            steps=args.steps, eval_every=args.eval_every, seed=args.seed,
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            resume=args.resume, log_jsonl=args.log_jsonl, log=True,
+            run_name=f"{cfg.name}-dist",
+        ),
+    )
+    res = loop.run()
     print(json.dumps({
         "arch": cfg.name, "replicas": plan.replicas, "tp": plan.tp,
         "codec": args.codec, "fuse": not args.no_fuse, "overlap": args.overlap,
-        "final_loss": float(np.asarray(metrics["loss"]).mean()),
-        "wall_s": round(time.time() - t0, 1),
+        "final_loss": res["losses"][-1] if res["losses"] else None,
+        "tokens_per_s": round(res["tokens_per_s"], 1),
+        "comm_bytes": res["comm_bytes"],
+        "wall_s": round(res["wall_s"], 1),
         "compiled_outer_programs": len(trainer._outer_fns),
     }))
 

@@ -91,6 +91,7 @@ class TrainStepBundle:
     theta_shardings: PyTree
     opt_shardings: PyTree
     pspecs: PyTree                 # theta PartitionSpecs (for checkpoint/outer)
+    eval_fn: Callable | None = None  # (theta, batch) -> (R,) losses, grad-free
 
 
 def _squeeze_replica(tree: PyTree) -> PyTree:
@@ -184,8 +185,15 @@ def build_train_step(
         in_shardings=(theta_sh, opt_sh, bsh),
         donate_argnums=(0, 1),
     )
+    # grad-free eval: the same shard_map'd loss, no value_and_grad, nothing
+    # donated (eval must not consume the training state)
+    eval_jit = jax.jit(
+        lambda theta, batch: loss_shard(theta, batch)[0],
+        in_shardings=(theta_sh, bsh),
+    )
     return TrainStepBundle(
-        step_fn=jitted, theta_shardings=theta_sh, opt_shardings=opt_sh, pspecs=pspecs
+        step_fn=jitted, theta_shardings=theta_sh, opt_shardings=opt_sh,
+        pspecs=pspecs, eval_fn=eval_jit,
     )
 
 

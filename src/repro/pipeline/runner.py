@@ -25,7 +25,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommConfig
+from repro.core import metrics as metrics_lib
 from repro.core import pairing
+from repro.core.outer import OuterConfig, OuterState, outer_step_stacked
 from repro.models import model as model_api
 from repro.models import transformer as tfm
 from repro.models.common import values_of
@@ -100,14 +103,27 @@ class PipelineTrainer:
 
     ``routing``: "random" (paper §3.1) or "fixed" (classic pipelining — the
     §5.2 baseline where DP instances never exchange information when the
-    outer optimizer is off)."""
+    outer optimizer is off).
+
+    ``outer`` enables the paper's COMPLETE method (§3.1 routing + §3.2 gossip
+    outer optimizer): every ``outer.inner_steps`` steps each stage runs one
+    NoLoCo/DiLoCo outer step over its replica axis, reusing the exact
+    :func:`repro.core.outer.outer_step_stacked` machinery (pairings from
+    :mod:`repro.core.pairing`, wire codec from ``comm``).  ``outer=None``
+    keeps the routing-only trainer (the §5.2 no-outer baseline)."""
 
     cfg: ModelConfig
     num_stages: int
     replicas: int
     inner: AdamWConfig = dataclasses.field(default_factory=lambda: AdamWConfig(lr=1e-3, weight_decay=0.0))
     routing: str = "random"
+    outer: OuterConfig | None = None
+    comm: CommConfig = dataclasses.field(default_factory=CommConfig)
     seed: int = 0
+
+    @property
+    def outer_enabled(self) -> bool:
+        return self.outer is not None and self.outer.method != "none"
 
     def init(self, key) -> dict:
         params = []
@@ -121,7 +137,14 @@ class PipelineTrainer:
                 lambda v: jnp.broadcast_to(v[None], (self.replicas,) + v.shape), one
             ))
         opt = [jax.vmap(adamw_init)(p) for p in params]
-        return {"params": params, "opt": opt, "step": 0}
+        state = {"params": params, "opt": opt, "step": 0}
+        if self.outer_enabled:
+            state["outer"] = {
+                "phi": [jax.tree.map(jnp.copy, p) for p in params],
+                "delta": [jax.tree.map(jnp.zeros_like, p) for p in params],
+                "step": 0,
+            }
+        return state
 
     # -- routing --------------------------------------------------------
 
@@ -184,17 +207,72 @@ class PipelineTrainer:
         new_params, new_opt, loss = self._jitted_step()(
             state["params"], state["opt"], batch, routes
         )
-        return (
-            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
-            float(loss),
+        new_state = dict(
+            state, params=new_params, opt=new_opt, step=state["step"] + 1
         )
+        return new_state, float(loss)
+
+    # -- outer optimizer (§3.2 gossip, per stage over the replica axis) -----
+
+    def maybe_outer_step(self, state: dict) -> tuple[dict, bool]:
+        """Run the NoLoCo/DiLoCo outer step on every stage when due.
+
+        Each stage's replicas form their own gossip group: stage s draws its
+        OWN random matching for outer round k (seed offset by stage), so the
+        pairings across stages are independent — combined with the random
+        routing this is the paper's full §3.1+§3.2 method.  Fast weights are
+        reset to the new slow weights (look-ahead semantics); AdamW moments
+        persist, matching :class:`~repro.core.GossipTrainer`."""
+        if not self.outer_enabled:
+            return state, False
+        m = self.outer.inner_steps
+        k = int(state["outer"]["step"])
+        # outer round k fires once step reaches (k+1)*m — idempotent between
+        # inner steps (calling twice at the same step is a no-op)
+        if state["step"] < (k + 1) * m:
+            return state, False
+        new_params, new_phi, new_delta = [], [], []
+        for s in range(self.num_stages):
+            partner = None
+            if self.outer.method == "noloco":
+                partner = jnp.asarray(pairing.partner_table(
+                    k, self.replicas, seed=self.seed + 1_000_003 * (s + 1)
+                ))
+            ost = OuterState(
+                phi=state["outer"]["phi"][s],
+                delta=state["outer"]["delta"][s],
+                step=jnp.asarray(k, jnp.int32),
+            )
+            new_ost, new_theta = outer_step_stacked(
+                ost, state["params"][s], self.outer,
+                partner=partner, comm_cfg=self.comm,
+            )
+            new_params.append(new_theta)
+            new_phi.append(new_ost.phi)
+            new_delta.append(new_ost.delta)
+        new_state = dict(
+            state,
+            params=new_params,
+            outer={"phi": new_phi, "delta": new_delta, "step": k + 1},
+        )
+        return new_state, True
+
+    # -- grad-free eval --------------------------------------------------------
+
+    def eval_loss(self, params: list, batch: dict) -> jax.Array:
+        """Mean loss over replicas WITHOUT routing (identity routes): each
+        replica is evaluated as a self-contained pipeline, no gradients."""
+        if not hasattr(self, "_eval_cache"):
+            fixed = [jnp.arange(self.replicas)] * (self.num_stages - 1)
+            object.__setattr__(
+                self, "_eval_cache",
+                jax.jit(lambda ps, b: self.loss(ps, b, fixed)),
+            )
+        return self._eval_cache(params, batch)
 
     # -- §5.2 metric -----------------------------------------------------------
 
     def weight_std(self, state: dict) -> float:
-        """Mean across params of the std across replicas (all stages)."""
-        stds = []
-        for p in state["params"]:
-            for leaf in jax.tree.leaves(p):
-                stds.append(jnp.mean(jnp.std(leaf.astype(jnp.float32), axis=0)))
-        return float(jnp.mean(jnp.stack(stds)))
+        """Mean across params of the std across replicas (all stages) —
+        shared impl: :func:`repro.core.metrics.replica_weight_std`."""
+        return float(metrics_lib.replica_weight_std(state["params"]))

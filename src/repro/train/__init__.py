@@ -1,0 +1,20 @@
+"""Unified training engine: one loop, three runtimes, resumable end-to-end.
+
+See DESIGN.md §2.  :class:`TrainLoop` drives any :class:`TrainProgram`
+(stacked simulation, shard_map mesh, routed pipeline) with shared eval
+cadence, throughput/comm accounting, JSONL telemetry and checkpoint/resume.
+"""
+
+from repro.train.adapters import DistributedProgram, GossipProgram, PipelineProgram
+from repro.train.loop import LoopConfig, TrainLoop, make_loop
+from repro.train.program import TrainProgram
+
+__all__ = [
+    "DistributedProgram",
+    "GossipProgram",
+    "LoopConfig",
+    "PipelineProgram",
+    "TrainLoop",
+    "TrainProgram",
+    "make_loop",
+]

@@ -1,0 +1,316 @@
+"""Adapters wrapping the three runtimes as :class:`TrainProgram`\\ s.
+
+  * :class:`GossipProgram`      — stacked simulation (:class:`repro.core.
+    GossipTrainer`): replicas on a leading vmap axis, CPU-friendly.
+  * :class:`DistributedProgram` — shard_map runtime (:class:`repro.launch.
+    train_distributed.DistributedTrainer`): per-replica shards on a device
+    mesh, ppermute gossip from a precompiled pairing pool.
+  * :class:`PipelineProgram`    — routed pipeline (:class:`repro.pipeline.
+    PipelineTrainer`): §3.1 random routing + per-stage §3.2 gossip.
+
+Each adapter owns exactly three concerns: batch-layout conversion, the
+checkpoint pytree round trip (``state_pytree`` / ``load_state_pytree``), and
+the static :class:`~repro.comm.bytes_model.CommCost` of one outer step.  All
+training math stays in the wrapped runtime.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import CommConfig, bytes_model
+from repro.core import metrics as metrics_lib
+from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
+from repro.core.outer import OuterState
+from repro.models import model as model_api
+from repro.models.common import values_of
+from repro.models.config import ModelConfig
+from repro.optim import AdamWState
+from repro.parallel.sharding import ShardCtx
+from repro.pipeline import PipelineTrainer
+from repro.pipeline.runner import init_stage_params
+
+PyTree = Any
+
+__all__ = ["GossipProgram", "DistributedProgram", "PipelineProgram"]
+
+
+def _one_replica(tree: PyTree) -> PyTree:
+    """abstract single-replica view of a stacked tree (for byte costing)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree
+    )
+
+
+def _cost(tree_one: PyTree, comm: CommConfig, method: str, world: int):
+    if method in ("none", "fsdp"):
+        return None
+    return bytes_model.outer_step_cost(
+        tree_one, comm, method=method, world=world
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stacked simulation
+# ---------------------------------------------------------------------------
+
+
+class GossipProgram:
+    """Stacked-simulation runtime: :class:`GossipTrainer` under one jit."""
+
+    def __init__(
+        self, cfg: ModelConfig, tcfg: TrainerConfig, *, replicas: int, seed: int = 0
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.replicas = replicas
+        self.seed = seed
+        ctx = ShardCtx.local()
+
+        def loss_fn(params, batch, rng):
+            return model_api.loss_fn(params, cfg, batch, ctx)[0]
+
+        self.trainer = GossipTrainer(tcfg, loss_fn)
+        self._inner_jit = jax.jit(self.trainer.inner_step)
+        self._eval_jit = jax.jit(
+            lambda th, b, r: jnp.mean(self.trainer.eval_loss(th, b, r))
+        )
+
+    def init_state(self, example_batch: dict) -> TrainState:
+        one = values_of(model_api.init_params(jax.random.PRNGKey(self.seed), self.cfg))
+        stacked = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (self.replicas,) + v.shape), one
+        )
+        return self.trainer.init(stacked)
+
+    def inner_step(self, state, batch, rng):
+        return self._inner_jit(state, batch, rng)
+
+    def maybe_outer_step(self, state):
+        if self.trainer.should_sync(state):
+            return self.trainer.outer_step(state), True
+        return state, False
+
+    def eval_step(self, state, batch, rng) -> float:
+        return float(self._eval_jit(state.theta, batch, rng))
+
+    def weight_std(self, state) -> float:
+        return float(metrics_lib.replica_weight_std(state.theta))
+
+    def state_pytree(self, state: TrainState) -> dict:
+        return {
+            "theta": state.theta,
+            "opt": {"mu": state.opt.mu, "nu": state.opt.nu, "count": state.opt.count},
+            "outer": {
+                "phi": state.outer.phi,
+                "delta": state.outer.delta,
+                "step": state.outer.step,
+            },
+            "inner_step": state.inner_step,
+        }
+
+    def load_state_pytree(self, state: TrainState, tree: dict) -> TrainState:
+        return TrainState(
+            theta=tree["theta"],
+            opt=AdamWState(
+                mu=tree["opt"]["mu"], nu=tree["opt"]["nu"],
+                count=jnp.asarray(tree["opt"]["count"]),
+            ),
+            outer=OuterState(
+                phi=tree["outer"]["phi"], delta=tree["outer"]["delta"],
+                step=jnp.asarray(tree["outer"]["step"]),
+            ),
+            inner_step=jnp.asarray(tree["inner_step"]),
+        )
+
+    def comm_cost(self):
+        one = jax.eval_shape(
+            lambda: values_of(
+                model_api.init_params(jax.random.PRNGKey(0), self.cfg)
+            )
+        )
+        return _cost(one, self.tcfg.comm, self.tcfg.outer.method, self.replicas)
+
+
+# ---------------------------------------------------------------------------
+# shard_map runtime
+# ---------------------------------------------------------------------------
+
+
+class DistributedProgram:
+    """Mesh runtime: wraps a configured ``DistributedTrainer``.
+
+    Stacked ``(R, B, S)`` loader batches are flattened to the global
+    replica-major ``(R*B, S)`` rows the shard_map step consumes."""
+
+    def __init__(self, trainer):
+        self.trainer = trainer
+        self.replicas = trainer.plan.replicas
+
+    @staticmethod
+    def _to_global(batch: dict) -> dict:
+        return {
+            k: jnp.asarray(np.asarray(v).reshape(-1, np.asarray(v).shape[-1]))
+            for k, v in batch.items()
+        }
+
+    def init_state(self, example_batch: dict):
+        return self.trainer.init_state(self._to_global(example_batch))
+
+    def inner_step(self, state, batch, rng):
+        return self.trainer.inner_step(state, self._to_global(batch))
+
+    def maybe_outer_step(self, state):
+        return self.trainer.maybe_outer_step(state)
+
+    def eval_step(self, state, batch, rng) -> float:
+        losses = self.trainer.eval_loss(state, self._to_global(batch))
+        return float(jnp.mean(losses))
+
+    def weight_std(self, state) -> float:
+        return float(metrics_lib.replica_weight_std(state["theta"]))
+
+    def state_pytree(self, state) -> dict:
+        tree = {
+            "theta": state["theta"],
+            "opt": {
+                "mu": state["opt"].mu, "nu": state["opt"].nu,
+                "count": state["opt"].count,
+            },
+            "phi": state["phi"],
+            "delta": state["delta"],
+            "outer_step": state["outer_step"],
+            "inner_step": np.int64(state["inner_step"]),
+        }
+        if "phi_pre" in state:
+            tree["phi_pre"] = state["phi_pre"]
+        return tree
+
+    def load_state_pytree(self, state, tree) -> dict:
+        b = self.trainer.bundle
+        put = jax.device_put
+        new = dict(
+            state,
+            theta=put(tree["theta"], b.theta_shardings),
+            opt=AdamWState(
+                mu=put(tree["opt"]["mu"], b.opt_shardings.mu),
+                nu=put(tree["opt"]["nu"], b.opt_shardings.nu),
+                count=put(jnp.asarray(tree["opt"]["count"]), b.opt_shardings.count),
+            ),
+            phi=put(tree["phi"], b.theta_shardings),
+            delta=put(tree["delta"], b.theta_shardings),
+            outer_step=put(
+                jnp.asarray(tree["outer_step"]), state["outer_step"].sharding
+            ),
+            inner_step=int(tree["inner_step"]),
+        )
+        if "phi_pre" in tree:
+            new["phi_pre"] = put(tree["phi_pre"], b.theta_shardings)
+        elif "phi_pre" in state:
+            # resuming WITH --overlap from a checkpoint written without it:
+            # the partner's φ was never pre-sent, so bootstrap from our own
+            # restored φ (self-copy), NOT the random-init φ_0 sitting in the
+            # freshly-initialized state — that would drag mean_phi halfway
+            # back to init on the first outer step.
+            new["phi_pre"] = jax.tree.map(jnp.copy, new["phi"])
+        return new
+
+    def comm_cost(self):
+        one = _one_replica(self.trainer.theta_struct())
+        return _cost(
+            one, self.trainer.comm_cfg, self.trainer.outer_cfg.method, self.replicas
+        )
+
+
+# ---------------------------------------------------------------------------
+# Routed pipeline
+# ---------------------------------------------------------------------------
+
+
+class PipelineProgram:
+    """Routed-pipeline runtime: §3.1 routing + per-stage §3.2 gossip."""
+
+    def __init__(self, trainer: PipelineTrainer):
+        self.trainer = trainer
+        self.replicas = trainer.replicas
+
+    def init_state(self, example_batch: dict) -> dict:
+        return self.trainer.init(jax.random.PRNGKey(self.trainer.seed))
+
+    def inner_step(self, state, batch, rng):
+        state, loss = self.trainer.train_step(state, batch)
+        return state, {"loss": jnp.asarray(loss)}
+
+    def maybe_outer_step(self, state):
+        return self.trainer.maybe_outer_step(state)
+
+    def eval_step(self, state, batch, rng) -> float:
+        return float(self.trainer.eval_loss(state["params"], batch))
+
+    def weight_std(self, state) -> float:
+        return self.trainer.weight_std(state)
+
+    def state_pytree(self, state) -> dict:
+        tree = {
+            "params": state["params"],
+            "opt": [
+                {"mu": o.mu, "nu": o.nu, "count": o.count} for o in state["opt"]
+            ],
+            "step": np.int64(state["step"]),
+        }
+        if "outer" in state:
+            tree["outer"] = {
+                "phi": state["outer"]["phi"],
+                "delta": state["outer"]["delta"],
+                "step": np.int64(state["outer"]["step"]),
+            }
+        return tree
+
+    def load_state_pytree(self, state, tree) -> dict:
+        new = {
+            "params": list(tree["params"]),
+            "opt": [
+                AdamWState(mu=o["mu"], nu=o["nu"], count=jnp.asarray(o["count"]))
+                for o in tree["opt"]
+            ],
+            "step": int(tree["step"]),
+        }
+        if "outer" in tree:
+            new["outer"] = {
+                "phi": list(tree["outer"]["phi"]),
+                "delta": list(tree["outer"]["delta"]),
+                "step": int(tree["outer"]["step"]),
+            }
+        elif "outer" in state:
+            # warm-starting gossip from a method=none checkpoint: slow
+            # weights start AT the restored fast weights (fresh look-ahead),
+            # zero momentum, outer counter aligned so the next sync fires at
+            # the next m-step boundary
+            m = self.trainer.outer.inner_steps
+            new["outer"] = {
+                "phi": [jax.tree.map(jnp.copy, p) for p in new["params"]],
+                "delta": [jax.tree.map(jnp.zeros_like, p) for p in new["params"]],
+                "step": new["step"] // m,
+            }
+        return new
+
+    def comm_cost(self):
+        tr = self.trainer
+        if not tr.outer_enabled:
+            return None
+        # one replica's payload = all of its per-stage parameters; the stage
+        # trees from init_stage_params are already single-replica
+        one = {
+            f"stage{s}": jax.eval_shape(
+                lambda s=s: values_of(init_stage_params(
+                    jax.random.PRNGKey(0), tr.cfg, s, tr.num_stages
+                ))
+            )
+            for s in range(tr.num_stages)
+        }
+        return _cost(one, tr.comm, tr.outer.method, tr.replicas)

@@ -1,0 +1,246 @@
+"""The one training loop driving every runtime (see DESIGN.md §2).
+
+Owns the runtime-agnostic half of training:
+
+  * the step loop with warmup/eval cadence,
+  * wall-clock + tokens/s throughput accounting,
+  * comm-bytes accounting from :mod:`repro.comm.bytes_model` (per outer
+    sync: payload bytes, blocking bytes, messages),
+  * a JSONL telemetry event stream (``run_start`` / ``step`` / ``outer`` /
+    ``eval`` / ``ckpt`` / ``run_end`` events, one JSON object per line),
+  * periodic checkpointing with FULL resume: program state (θ/φ/δ/opt/step
+    counters via ``TrainProgram.state_pytree``) plus the loop's own PRNG keys
+    and step cursor; the data loader is fast-forwarded deterministically
+    (``make_loader(start_step)``), so a resumed run reproduces the
+    uninterrupted loss trajectory exactly (tested).
+
+Per-step PRNG keys are ``fold_in(base, t)`` rather than a split chain, so the
+stream at step t is independent of eval cadence and survives resume without
+replaying t splits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt_lib
+from repro.train.program import TrainProgram
+
+__all__ = ["LoopConfig", "TrainLoop", "make_loop"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    """Runtime-agnostic knobs of the training loop."""
+
+    steps: int
+    eval_every: int = 0         # 0: never evaluate mid-run
+    seed: int = 0               # base of the per-step PRNG fold-in streams
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0         # 0: only the final save (when ckpt_dir set)
+    ckpt_keep: int = 3          # retained periodic checkpoints
+    resume: bool = False        # restore from latest ckpt under ckpt_dir
+    log_jsonl: str | None = None  # telemetry stream path (appended on resume)
+    log: bool = False           # human-readable progress prints
+    run_name: str = "train"     # tag in telemetry events
+
+
+class TrainLoop:
+    """Drive a :class:`~repro.train.program.TrainProgram` end to end.
+
+    ``make_loader(start_step)`` must return the deterministic stacked-batch
+    stream beginning at ``start_step`` (see :func:`repro.data.shard_iterator`);
+    ``eval_set`` is a fixed list of stacked batches (may be empty).
+    """
+
+    def __init__(
+        self,
+        program: TrainProgram,
+        make_loader: Callable[[int], Iterator[dict]],
+        cfg: LoopConfig,
+        *,
+        eval_set: list[dict] | None = None,
+    ):
+        self.program = program
+        self.make_loader = make_loader
+        self.cfg = cfg
+        self.eval_set = eval_set or []
+        self._jsonl = None
+
+    # -- telemetry -----------------------------------------------------------
+
+    def _emit(self, event: str, **fields) -> None:
+        if self._jsonl is None:
+            return
+        rec = {"event": event, "run": self.cfg.run_name, **fields}
+        self._jsonl.write(json.dumps(rec) + "\n")
+        self._jsonl.flush()
+
+    # -- checkpointing -------------------------------------------------------
+
+    def _save(self, step: int, state, rngs: dict) -> str:
+        tree = {
+            "program": self.program.state_pytree(state),
+            "loop": {"step": np.int64(step), **rngs},
+        }
+        path = ckpt_lib.save(
+            self.cfg.ckpt_dir, step, tree, keep=self.cfg.ckpt_keep
+        )
+        self._emit("ckpt", step=step, path=path)
+        return path
+
+    def _try_resume(self, state):
+        """Returns (state, start_step, rngs) — restored when possible."""
+        cfg = self.cfg
+        base = {
+            "train_key": jax.random.PRNGKey(cfg.seed + 1),
+            "eval_key": jax.random.PRNGKey(cfg.seed + 777),
+        }
+        if not (cfg.resume and cfg.ckpt_dir):
+            return state, 0, base
+        step = ckpt_lib.latest_step(cfg.ckpt_dir)
+        if step is None:
+            return state, 0, base
+        tree = ckpt_lib.restore(cfg.ckpt_dir, step)
+        state = self.program.load_state_pytree(state, tree["program"])
+        rngs = {
+            "train_key": jnp.asarray(tree["loop"]["train_key"]),
+            "eval_key": jnp.asarray(tree["loop"]["eval_key"]),
+        }
+        return state, int(tree["loop"]["step"]), rngs
+
+    # -- the loop ------------------------------------------------------------
+
+    def run(self) -> dict[str, Any]:
+        cfg = self.cfg
+        if cfg.log_jsonl:
+            self._jsonl = open(cfg.log_jsonl, "a")
+
+        # init against an example batch from a THROWAWAY iterator so training
+        # itself consumes the exact stream from start_step on
+        state = self.program.init_state(next(self.make_loader(0)))
+        state, start_step, rngs = self._try_resume(state)
+        loader = self.make_loader(start_step)
+
+        cost = self.program.comm_cost()
+        self._emit(
+            "run_start",
+            program=type(self.program).__name__,
+            replicas=self.program.replicas,
+            steps=cfg.steps,
+            start_step=start_step,
+            resumed=start_step > 0,
+            comm=cost.as_dict() if cost else None,
+        )
+
+        losses: list[float] = []
+        evals: list[tuple[int, float]] = []
+        weight_stds: list[tuple[int, float]] = []
+        outer_syncs = 0
+        comm_bytes = 0
+        blocking_bytes = 0
+        total_tokens = 0
+        t0 = time.time()
+
+        for t in range(start_step, cfg.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(loader).items()}
+            step_t0 = time.time()
+            state, metrics = self.program.inner_step(
+                state, batch, jax.random.fold_in(rngs["train_key"], t)
+            )
+            loss = float(jnp.mean(metrics["loss"]))
+            losses.append(loss)
+            total_tokens += int(np.prod(batch["tokens"].shape))
+            state, synced = self.program.maybe_outer_step(state)
+            dt = time.time() - step_t0
+            self._emit(
+                "step", step=t + 1, loss=loss, dt_s=round(dt, 6),
+                tokens_per_s=round(total_tokens / max(time.time() - t0, 1e-9), 1),
+            )
+            if synced:
+                outer_syncs += 1
+                if cost is not None:
+                    comm_bytes += cost.payload_bytes
+                    blocking_bytes += cost.blocking_bytes
+                self._emit(
+                    "outer", step=t + 1, sync_index=outer_syncs,
+                    payload_bytes=cost.payload_bytes if cost else 0,
+                    blocking_bytes=cost.blocking_bytes if cost else 0,
+                )
+            if cfg.eval_every and (t + 1) % cfg.eval_every == 0 and self.eval_set:
+                ev = float(np.mean([
+                    self.program.eval_step(
+                        state, b, jax.random.fold_in(rngs["eval_key"], t)
+                    )
+                    for b in self.eval_set
+                ]))
+                wstd = float(self.program.weight_std(state))
+                evals.append((t + 1, ev))
+                weight_stds.append((t + 1, wstd))
+                self._emit("eval", step=t + 1, eval_loss=ev, weight_std=wstd)
+                if cfg.log:
+                    print(
+                        f"step {t+1}: train={loss:.4f} eval={ev:.4f} "
+                        f"wstd={wstd:.6f} ({time.time()-t0:.0f}s)", flush=True
+                    )
+            if cfg.ckpt_dir and cfg.ckpt_every and (t + 1) % cfg.ckpt_every == 0:
+                self._save(t + 1, state, rngs)
+
+        wall = time.time() - t0
+        already_saved = (
+            cfg.ckpt_every and cfg.steps % cfg.ckpt_every == 0
+        )
+        if cfg.ckpt_dir and cfg.steps > start_step and not already_saved:
+            self._save(cfg.steps, state, rngs)
+        final_std = float(self.program.weight_std(state))
+        tokens_per_s = total_tokens / max(wall, 1e-9)
+        summary = {
+            "steps_run": cfg.steps - start_step,
+            "start_step": start_step,
+            "wall_s": wall,
+            "tokens_per_s": tokens_per_s,
+            "outer_syncs": outer_syncs,
+            "comm_bytes": comm_bytes,
+            "blocking_bytes": blocking_bytes,
+            "blocking_fraction": (
+                blocking_bytes / comm_bytes if comm_bytes else 0.0
+            ),
+            "final_weight_std": final_std,
+        }
+        self._emit("run_end", **summary)
+        if self._jsonl is not None:
+            self._jsonl.close()
+            self._jsonl = None
+        return {
+            "losses": losses,
+            "evals": evals,
+            "weight_stds": weight_stds,
+            "state": state,
+            "comm": cost.as_dict() if cost else None,
+            **summary,
+        }
+
+
+def make_loop(
+    program: TrainProgram, loader_cfg, cfg: LoopConfig, *, n_eval: int = 2
+) -> TrainLoop:
+    """Standard loop assembly shared by the launcher CLIs: train stream from
+    ``loader_cfg`` (a :class:`repro.data.LoaderConfig`, fast-forwardable via
+    ``start_step``), eval stream from the ``seed + 777`` convention."""
+    from repro.data import eval_batches, shard_iterator
+
+    eval_cfg = dataclasses.replace(loader_cfg, seed=loader_cfg.seed + 777)
+    return TrainLoop(
+        program,
+        lambda start: shard_iterator(loader_cfg, start_step=start),
+        cfg,
+        eval_set=eval_batches(eval_cfg, n_eval) if cfg.eval_every else [],
+    )

@@ -1,0 +1,77 @@
+"""The :class:`TrainProgram` protocol — the contract between a runtime and
+the unified :class:`~repro.train.loop.TrainLoop`.
+
+A *program* owns the compiled step functions and the runtime-specific state
+layout (stacked simulation, shard_map mesh, routed pipeline); the *loop* owns
+everything runtime-agnostic: the step loop, eval cadence, wall-clock and
+tokens/s accounting, comm-bytes accounting, the JSONL telemetry stream and
+checkpoint/resume.  Batches always arrive stacked — ``{tokens, labels}`` of
+shape ``(replicas, per_replica_batch, seq)`` from :func:`repro.data.
+shard_iterator`; a program that wants a different layout (the shard_map
+runtime consumes global ``(R*B, S)`` rows) converts internally.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+from repro.comm.bytes_model import CommCost
+
+PyTree = Any
+
+__all__ = ["TrainProgram"]
+
+
+@runtime_checkable
+class TrainProgram(Protocol):
+    """What a runtime must provide to be driven by :class:`TrainLoop`."""
+
+    #: number of gossip replicas (the leading axis of stacked batches)
+    replicas: int
+
+    def init_state(self, example_batch: dict) -> Any:
+        """Build (and compile against) the initial training state.
+
+        ``example_batch`` is a stacked batch used only for shapes — the loop
+        draws it from a throwaway iterator so training consumes the exact
+        deterministic stream from ``start_step`` onward."""
+        ...
+
+    def inner_step(self, state: Any, batch: dict, rng: jax.Array) -> tuple[Any, dict]:
+        """One local optimizer step on every replica; returns (state, metrics)
+        where ``metrics["loss"]`` holds per-replica losses."""
+        ...
+
+    def maybe_outer_step(self, state: Any) -> tuple[Any, bool]:
+        """Run the outer (gossip/all-reduce) step iff due; returns
+        (state, synced)."""
+        ...
+
+    def eval_step(self, state: Any, batch: dict, rng: jax.Array) -> float:
+        """Grad-free mean eval loss across replicas for one stacked batch."""
+        ...
+
+    def weight_std(self, state: Any) -> float:
+        """Cross-replica weight std (paper Fig. 3B / Fig. 4A diagnostic)."""
+        ...
+
+    def state_pytree(self, state: Any) -> Any:
+        """Checkpoint view: a plain pytree (dicts/lists/arrays only) holding
+        EVERYTHING needed to resume — θ, φ, δ, inner-opt moments, step
+        counters.  Must round-trip through :mod:`repro.checkpoint`."""
+        ...
+
+    def load_state_pytree(self, state: Any, tree: Any) -> Any:
+        """Rebuild runtime state from a restored checkpoint pytree.
+
+        ``state`` is a freshly-initialized state (``init_state`` has already
+        run) so programs can reuse its structure/shardings/compiled fns."""
+        ...
+
+    def comm_cost(self) -> CommCost | None:
+        """Static per-replica cost of ONE outer step (bytes/messages/blocking
+        split) under the configured codec, or None when the runtime never
+        communicates (method="none")."""
+        ...
