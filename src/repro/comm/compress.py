@@ -9,7 +9,10 @@ wire array, so the message count of the exchange never grows with compression:
   * ``int8``  — per-chunk affine quantization: each chunk of ``chunk`` values
     is mapped to uint8 with an fp32 (scale, min) pair; the fp32 metadata is
     bitcast to bytes and concatenated onto the quantized payload, keeping the
-    whole thing one uint8 wire array (~3.97× on fp32 at chunk=1024).
+    whole thing one uint8 wire array (~3.97× on fp32 at chunk=1024).  The
+    quantize/dequantize math runs through the kernel-dispatch layer
+    (:func:`repro.kernels.ops.int8_quantize` — a fused Pallas kernel on TPU,
+    its jnp twin elsewhere); the byte-level wire packing stays here.
 
 Codecs are stateless value transforms — safe inside jit/vmap/shard_map.  The
 optional error-feedback hook (:meth:`Codec.encode_with_residual`) accumulates
@@ -23,6 +26,9 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+from repro.kernels.dispatch import KernelConfig
 
 __all__ = [
     "CommConfig",
@@ -132,15 +138,19 @@ class CastCodec(Codec):
 class Int8Codec(Codec):
     """Per-chunk affine uint8 quantization with fp32 (scale, min) metadata.
 
-    The metadata is bitcast to uint8 and appended to the quantized values so
-    the wire stays a single contiguous byte array (one message per buffer).
+    The quantize/dequantize math is the dispatched kernel op (fused Pallas on
+    TPU, jnp twin elsewhere — selected by ``kernel_cfg``); this class owns
+    the wire layout: metadata is bitcast to uint8 and appended to the
+    quantized values so the wire stays a single contiguous byte array (one
+    message per buffer).
     """
 
     name = "int8"
     _META_BYTES_PER_CHUNK = 8  # fp32 scale + fp32 min
 
-    def __init__(self, chunk: int = 1024):
+    def __init__(self, chunk: int = 1024, kernel_cfg: "KernelConfig | None" = None):
         self.chunk = int(chunk)
+        self.kernel_cfg = kernel_cfg
 
     def _nchunks(self, size: int) -> int:
         return -(-size // self.chunk)
@@ -153,12 +163,10 @@ class Int8Codec(Codec):
         # edge-pad (repeat the last value) so padding never widens the tail
         # chunk's [min, max] range and thus never degrades its scale
         x = jnp.pad(buf.astype(jnp.float32), (0, nc * self.chunk - n), mode="edge")
-        x = x.reshape(nc, self.chunk)
-        lo = x.min(axis=1, keepdims=True)
-        scale = (x.max(axis=1, keepdims=True) - lo) / 255.0
-        safe = jnp.where(scale > 0.0, scale, 1.0)
-        q = jnp.clip(jnp.round((x - lo) / safe), 0.0, 255.0).astype(jnp.uint8)
-        meta = jnp.concatenate([safe[:, 0], lo[:, 0]])              # (2·nc,) fp32
+        q, safe, lo = kernel_ops.int8_quantize(
+            x.reshape(nc, self.chunk), config=self.kernel_cfg
+        )
+        meta = jnp.concatenate([safe, lo])                          # (2·nc,) fp32
         meta_bytes = jax.lax.bitcast_convert_type(meta, jnp.uint8)  # (2·nc, 4)
         return jnp.concatenate([q.reshape(-1), meta_bytes.reshape(-1)])
 
@@ -166,12 +174,13 @@ class Int8Codec(Codec):
         if not _is_float(dtype):
             return wire
         nc = self._nchunks(size)
-        q = wire[: nc * self.chunk].reshape(nc, self.chunk).astype(jnp.float32)
+        q = wire[: nc * self.chunk].reshape(nc, self.chunk)
         meta = jax.lax.bitcast_convert_type(
             wire[nc * self.chunk :].reshape(2 * nc, 4), jnp.float32
         )
-        scale, lo = meta[:nc, None], meta[nc:, None]
-        x = q * scale + lo
+        x = kernel_ops.int8_dequantize(
+            q, meta[:nc], meta[nc:], config=self.kernel_cfg
+        )
         return x.reshape(-1)[:size].astype(dtype)
 
     def wire_bytes(self, size, dtype):
@@ -184,8 +193,11 @@ class Int8Codec(Codec):
 CODECS = ("none", "fp16", "bf16", "int8")
 
 
-def get_codec(cfg: CommConfig | str) -> Codec:
-    """Codec instance for a :class:`CommConfig` (or bare codec name)."""
+def get_codec(cfg: CommConfig | str, kernel_cfg: KernelConfig | None = None) -> Codec:
+    """Codec instance for a :class:`CommConfig` (or bare codec name).
+
+    ``kernel_cfg`` selects the int8 quantize/dequantize implementation
+    (Pallas kernel vs jnp twin); None uses the dispatch default."""
     if isinstance(cfg, str):
         cfg = CommConfig(codec=cfg)
     cfg.validate()
@@ -195,4 +207,4 @@ def get_codec(cfg: CommConfig | str) -> Codec:
         return CastCodec("float16")
     if cfg.codec == "bf16":
         return CastCodec("bfloat16")
-    return Int8Codec(chunk=cfg.chunk)
+    return Int8Codec(chunk=cfg.chunk, kernel_cfg=kernel_cfg)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.comm import CommConfig
 from repro.core import metrics as metrics_lib
 from repro.core import outer as outer_lib
+from repro.kernels.dispatch import KernelConfig
 from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
 
 PyTree = Any
@@ -37,6 +38,9 @@ class TrainerConfig:
     # stacked trainer applies lossy codecs to the partner's values exactly as
     # the distributed wire would, so compression ablations run in simulation.
     comm: CommConfig = dataclasses.field(default_factory=CommConfig)
+    # Kernel dispatch for the fused outer update (repro.kernels.dispatch);
+    # the model forward's choice lives on ModelConfig.kernels.
+    kernels: KernelConfig = dataclasses.field(default_factory=KernelConfig)
     # FSDP/DDP baseline: all-reduce (mean) gradients across replicas EVERY
     # inner step — the fully-synchronous comparison point in the paper.
     sync_grads: bool = False
@@ -111,7 +115,7 @@ class GossipTrainer:
         must pass a precomputed table (a clear error is raised otherwise)."""
         new_outer, new_theta = outer_lib.outer_step_stacked(
             state.outer, state.theta, self.cfg.outer, partner=partner,
-            comm_cfg=self.cfg.comm,
+            comm_cfg=self.cfg.comm, kernel_cfg=self.cfg.kernels,
         )
         return TrainState(
             theta=new_theta, opt=state.opt, outer=new_outer, inner_step=state.inner_step

@@ -48,6 +48,8 @@ import jax.numpy as jnp
 from repro.comm import CommConfig
 from repro.comm import exchange as exchange_lib
 from repro.core import pairing
+from repro.kernels import ops as kernel_ops
+from repro.kernels.dispatch import KernelConfig
 
 PyTree = Any
 
@@ -173,8 +175,15 @@ def noloco_momentum_update(
     alpha: float,
     beta: float,
     gamma: float,
+    kernel_cfg: KernelConfig | None = None,
 ) -> tuple[PyTree, PyTree]:
     """Eqs. 2–3 given the group means. Returns (phi_next, delta_next).
+
+    The memory-bound update runs through the kernel-dispatch layer
+    (:func:`repro.kernels.ops.noloco_update_pytree`): the fused Pallas kernel
+    writes (φ′, δ′) in one pass over each leaf, the jnp twin is the
+    elementwise reference — selected by ``kernel_cfg`` (threaded from
+    ``TrainerConfig.kernels`` / the runtimes).
 
     Sign note: the paper's Eq. 2 writes ``− (β/n) Σ Δ`` with ``Δ = θ − φ``
     (Eq. 1), but its own Appendix A (Eq. 32-34) and the DiLoCo/look-ahead
@@ -183,18 +192,10 @@ def noloco_momentum_update(
     the fast weights.  The literal Eq. 2 sign provably diverges (our tests
     check this); we follow the appendix.
     """
-
-    def _upd(p, d, md, mp):
-        d32 = d.astype(jnp.float32)
-        new_d = (
-            alpha * d32
-            + beta * md.astype(jnp.float32)
-            - gamma * (p.astype(jnp.float32) - mp.astype(jnp.float32))
-        )
-        new_p = p.astype(jnp.float32) + new_d
-        return new_p.astype(p.dtype), new_d.astype(d.dtype)
-
-    return _unzip_pairs(phi, jax.tree.map(_upd, phi, delta_mom, mean_delta, mean_phi))
+    return kernel_ops.noloco_update_pytree(
+        phi, delta_mom, mean_delta, mean_phi,
+        alpha=alpha, beta=beta, gamma=gamma, config=kernel_cfg,
+    )
 
 
 def diloco_momentum_update(
@@ -229,6 +230,7 @@ def outer_step(
     *,
     phi_prefetched: PyTree | None = None,
     comm_next: exchange_lib.Communicator | None = None,
+    kernel_cfg: KernelConfig | None = None,
 ) -> tuple[OuterState, PyTree, PyTree | None]:
     """One outer step against any :class:`~repro.comm.Communicator`.
 
@@ -265,6 +267,7 @@ def outer_step(
             alpha=cfg.alpha,
             beta=cfg.beta,
             gamma=cfg.resolved_gamma(),
+            kernel_cfg=kernel_cfg,
         )
         phi_presend = (
             exchange_lib.presend(comm_next, phi_next) if comm_next is not None else None
@@ -304,6 +307,7 @@ def outer_step_stacked(
     *,
     partner: jax.Array | None = None,
     comm_cfg: CommConfig | None = None,
+    kernel_cfg: KernelConfig | None = None,
 ) -> tuple[OuterState, PyTree]:
     """One outer step where replicas are stacked on axis 0 of every leaf.
 
@@ -328,7 +332,7 @@ def outer_step_stacked(
         comm = exchange_lib.StackedGather(jnp.asarray(partner), comm_cfg)
     elif cfg.method == "diloco":
         comm = exchange_lib.StackedGather(None, comm_cfg)
-    new_state, new_theta, _ = outer_step(state, theta, cfg, comm)
+    new_state, new_theta, _ = outer_step(state, theta, cfg, comm, kernel_cfg=kernel_cfg)
     return new_state, new_theta
 
 
@@ -356,6 +360,7 @@ def outer_step_sharded(
     perm: Sequence[tuple[int, int]] | None = None,
     fuse_payload: bool = False,
     comm_cfg: CommConfig | None = None,
+    kernel_cfg: KernelConfig | None = None,
 ) -> tuple[OuterState, PyTree]:
     """One outer step inside ``shard_map``: each program instance holds ONE
     replica's (φ, δ, θ) shards.
@@ -379,7 +384,7 @@ def outer_step_sharded(
         comm = exchange_lib.ShardedPermute(axis_names, perm, comm_cfg)
     elif cfg.method == "diloco":
         comm = exchange_lib.AllReduce(axis_names)
-    new_state, new_theta, _ = outer_step(state, theta, cfg, comm)
+    new_state, new_theta, _ = outer_step(state, theta, cfg, comm, kernel_cfg=kernel_cfg)
     return new_state, new_theta
 
 
@@ -393,6 +398,7 @@ def outer_step_sharded_overlapped(
     perm: Sequence[tuple[int, int]],
     perm_next: Sequence[tuple[int, int]],
     comm_cfg: CommConfig | None = None,
+    kernel_cfg: KernelConfig | None = None,
 ) -> tuple[OuterState, PyTree, PyTree]:
     """NoLoCo outer step with the φ-exchange OVERLAP of §3.2.
 
@@ -416,6 +422,7 @@ def outer_step_sharded_overlapped(
     comm = exchange_lib.ShardedPermute(axis_names, perm, comm_cfg)
     comm_next = exchange_lib.ShardedPermute(axis_names, perm_next, comm_cfg)
     new_state, new_theta, phi_pre = outer_step(
-        state, theta, cfg, comm, phi_prefetched=phi_prefetched, comm_next=comm_next
+        state, theta, cfg, comm, phi_prefetched=phi_prefetched,
+        comm_next=comm_next, kernel_cfg=kernel_cfg,
     )
     return new_state, new_theta, phi_pre

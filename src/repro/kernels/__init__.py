@@ -1,14 +1,19 @@
-"""Pallas TPU kernels for the perf-critical compute hot-spots:
+"""Pallas TPU kernels + the dispatch layer that makes them the production path.
 
-  flash_attention  — causal/sliding-window attention (every attention arch)
-  noloco_update    — fused NoLoCo outer step Eq. 1-3 (memory-bound)
+  flash_attention  — causal/sliding-window attention, GQA-native fold
   ssd_scan         — Mamba-2 SSD intra-chunk quadratic form
+  rglru_scan       — RG-LRU linear recurrence (log-step doubling scan)
+  noloco_update    — fused NoLoCo outer step Eqs. 2–3 (memory-bound)
+  quantize         — int8 per-chunk affine wire codec kernels
 
-Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
-wrapper), ref.py (pure-jnp oracle). Validated with interpret=True on CPU;
-TPU v5e is the TARGET (MXU-aligned 128 blocks, VMEM tiling).
+Layering: <name>.py (pl.pallas_call + BlockSpec, array-level), ref.py
+(pure-jnp twins + oracles), dispatch.py (KernelConfig + the op registry),
+ops.py (public custom_vjp'd wrappers the models/core/comm consumers call).
+Validated with interpret=True on CPU; TPU v5e is the TARGET (MXU-aligned 128
+blocks, VMEM tiling).  See DESIGN.md §6 for the dispatch table.
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.dispatch import KernelConfig
 
-__all__ = ["ops", "ref"]
+__all__ = ["dispatch", "ops", "ref", "KernelConfig"]

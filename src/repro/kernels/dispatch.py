@@ -1,0 +1,235 @@
+"""Kernel dispatch: ONE table from op name to (Pallas impl, jnp fallback).
+
+This is the production compute path's switchboard.  Every perf-critical op
+is registered here with two interchangeable implementations:
+
+  * ``pallas`` — the Pallas TPU kernel (array-level, takes ``interpret=``);
+  * ``jnp``    — the memory-bounded pure-jnp twin from :mod:`repro.kernels.
+    ref` (identical signature minus ``interpret``), which doubles as the
+    reference for parity tests and as the ``custom_vjp`` backward of the
+    differentiable ops (see :mod:`repro.kernels.ops`).
+
+:class:`KernelConfig` selects between them:
+
+  * ``impl="auto"``   — Pallas when the default jax backend is TPU, jnp
+    otherwise (so CPU CI never pays interpret-mode overhead);
+  * ``impl="pallas"`` — force the kernels (with ``interpret`` resolving to
+    True off-TPU, False on TPU unless pinned);
+  * ``impl="jnp"``    — force the fallback everywhere.
+
+The resolved choice is STATIC python control flow: it is fixed at trace
+time, so a jitted program contains exactly one of the two lowerings.
+Consumers thread a ``KernelConfig`` explicitly (``ModelConfig.kernels``,
+``TrainerConfig.kernels``, ``--impl``/``--interpret`` launcher flags); code
+without an explicit config uses the process-wide default set by
+:func:`set_default_config` (launchers call it once at startup, before any
+tracing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Mapping
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels import flash_attention as flash_attention_mod
+from repro.kernels import noloco_update as noloco_update_mod
+from repro.kernels import quantize as quantize_mod
+from repro.kernels import rglru_scan as rglru_scan_mod
+from repro.kernels import ssd_scan as ssd_scan_mod
+
+__all__ = [
+    "KernelConfig",
+    "KernelOp",
+    "register",
+    "get_op",
+    "registry",
+    "dispatch",
+    "default_config",
+    "set_default_config",
+]
+
+IMPLS = ("auto", "pallas", "jnp")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Which implementation each registered op runs with.
+
+    ``impl``:      "auto" | "pallas" | "jnp" (see module docstring).
+    ``interpret``: Pallas interpret mode; None resolves to ``not on-TPU`` so
+                   forced-pallas runs still work on CPU (tests/CI) while TPU
+                   gets compiled kernels.
+    """
+
+    impl: str = "auto"
+    interpret: bool | None = None
+
+    def validate(self) -> None:
+        if self.impl not in IMPLS:
+            raise ValueError(f"unknown kernel impl {self.impl!r}; options: {IMPLS}")
+
+    def resolved_impl(self) -> str:
+        """"pallas" or "jnp" with "auto" resolved against the jax backend."""
+        self.validate()
+        if self.impl == "auto":
+            return "pallas" if _on_tpu() else "jnp"
+        return self.impl
+
+    def resolved_interpret(self) -> bool:
+        if self.interpret is not None:
+            return bool(self.interpret)
+        return not _on_tpu()
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.resolved_impl() == "pallas"
+
+
+_DEFAULT_CONFIG = KernelConfig()
+
+
+def default_config() -> KernelConfig:
+    """The process-wide config used when a consumer passes ``config=None``."""
+    return _DEFAULT_CONFIG
+
+
+def set_default_config(cfg: KernelConfig) -> None:
+    """Set the process-wide default (launchers, once at startup — the choice
+    is baked into traces, so flipping it after compilation has no effect on
+    already-jitted programs)."""
+    cfg.validate()
+    global _DEFAULT_CONFIG
+    _DEFAULT_CONFIG = cfg
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOp:
+    """One dispatchable op: a Pallas kernel and its jnp twin.
+
+    ``pallas`` takes the same array arguments/static kwargs as ``jnp`` plus a
+    trailing ``interpret`` keyword.  ``consumers`` documents every production
+    call site (kept in sync by tests + DESIGN.md §6).
+    """
+
+    name: str
+    pallas: Callable[..., Any]
+    jnp: Callable[..., Any]
+    pallas_file: str
+    consumers: tuple[str, ...]
+
+
+_REGISTRY: dict[str, KernelOp] = {}
+
+
+def register(
+    name: str,
+    *,
+    pallas: Callable[..., Any],
+    jnp: Callable[..., Any],
+    pallas_file: str,
+    consumers: tuple[str, ...] = (),
+) -> KernelOp:
+    if name in _REGISTRY:
+        raise ValueError(f"kernel op {name!r} already registered")
+    op = KernelOp(name, pallas, jnp, pallas_file, tuple(consumers))
+    _REGISTRY[name] = op
+    return op
+
+
+def get_op(name: str) -> KernelOp:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel op {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def registry() -> Mapping[str, KernelOp]:
+    return dict(_REGISTRY)
+
+
+def dispatch(name: str, config: KernelConfig | None = None) -> Callable[..., Any]:
+    """The implementation of ``name`` under ``config`` (default config when
+    None).  The Pallas branch comes pre-bound with the resolved ``interpret``
+    flag; static per-op kwargs (mode, window, ...) are passed by the caller."""
+    cfg = config if config is not None else default_config()
+    op = get_op(name)
+    if cfg.resolved_impl() == "pallas":
+        return functools.partial(op.pallas, interpret=cfg.resolved_interpret())
+    return op.jnp
+
+
+# ---------------------------------------------------------------------------
+# The production op table
+# ---------------------------------------------------------------------------
+
+register(
+    "flash_attention",
+    pallas=flash_attention_mod.pallas_flash_attention,
+    jnp=ref.jnp_flash_attention,
+    pallas_file="kernels/flash_attention.py",
+    consumers=(
+        "models/attention.py::apply_attention (training / encoder / prefill)",
+        "kernels/ops.py::flash_attention (custom_vjp wrapper)",
+    ),
+)
+
+register(
+    "ssd_chunk",
+    pallas=ssd_scan_mod.ssd_chunk_kernel,
+    jnp=ref.jnp_ssd_chunk_intra,
+    pallas_file="kernels/ssd_scan.py",
+    consumers=(
+        "models/ssd.py::ssd_chunked (via kernels/ops.py::ssd_chunk)",
+    ),
+)
+
+register(
+    "rglru_scan",
+    pallas=rglru_scan_mod.pallas_rglru_scan,
+    jnp=ref.jnp_rglru_scan,
+    pallas_file="kernels/rglru_scan.py",
+    consumers=(
+        "models/rglru.py::apply_rglru (via kernels/ops.py::rglru_scan)",
+    ),
+)
+
+register(
+    "noloco_update",
+    pallas=noloco_update_mod.noloco_update_flat,
+    jnp=ref.reference_noloco_update,
+    pallas_file="kernels/noloco_update.py",
+    consumers=(
+        "core/outer.py::noloco_momentum_update (via kernels/ops.py::noloco_update_pytree)",
+    ),
+)
+
+register(
+    "int8_quantize",
+    pallas=quantize_mod.pallas_int8_quantize,
+    jnp=ref.jnp_int8_quantize,
+    pallas_file="kernels/quantize.py",
+    consumers=("comm/compress.py::Int8Codec.encode",),
+)
+
+register(
+    "int8_dequantize",
+    pallas=quantize_mod.pallas_int8_dequantize,
+    jnp=ref.jnp_int8_dequantize,
+    pallas_file="kernels/quantize.py",
+    consumers=("comm/compress.py::Int8Codec.decode",),
+)

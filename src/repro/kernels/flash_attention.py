@@ -1,10 +1,15 @@
-"""Pallas TPU flash attention (causal / sliding-window / full), GQA-ready.
+"""Pallas TPU flash attention (causal / sliding-window / full), GQA-native.
 
-Grid: (batch·heads, q_blocks, kv_blocks) with the kv dim innermost and
+Grid: (batch·kv_heads, q_blocks, kv_blocks) with the kv dim innermost and
 "arbitrary" (sequential) so the online-softmax state lives in VMEM scratch
 across kv iterations.  BlockSpecs tile Q/K/V into (block_q|block_kv, head_dim)
-VMEM tiles; MXU-aligned defaults block_q = block_kv = 128, head_dim padded to
-a multiple of 128 by the ops.py wrapper when needed.
+VMEM tiles; MXU-aligned defaults block_q = block_kv = 128.
+
+GQA is handled WITHOUT materializing K/V at query-head width: the G = H/KV
+query heads sharing one kv head are folded into the q row dimension
+(rows enumerate (group, position) pairs, position = row % ``q_stride``), so
+K/V buffers stay at kv-head width all the way into the kernel and each K/V
+VMEM tile is reused by all G query heads of its grid row.
 
 VMEM working set per program:
     q (bq, d) + k (bk, d) + v (bk, d) + acc (bq, d) f32 + m/l (bq,) f32
@@ -24,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tpu_compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -37,6 +44,7 @@ def _kernel(
     block_q: int,
     block_kv: int,
     kv_len: int,
+    q_stride: int,
     scale: float,
 ):
     qi = pl.program_id(1)
@@ -55,7 +63,10 @@ def _kernel(
 
     s = q @ k.T                                       # (bq, bk)
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    # rows enumerate (group, position) pairs when GQA groups are folded in;
+    # position within the head is row % q_stride (identity when unfolded)
+    row = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    q_pos = row % q_stride
     k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
     valid = k_pos < kv_len
     if mode == "causal":
@@ -80,17 +91,18 @@ def _kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("mode", "window", "block_q", "block_kv", "interpret"),
+    static_argnames=("mode", "window", "block_q", "block_kv", "q_stride", "interpret"),
 )
 def flash_attention_bhsd(
-    q: jax.Array,   # (BH, Sq, D)  — batch and heads flattened
-    k: jax.Array,   # (BH, Sk, D)  — kv heads already expanded to q heads
+    q: jax.Array,   # (BH, Sq, D)  — batch and (kv) heads flattened
+    k: jax.Array,   # (BH, Sk, D)
     v: jax.Array,   # (BH, Sk, D)
     *,
     mode: str = "causal",
     window: int = 0,
     block_q: int = 128,
     block_kv: int = 128,
+    q_stride: int | None = None,   # per-head q length when GQA groups folded
     interpret: bool = True,
 ) -> jax.Array:
     bh, sq, d = q.shape
@@ -106,6 +118,8 @@ def flash_attention_bhsd(
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
     nq = q.shape[1] // block_q
     nk = k.shape[1] // block_kv
+    if q_stride is None:
+        q_stride = q.shape[1]
 
     kernel = functools.partial(
         _kernel,
@@ -114,6 +128,7 @@ def flash_attention_bhsd(
         block_q=block_q,
         block_kv=block_kv,
         kv_len=sk,
+        q_stride=q_stride,
         scale=scale,
     )
     out = pl.pallas_call(
@@ -131,9 +146,62 @@ def flash_attention_bhsd(
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(q, k, v)
     return out[:, :sq]
+
+
+def pallas_flash_attention(
+    q: jax.Array,   # (B, Sq, H, D)
+    k: jax.Array,   # (B, Sk, KV, D)
+    v: jax.Array,   # (B, Sk, KV, D)
+    *,
+    mode: str = "causal",
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """GQA flash attention at model layout.
+
+    When H % KV == 0 (all assigned archs) the G = H/KV query heads per kv
+    head are FOLDED into the q row dimension: K/V are flattened to
+    (B·KV, Sk, D) without any head expansion, and the kernel recovers the
+    per-head position as ``row % q_stride``.  The legacy gather-expand path
+    remains only for non-divisible head counts.
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+
+    if h % kvh == 0:
+        g = h // kvh
+        sq_pad = sq + (-sq) % block_q
+        qt = q.transpose(0, 2, 1, 3)                   # (B, H, Sq, D)
+        if sq_pad != sq:
+            qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+        qf = qt.reshape(b * kvh, g * sq_pad, d)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+        out = flash_attention_bhsd(
+            qf, kf, vf, mode=mode, window=window,
+            block_q=block_q, block_kv=block_kv, q_stride=sq_pad,
+            interpret=interpret,
+        )
+        out = out.reshape(b, kvh, g, sq_pad, d)[:, :, :, :sq]
+        return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+    # non-divisible head counts: gather-expand K/V to query-head width
+    head_map = (jnp.arange(h) * kvh) // h
+    ke = jnp.take(k, head_map, axis=2)
+    ve = jnp.take(v, head_map, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = ke.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = ve.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    out = flash_attention_bhsd(
+        qf, kf, vf, mode=mode, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,16 +1,19 @@
-"""Fused NoLoCo outer update (Eqs. 1–3) as a Pallas kernel.
+"""Fused NoLoCo outer update (Eqs. 2–3) as a Pallas kernel.
 
-The outer step is purely memory-bound: the naive jnp expression makes ~7 HBM
-round-trips per parameter (Δ_self, group means, momentum update, weight
-update).  The kernel streams all five operands tile-by-tile through VMEM and
-writes (φ′, δ′) in ONE pass — the update's arithmetic intensity is ~1 FLOP/B,
-so HBM traffic IS its runtime.
+The outer step is purely memory-bound: the naive jnp expression builds the
+momentum update and the weight update as separate HBM-materialized temps
+(~10 round trips per parameter).  The kernel streams the four operands
+tile-by-tile through VMEM and writes (φ′, δ′) in ONE pass — 4 reads + 2
+writes, and the update's arithmetic intensity is ~1 FLOP/B so HBM traffic IS
+its runtime.
 
-    Δ_i   = θ_i − φ_i
-    δ'    = α δ + β·½(Δ_i + Δ_j) − γ(φ_i − ½(φ_i + φ_j))
-    φ'    = φ_i + δ'
+    δ'  = α δ + β·mean(Δ) − γ(φ − mean(φ))
+    φ'  = φ + δ'
 
-(with the appendix-consistent +β sign; see core/outer.py).
+over the GROUP STATISTICS ``(mean_delta, mean_phi)`` delivered by the gossip
+exchange — the same cut every Communicator backend produces, so one kernel
+serves the stacked, sharded and pipeline runtimes (with the appendix-
+consistent +β sign; see core/outer.py).
 """
 
 from __future__ import annotations
@@ -24,18 +27,12 @@ from jax.experimental import pallas as pl
 BLOCK = 4096  # 1-D tile (lane-aligned multiple of 128)
 
 
-def _kernel(theta_ref, phi_ref, delta_mom_ref, theta_p_ref, phi_p_ref,
+def _kernel(phi_ref, delta_mom_ref, mean_d_ref, mean_phi_ref,
             phi_out_ref, delta_out_ref, *, alpha, beta, gamma):
-    theta = theta_ref[...].astype(jnp.float32)
     phi = phi_ref[...].astype(jnp.float32)
     dmom = delta_mom_ref[...].astype(jnp.float32)
-    theta_p = theta_p_ref[...].astype(jnp.float32)
-    phi_p = phi_p_ref[...].astype(jnp.float32)
-
-    d_self = theta - phi
-    d_partner = theta_p - phi_p
-    mean_d = 0.5 * (d_self + d_partner)
-    mean_phi = 0.5 * (phi + phi_p)
+    mean_d = mean_d_ref[...].astype(jnp.float32)
+    mean_phi = mean_phi_ref[...].astype(jnp.float32)
 
     new_delta = alpha * dmom + beta * mean_d - gamma * (phi - mean_phi)
     new_phi = phi + new_delta
@@ -48,20 +45,19 @@ def _kernel(theta_ref, phi_ref, delta_mom_ref, theta_p_ref, phi_p_ref,
     jax.jit, static_argnames=("alpha", "beta", "gamma", "interpret")
 )
 def noloco_update_flat(
-    theta: jax.Array,      # (N,) this replica's fast weights
-    phi: jax.Array,        # (N,) slow weights
-    delta_mom: jax.Array,  # (N,) outer momentum
-    theta_partner: jax.Array,
-    phi_partner: jax.Array,
+    phi: jax.Array,         # (N,) slow weights
+    delta_mom: jax.Array,   # (N,) outer momentum
+    mean_delta: jax.Array,  # (N,) group-mean outer gradient
+    mean_phi: jax.Array,    # (N,) group-mean slow weights
     *,
     alpha: float,
     beta: float,
     gamma: float,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
-    n = theta.shape[0]
+    n = phi.shape[0]
     pad = (-n) % BLOCK
-    args = (theta, phi, delta_mom, theta_partner, phi_partner)
+    args = (phi, delta_mom, mean_delta, mean_phi)
     if pad:
         args = tuple(jnp.pad(a, (0, pad)) for a in args)
     grid = (args[0].shape[0] // BLOCK,)
@@ -70,11 +66,11 @@ def noloco_update_flat(
     phi_out, delta_out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[spec] * 5,
+        in_specs=[spec] * 4,
         out_specs=[spec, spec],
         out_shape=[
-            jax.ShapeDtypeStruct(args[1].shape, phi.dtype),
-            jax.ShapeDtypeStruct(args[2].shape, delta_mom.dtype),
+            jax.ShapeDtypeStruct(args[0].shape, phi.dtype),
+            jax.ShapeDtypeStruct(args[1].shape, delta_mom.dtype),
         ],
         interpret=interpret,
     )(*args)

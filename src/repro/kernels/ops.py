@@ -1,20 +1,79 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public, differentiable wrappers around the dispatched kernels.
 
-``interpret=True`` by default: this box is CPU-only and the TPU is the
-TARGET; on a real TPU pass interpret=False (kernels use MXU-aligned 128
-blocks and explicit VMEM BlockSpecs — see each kernel's module docstring).
+Each op here is the PRODUCTION entry its consumers call (models, core/outer,
+comm): it resolves a :class:`~repro.kernels.dispatch.KernelConfig`, picks the
+Pallas kernel or the jnp twin from the dispatch table, and — for the ops that
+sit inside the training forward — wraps the choice in ``jax.custom_vjp``
+whose backward is the vjp of the jnp twin.  Pallas kernels have no autodiff
+rules; the twin computes the SAME function with online-softmax / chunked
+recompute, so gradients are exact and memory-bounded regardless of which
+implementation ran the forward.
+
+``interpret`` resolution: True off-TPU, False on TPU (overridable via
+``KernelConfig.interpret``) — this box is CPU-only and the TPU is the TARGET.
 """
 
 from __future__ import annotations
 
+import functools
+import math
+
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.noloco_update import noloco_update_flat
-from repro.kernels.ssd_scan import ssd_chunk_kernel
+from repro.kernels import ref
+from repro.kernels.dispatch import KernelConfig, default_config, dispatch
 
-__all__ = ["flash_attention", "noloco_update_pytree", "ssd_chunk"]
+__all__ = [
+    "flash_attention",
+    "ssd_chunk",
+    "rglru_scan",
+    "noloco_update_pytree",
+    "int8_quantize",
+    "int8_dequantize",
+]
+
+
+def _resolve(config: KernelConfig | None) -> tuple[str, bool]:
+    cfg = config if config is not None else default_config()
+    return cfg.resolved_impl(), cfg.resolved_interpret()
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (differentiable; jnp online-softmax backward)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _attention_op(mode, window, block_q, block_kv, impl, interpret, unroll):
+    if impl == "pallas":
+        fwd_impl = functools.partial(
+            dispatch("flash_attention", KernelConfig("pallas", interpret)),
+            mode=mode, window=window, block_q=block_q, block_kv=block_kv,
+        )
+    else:
+        fwd_impl = functools.partial(
+            dispatch("flash_attention", KernelConfig("jnp")),
+            mode=mode, window=window, unroll=unroll,
+        )
+    jnp_twin = functools.partial(
+        ref.jnp_flash_attention, mode=mode, window=window, unroll=unroll
+    )
+
+    @jax.custom_vjp
+    def op(q, k, v):
+        return fwd_impl(q, k, v)
+
+    def fwd(q, k, v):
+        return fwd_impl(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(jnp_twin, q, k, v)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
 
 
 def flash_attention(
@@ -26,57 +85,65 @@ def flash_attention(
     window: int = 0,
     block_q: int = 128,
     block_kv: int = 128,
-    interpret: bool = True,
+    unroll: bool = False,
+    config: KernelConfig | None = None,
 ) -> jax.Array:
-    """GQA flash attention: kv heads are expanded to q heads (gather), batch
-    and heads flattened into the kernel's grid dim."""
-    b, sq, h, d = q.shape
-    kvh = k.shape[2]
-    head_map = (jnp.arange(h) * kvh) // h
-    k = jnp.take(k, head_map, axis=2)
-    v = jnp.take(v, head_map, axis=2)
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
-    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
-    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
-    out = flash_attention_bhsd(
-        qf, kf, vf, mode=mode, window=window,
-        block_q=block_q, block_kv=block_kv, interpret=interpret,
-    )
-    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    """GQA flash attention over canonical (arange) positions.
 
-
-def noloco_update_pytree(
-    theta, phi, delta_mom, theta_partner, phi_partner,
-    *, alpha: float, beta: float, gamma: float, interpret: bool = True,
-):
-    """Fused Eq. 1–3 over whole pytrees: leaves are raveled, concatenated
-    conceptually per-leaf (each leaf gets its own kernel launch — leaves are
-    large enough that launch overhead is negligible)."""
-    flat, treedef = jax.tree.flatten(theta)
-    phis = jax.tree.leaves(phi)
-    dms = jax.tree.leaves(delta_mom)
-    tps = jax.tree.leaves(theta_partner)
-    pps = jax.tree.leaves(phi_partner)
-    new_phi, new_delta = [], []
-    for t, p, d, tp_, pp_ in zip(flat, phis, dms, tps, pps):
-        shape = p.shape
-        np_, nd_ = noloco_update_flat(
-            t.ravel(), p.ravel(), d.ravel(), tp_.ravel(), pp_.ravel(),
-            alpha=alpha, beta=beta, gamma=gamma, interpret=interpret,
-        )
-        new_phi.append(np_.reshape(shape))
-        new_delta.append(nd_.reshape(shape))
-    return (
-        jax.tree.unflatten(treedef, new_phi),
-        jax.tree.unflatten(treedef, new_delta),
+    K/V stay at kv-head width end to end: the Pallas path folds the G = H/KV
+    query heads per kv head into the q row dimension, the jnp path groups the
+    einsums — neither materializes K/V expanded to all query heads.
+    ``unroll`` unrolls the jnp path's KV scan (dry-run cost analysis)."""
+    impl, interpret = _resolve(config)
+    return _attention_op(mode, window, block_q, block_kv, impl, interpret, unroll)(
+        q, k, v
     )
 
 
-def ssd_chunk(x, dt, a, b_mat, c_mat, *, chunk: int, interpret: bool = True):
-    """Full SSD via the Pallas intra-chunk kernel + jnp inter-chunk scan.
-    Matches ref.reference_ssd. x (B,S,H,P), dt (B,S,H), a (H,), B/C (B,S,N)."""
-    import math
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2): dispatched intra-chunk quadratic form + jnp inter-chunk scan
+# ---------------------------------------------------------------------------
 
+
+@functools.lru_cache(maxsize=None)
+def _ssd_intra_op(impl, interpret):
+    if impl == "pallas":
+        fwd_impl = dispatch("ssd_chunk", KernelConfig("pallas", interpret))
+    else:
+        fwd_impl = dispatch("ssd_chunk", KernelConfig("jnp"))
+    jnp_twin = ref.jnp_ssd_chunk_intra
+
+    @jax.custom_vjp
+    def op(xc, dtc, a, bc, cc):
+        return fwd_impl(xc, dtc, a, bc, cc)
+
+    def fwd(xc, dtc, a, bc, cc):
+        return fwd_impl(xc, dtc, a, bc, cc), (xc, dtc, a, bc, cc)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(jnp_twin, *res)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def ssd_chunk(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)
+    a: jax.Array,      # (H,)
+    b_mat: jax.Array,  # (B, S, N)
+    c_mat: jax.Array,  # (B, S, N)
+    *,
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+    unroll: bool = False,
+    config: KernelConfig | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full chunked SSD: dispatched intra-chunk O(Q²) form + cheap sequential
+    inter-chunk state recurrence in jnp.  Matches ref.reference_ssd.
+    Returns (y (B,S,H,P) in x.dtype, final_state (B,H,P,N) f32)."""
+    impl, interpret = _resolve(config)
     bsz, s, h, p = x.shape
     n = b_mat.shape[-1]
     q = min(chunk, s)
@@ -93,9 +160,9 @@ def ssd_chunk(x, dt, a, b_mat, c_mat, *, chunk: int, interpret: bool = True):
     bc = b_mat.reshape(bsz, nc, q, n)
     cc = c_mat.reshape(bsz, nc, q, n)
 
-    y_diag, states = ssd_chunk_kernel(xc, dtc, a, bc, cc, interpret=interpret)
+    y_diag, states = _ssd_intra_op(impl, interpret)(xc, dtc, a, bc, cc)
 
-    # inter-chunk state recurrence (cheap, sequential)
+    # inter-chunk state recurrence (cheap, sequential, differentiates normally)
     da = dtc.astype(jnp.float32) * a[None, None, None, :]
     chunk_decay = jnp.exp(jnp.sum(da, axis=2))            # (B,nc,H)
     cums = jnp.cumsum(da, axis=2)
@@ -103,11 +170,19 @@ def ssd_chunk(x, dt, a, b_mat, c_mat, *, chunk: int, interpret: bool = True):
     def body(prev, inp):
         st, dec = inp
         new = prev * dec[:, :, None, None] + st
-        return new, prev
+        return new, prev  # emit the state ENTERING this chunk
 
+    s0 = (
+        jnp.zeros((bsz, h, n, p), jnp.float32)
+        if initial_state is None
+        # caches carry (B,H,P,N); the kernel's state layout is (B,H,N,P)
+        else initial_state.astype(jnp.float32).transpose(0, 1, 3, 2)
+    )
     final, prev_states = jax.lax.scan(
-        body, jnp.zeros((bsz, h, n, p), jnp.float32),
+        body,
+        s0,
         (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=unroll,
     )
     prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,N,P)
 
@@ -118,3 +193,117 @@ def ssd_chunk(x, dt, a, b_mat, c_mat, *, chunk: int, interpret: bool = True):
     y = (y_diag.astype(jnp.float32) + y_off).reshape(bsz, nc * q, h, p)[:, :s]
     final = final.transpose(0, 1, 3, 2)                    # (B,H,P,N)
     return y.astype(x.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear recurrence (differentiable; associative-scan backward)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _rglru_op(impl, interpret):
+    if impl == "pallas":
+        fwd_impl = dispatch("rglru_scan", KernelConfig("pallas", interpret))
+    else:
+        fwd_impl = dispatch("rglru_scan", KernelConfig("jnp"))
+    jnp_twin = ref.jnp_rglru_scan
+
+    @jax.custom_vjp
+    def op(a, b):
+        return fwd_impl(a, b)
+
+    def fwd(a, b):
+        return fwd_impl(a, b), (a, b)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(jnp_twin, *res)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def rglru_scan(
+    a: jax.Array,   # (B, S, W) f32 per-step decay
+    b: jax.Array,   # (B, S, W) f32 per-step input
+    *,
+    config: KernelConfig | None = None,
+) -> jax.Array:
+    """Inclusive scan of h_t = a_t·h_{t-1} + b_t over axis 1 (zero h_0)."""
+    impl, interpret = _resolve(config)
+    return _rglru_op(impl, interpret)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Fused NoLoCo outer update (Eqs. 2–3 over group statistics)
+# ---------------------------------------------------------------------------
+
+
+def noloco_update_pytree(
+    phi,
+    delta_mom,
+    mean_delta,
+    mean_phi,
+    *,
+    alpha: float,
+    beta: float,
+    gamma: float,
+    config: KernelConfig | None = None,
+):
+    """Fused Eqs. 2–3 over whole pytrees; returns (phi_next, delta_next).
+
+    The update is elementwise, so leaves are raveled per-leaf into the 1-D
+    kernel (leaves are large enough that launch overhead is negligible;
+    stacked leaves with a leading replica axis ravel correctly too).  Not
+    differentiated — the outer step sits outside jax.grad."""
+    impl, interpret = _resolve(config)
+    flat_phi, treedef = jax.tree.flatten(phi)
+    dms = jax.tree.leaves(delta_mom)
+    mds = jax.tree.leaves(mean_delta)
+    mps = jax.tree.leaves(mean_phi)
+    if impl == "pallas":
+        fn = dispatch("noloco_update", KernelConfig("pallas", interpret))
+        new_phi, new_delta = [], []
+        for p, d, md, mp in zip(flat_phi, dms, mds, mps):
+            np_, nd_ = fn(
+                p.ravel(), d.ravel(), md.ravel(), mp.ravel(),
+                alpha=alpha, beta=beta, gamma=gamma,
+            )
+            new_phi.append(np_.reshape(p.shape))
+            new_delta.append(nd_.reshape(p.shape))
+    else:
+        fn = dispatch("noloco_update", KernelConfig("jnp"))
+        pairs = [
+            fn(p, d, md, mp, alpha=alpha, beta=beta, gamma=gamma)
+            for p, d, md, mp in zip(flat_phi, dms, mds, mps)
+        ]
+        new_phi = [a for a, _ in pairs]
+        new_delta = [b for _, b in pairs]
+    return (
+        jax.tree.unflatten(treedef, new_phi),
+        jax.tree.unflatten(treedef, new_delta),
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 wire codec kernels (consumed by comm/compress.py)
+# ---------------------------------------------------------------------------
+
+
+def int8_quantize(x: jax.Array, *, config: KernelConfig | None = None):
+    """(NC, CHUNK) f32 → (q uint8, scale f32 (NC,), lo f32 (NC,))."""
+    impl, interpret = _resolve(config)
+    if impl == "pallas":
+        return dispatch("int8_quantize", KernelConfig("pallas", interpret))(x)
+    return dispatch("int8_quantize", KernelConfig("jnp"))(x)
+
+
+def int8_dequantize(
+    q: jax.Array, scale: jax.Array, lo: jax.Array,
+    *, config: KernelConfig | None = None,
+):
+    """Inverse of :func:`int8_quantize` → (NC, CHUNK) f32."""
+    impl, interpret = _resolve(config)
+    if impl == "pallas":
+        return dispatch("int8_dequantize", KernelConfig("pallas", interpret))(q, scale, lo)
+    return dispatch("int8_dequantize", KernelConfig("jnp"))(q, scale, lo)

@@ -1,0 +1,11 @@
+"""Pallas-TPU API compat: the compiler-params dataclass was renamed
+``TPUCompilerParams`` → ``CompilerParams`` across jax releases; resolve it
+once here so every kernel module works on both."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

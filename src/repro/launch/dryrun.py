@@ -39,6 +39,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import model as model_api
 from repro.models.common import unzip
 from repro.optim import AdamWConfig
+from repro.parallel import compat
 from repro.parallel import plans as plans_lib
 from repro.parallel import steps as steps_lib
 
@@ -74,7 +75,7 @@ def _build_lowered(cfg, plan, shape: InputShape, kind: str, mesh):
     theta_abs, _ = unzip(params_abs)
     specs = input_specs(cfg, shape)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if kind == "train":
             opt_abs = jax.eval_shape(
                 lambda v: steps_lib.init_opt_state(v, plan.replicas), theta_abs

@@ -11,15 +11,13 @@ this module never touches jax device state; the dry-run sets
 
 from __future__ import annotations
 
-import jax
+from repro.parallel import compat
 
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.configs import registry
 from repro.configs.shapes import SHAPES
 from repro.core import pairing
+from repro.parallel import compat
 from repro.core.outer import OuterConfig
 from repro.launch import dryrun as dr
 from repro.launch import roofline as rf
@@ -56,7 +57,7 @@ def outer_variant(arch: str, overlapped: bool, mesh) -> dict:
     ocfg = OuterConfig(method="noloco")
     model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         rep_sh = jax.ShapeDtypeStruct((plan.replicas,), jnp.int32)
         if not overlapped:
             fn = steps_lib.build_outer_step(plan, mesh, pspecs, ocfg, perm)

@@ -22,10 +22,14 @@ import argparse
 import json
 from typing import Any
 
+import dataclasses
+
 from repro.comm import CommConfig
 from repro.configs import registry
 from repro.core import OuterConfig, TrainerConfig
 from repro.data import LoaderConfig
+from repro.kernels import dispatch as kernel_dispatch
+from repro.kernels.dispatch import KernelConfig
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, warmup_cosine
 from repro.train import GossipProgram, LoopConfig, make_loop
@@ -40,10 +44,12 @@ def method_config(
     inner_steps: int | None = None,
     seed: int = 0,
     comm: CommConfig | None = None,
+    kernels: KernelConfig | None = None,
 ) -> TrainerConfig:
     """Paper §4 hyper-parameters: β=0.7 both; NoLoCo α=0.5, m=50;
     DiLoCo α=0.3, m=100; inner AdamW + clip 1.0 + warmup-cosine.
-    ``comm`` selects the gossip wire codec / payload fusing (repro.comm)."""
+    ``comm`` selects the gossip wire codec / payload fusing (repro.comm);
+    ``kernels`` the outer-update implementation (repro.kernels.dispatch)."""
     sched = warmup_cosine(inner_lr, total_steps, warmup_steps=warmup)
     inner = AdamWConfig(lr=sched, weight_decay=0.1, clip_norm=1.0)
     if method == "noloco":
@@ -57,6 +63,7 @@ def method_config(
     else:  # pragma: no cover
         raise ValueError(method)
     return TrainerConfig(outer=outer, inner=inner, comm=comm or CommConfig(),
+                         kernels=kernels or KernelConfig(),
                          sync_grads=method == "fsdp")
 
 
@@ -82,6 +89,8 @@ def run_training(
     log_jsonl: str | None = None,
     codec: str = "none",
     fuse: bool = True,
+    impl: str = "auto",
+    interpret: bool | None = None,
 ) -> dict[str, Any]:
     """Train; returns loss/weight-std trajectories and final eval loss.
 
@@ -93,13 +102,20 @@ def run_training(
 
     ``total_steps`` fixes the LR-schedule horizon independently of ``steps``
     (default: equal).  Runs that will be interrupted and resumed must pin it,
-    so stopping early does not change the schedule the checkpoint embeds."""
+    so stopping early does not change the schedule the checkpoint embeds.
+
+    ``impl``/``interpret`` select the kernel implementation for the model
+    forward AND the fused outer update (repro.kernels.dispatch), threaded
+    explicitly — this library entry never touches the process-wide dispatch
+    default (the CLI installs that itself via kernel_config_from_args)."""
     n_eval = eval_batches
+    kcfg = KernelConfig(impl=impl, interpret=interpret)
+    cfg = dataclasses.replace(cfg, kernels=kcfg)
     tcfg = method_config(
         method, inner_lr=inner_lr, total_steps=total_steps or steps,
         warmup=warmup if warmup is not None else max((total_steps or steps) // 10, 1),
         inner_steps=inner_steps, seed=seed,
-        comm=CommConfig(codec=codec, fuse=fuse),
+        comm=CommConfig(codec=codec, fuse=fuse), kernels=kcfg,
     )
     program = GossipProgram(cfg, tcfg, replicas=replicas, seed=seed)
     loop = make_loop(
@@ -127,6 +143,20 @@ def add_engine_flags(ap: argparse.ArgumentParser) -> None:
                     help="restore the latest checkpoint under --ckpt-dir")
     ap.add_argument("--log-jsonl", default=None,
                     help="append one JSON telemetry event per line to this file")
+    ap.add_argument("--impl", default="auto", choices=["auto", "pallas", "jnp"],
+                    help="kernel implementation (repro.kernels.dispatch): "
+                         "auto = Pallas on TPU, jnp elsewhere")
+    ap.add_argument("--interpret", action="store_const", const=True, default=None,
+                    help="force Pallas interpret mode (default: auto — "
+                         "interpret off-TPU, compiled on TPU)")
+
+
+def kernel_config_from_args(args) -> KernelConfig:
+    """KernelConfig from the shared --impl/--interpret flags; also installs
+    it as the process-wide dispatch default (codec paths etc.)."""
+    kcfg = KernelConfig(impl=args.impl, interpret=args.interpret)
+    kernel_dispatch.set_default_config(kcfg)
+    return kcfg
 
 
 def main() -> None:
@@ -152,6 +182,7 @@ def main() -> None:
     ap.add_argument("--out", default=None)
     add_engine_flags(ap)
     args = ap.parse_args()
+    kernel_config_from_args(args)  # process-wide default (codec paths etc.)
 
     cfg = registry.get_config(args.arch)
     if args.reduced:
@@ -164,6 +195,7 @@ def main() -> None:
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, resume=args.resume,
         log=True, log_jsonl=args.log_jsonl,
         codec=args.codec, fuse=not args.no_fuse,
+        impl=args.impl, interpret=args.interpret,
     )
     summary = {
         "arch": cfg.name, "method": args.method, "codec": args.codec,

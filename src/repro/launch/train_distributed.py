@@ -33,11 +33,13 @@ from repro.comm import CommConfig
 from repro.configs import registry
 from repro.core import pairing
 from repro.core.outer import OuterConfig
+from repro.kernels.dispatch import KernelConfig
 from repro.data import LoaderConfig
 from repro.models import model as model_api
 from repro.models.common import unzip
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig
+from repro.parallel import compat
 from repro.parallel import plans as plans_lib
 from repro.parallel import steps as steps_lib
 
@@ -54,6 +56,7 @@ class DistributedTrainer:
     outer_cfg: OuterConfig
     inner_cfg: AdamWConfig
     comm_cfg: CommConfig = dataclasses.field(default_factory=CommConfig)
+    kernel_cfg: KernelConfig = dataclasses.field(default_factory=KernelConfig)
     pairing_pool: int = 16        # precompiled random matchings, cycled
     schedule: str = "random"      # "random" pool | "hypercube" (log2 N programs)
     seed: int = 0
@@ -67,7 +70,7 @@ class DistributedTrainer:
         params = model_api.init_params(jax.random.PRNGKey(self.seed), self.cfg)
         stacked = steps_lib.stack_replicas(params, self.plan.replicas)
         vals, _ = unzip(stacked)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             self.bundle = steps_lib.build_train_step(
                 self.cfg, self.plan, self.mesh, stacked, batch_example, self.inner_cfg
             )
@@ -117,17 +120,18 @@ class DistributedTrainer:
             key_next, perm_next = self._pool_perm(outer_index + 1)
             key = (key, key_next)
         if key not in self._outer_fns:
-            with jax.set_mesh(self.mesh):
+            with compat.set_mesh(self.mesh):
                 self._outer_fns[key] = steps_lib.build_outer_step(
                     self.plan, self.mesh, self.bundle.pspecs, self.outer_cfg, perm,
                     comm_cfg=self.comm_cfg, perm_next=perm_next,
+                    kernel_cfg=self.kernel_cfg,
                 )
         return self._outer_fns[key]
 
     # -- steps ---------------------------------------------------------------
 
     def inner_step(self, state, batch):
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             batch = jax.device_put(batch, plans_lib.shardings(self.mesh, self._bspecs))
             theta, opt, metrics = self.bundle.step_fn(state["theta"], state["opt"], batch)
         state = dict(state, theta=theta, opt=opt, inner_step=state["inner_step"] + 1)
@@ -138,7 +142,7 @@ class DistributedTrainer:
             return state, False
         outer_index = state["inner_step"] // self.outer_cfg.inner_steps - 1
         fn = self._outer_fn(outer_index)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             if self.comm_cfg.overlap and self.outer_cfg.method == "noloco":
                 theta, phi, delta, phi_pre, step_c = fn(
                     state["theta"], state["phi"], state["delta"],
@@ -153,7 +157,7 @@ class DistributedTrainer:
 
     def eval_loss(self, state, batch):
         """Grad-free per-replica losses (R,) via the bundle's eval program."""
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             batch = jax.device_put(batch, plans_lib.shardings(self.mesh, self._bspecs))
             return self.bundle.eval_fn(state["theta"], batch)
 
@@ -165,7 +169,7 @@ class DistributedTrainer:
 
 
 def main() -> None:
-    from repro.launch.train import add_engine_flags
+    from repro.launch.train import add_engine_flags, kernel_config_from_args
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-small-125m")
@@ -194,12 +198,10 @@ def main() -> None:
             f"need {args.data * args.model} devices; set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=N"
         )
-    mesh = jax.make_mesh(
-        (args.data, args.model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
+    kcfg = kernel_config_from_args(args)
     cfg = registry.get_config(args.arch).reduced(
-        vocab_size=512, dtype="float32", remat=False
+        vocab_size=512, dtype="float32", remat=False, kernels=kcfg
     )
     plan = plans_lib.make_plan("gossip_dp", mesh, shape_kind="train")
 
@@ -209,6 +211,7 @@ def main() -> None:
         inner_cfg=AdamWConfig(lr=args.lr, weight_decay=0.0),
         comm_cfg=CommConfig(codec=args.codec, fuse=not args.no_fuse,
                             overlap=args.overlap),
+        kernel_cfg=kcfg,
         schedule=args.schedule, seed=args.seed,
     )
 

@@ -27,7 +27,7 @@ from repro.train import LoopConfig, PipelineProgram, make_loop
 
 
 def main() -> None:
-    from repro.launch.train import add_engine_flags
+    from repro.launch.train import add_engine_flags, kernel_config_from_args
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-small-125m")
@@ -49,10 +49,14 @@ def main() -> None:
     add_engine_flags(ap)
     args = ap.parse_args()
 
+    import dataclasses
+
+    kcfg = kernel_config_from_args(args)
     cfg = registry.get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(vocab_size=min(cfg.vocab_size, 512), remat=False,
                           dtype="float32")
+    cfg = dataclasses.replace(cfg, kernels=kcfg)
     if cfg.num_layers % args.stages:
         raise SystemExit(
             f"num_layers={cfg.num_layers} must divide into --stages={args.stages}"
@@ -66,7 +70,7 @@ def main() -> None:
         cfg, num_stages=args.stages, replicas=args.replicas,
         inner=AdamWConfig(lr=args.lr, weight_decay=0.0),
         routing=args.routing, outer=outer,
-        comm=CommConfig(codec=args.codec), seed=args.seed,
+        comm=CommConfig(codec=args.codec), kernel_cfg=kcfg, seed=args.seed,
     )
 
     loop = make_loop(

@@ -1,6 +1,13 @@
 """Attention: GQA/MQA/MHA with qk-norm, RoPE, causal / sliding-window / cross
-modes, blockwise (flash-style, O(S) memory) jnp implementation, and KV caches
-for decode.
+modes, dispatched kernels for training/prefill, and KV caches for decode.
+
+Kernel routing (see DESIGN.md §6): the training / encoder / prefill paths —
+canonical ``arange`` positions, no cache reads — go through
+``repro.kernels.ops.flash_attention`` (Pallas flash kernel or its jnp
+online-softmax twin per ``cfg.kernels``, differentiable via ``custom_vjp``).
+The cache-dependent paths (decode over ring buffers / sequence-sharded
+caches, flash-decode stats combine) keep the positions-aware
+:func:`blockwise_attention` below.
 
 Tensor parallelism: q heads are sharded over the model axis (when divisible —
 see ``ShardCtx.heads_tp``); K/V projections are small (num_kv_heads × head_dim)
@@ -18,6 +25,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.models.common import param, truncated_normal
 from repro.models.layers import apply_rope
 from repro.parallel.sharding import ShardCtx
@@ -97,8 +105,11 @@ def blockwise_attention(
     return_stats: bool = False,
     unroll: bool = False,
 ) -> jax.Array | tuple[jax.Array, jax.Array, jax.Array]:
-    """Online-softmax attention scanned over KV blocks. This is the jnp
-    production path (and the shape-semantics twin of the Pallas kernel).
+    """Online-softmax attention scanned over KV blocks — the positions-aware
+    variant used by the decode/cache paths.  kernels/ref.jnp_flash_attention
+    is the grouped canonical-positions twin of this same m/l/acc recurrence;
+    a fix to the numerics here (sentinels, l==0 guard, corr rescale) must be
+    mirrored there.
 
     With ``return_stats`` the UNNORMALIZED accumulator and the (m, l) softmax
     stats are returned — used by the sequence-sharded ("flash-decode") cache
@@ -177,6 +188,47 @@ def _expand_kv(x: jax.Array, head_map: jax.Array) -> jax.Array:
     return jnp.take(x, head_map, axis=2)
 
 
+def _dispatched_attention(
+    q: jax.Array,   # (B, Sq, H_local, D)
+    k: jax.Array,   # (B, Sk, KV, D) — FULL (replicated) kv heads
+    v: jax.Array,   # (B, Sk, KV, D)
+    cfg,
+    ctx: ShardCtx,
+    tp_h: int,
+    *,
+    mode: str,
+    window: int,
+) -> jax.Array:
+    """Training / encoder / prefill attention through the kernel-dispatch
+    layer (:func:`repro.kernels.ops.flash_attention` — Pallas or jnp twin per
+    ``cfg.kernels``, canonical arange positions).
+
+    When whole GQA groups are shard-local, the kv heads serving this shard's
+    query heads are sliced out so K/V stay at kv-head width all the way into
+    the kernel; with partial groups per shard (rare) K/V are gathered to
+    local-head width first.
+    """
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    h_local = q.shape[2]
+    g = h // kv if kv and h % kv == 0 else 0
+    if g and h_local % g == 0:
+        if tp_h > 1:
+            kv_local = h_local // g
+            start = ctx.model_index() * kv_local
+            k = jax.lax.dynamic_slice_in_dim(k, start, kv_local, 2)
+            v = jax.lax.dynamic_slice_in_dim(v, start, kv_local, 2)
+    else:
+        shard = ctx.model_index() if tp_h > 1 else jnp.zeros((), jnp.int32)
+        global_heads = shard * h_local + jnp.arange(h_local)
+        head_map = (global_heads * kv) // h
+        k = _expand_kv(k, head_map)
+        v = _expand_kv(v, head_map)
+    return kernel_ops.flash_attention(
+        q, k, v, mode=mode, window=window, unroll=cfg.unroll_scans,
+        config=cfg.kernels,
+    )
+
+
 def build_cross_cache(p: dict, cfg, encoder_out: jax.Array, ctx: ShardCtx) -> AttnCache:
     """Precompute encoder K/V once for cross-attention decode (whisper)."""
     w_k = ctx.gather_param(p["w_k"], axis=0)
@@ -205,6 +257,14 @@ def apply_attention(
     cache: AttnCache | None = None,      # prefill (S>1) or decode (S==1)
 ) -> tuple[jax.Array, AttnCache | None]:
     """Attention block: projections + (cached) attention + output projection.
+
+    Positions contract: the NO-CACHE and PREFILL paths assume CANONICAL
+    positions (``positions[i] == i``) — they route through the dispatched
+    kernel, whose causal/sliding masks are derived from row indices, while
+    ``positions`` still drives RoPE.  Every current caller satisfies this
+    (training, encoder, prefill all pass ``arange``); a future caller with
+    offset/packed positions must use :func:`blockwise_attention` (which
+    honors arbitrary position vectors) like the cache paths below do.
 
     Cache semantics:
       * ``cache is None``          — training / encoder forward.
@@ -251,18 +311,11 @@ def apply_attention(
     head_map = (global_heads * kv) // h
 
     # =====================================================================
-    # No cache: plain (training / encoder) attention
+    # No cache: plain (training / encoder) attention — dispatched kernels
     # =====================================================================
     if cache is None:
-        kv_positions = (
-            jnp.arange(k.shape[1], dtype=jnp.int32) if kv_source is not None else positions
-        )
-        out = blockwise_attention(
-            q, _expand_kv(k, head_map), _expand_kv(v, head_map),
-            positions, kv_positions,
-            mode=("full" if mode == "full" else mode),
-            window=cfg.sliding_window or 0,
-            unroll=cfg.unroll_scans,
+        out = _dispatched_attention(
+            q, k, v, cfg, ctx, tp_h, mode=mode, window=cfg.sliding_window or 0,
         )
         return _out_proj(out, w_o, ctx, tp_h), None
 
@@ -279,14 +332,11 @@ def apply_attention(
         return _out_proj(out, w_o, ctx, tp_h), cache
 
     # =====================================================================
-    # PREFILL: attend over fresh K/V, then fill the cache
+    # PREFILL: attend over fresh K/V (dispatched kernels), then fill the cache
     # =====================================================================
     if s > 1:
-        kv_positions = positions
-        out = blockwise_attention(
-            q, _expand_kv(k, head_map), _expand_kv(v, head_map),
-            positions, kv_positions, mode=mode, window=cfg.sliding_window or 0,
-            unroll=cfg.unroll_scans,
+        out = _dispatched_attention(
+            q, k, v, cfg, ctx, tp_h, mode=mode, window=cfg.sliding_window or 0,
         )
         size_local = cache.k.shape[1]
         if ctx.kv_shard_seq and ctx.tp > 1 and mode == "causal":

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.kernels.dispatch import KernelConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -65,6 +67,12 @@ class ModelConfig:
     frontend: str | None = None  # "audio" | "vision"
     frontend_dim: int = 0        # raw embedding dim produced by the stub
     frontend_tokens: int = 0     # patches / frames consumed by the decoder
+
+    # -- kernel dispatch --------------------------------------------------------
+    # Which implementation backs the compute hot-spots (attention, SSD,
+    # RG-LRU): Pallas kernels or their jnp twins.  impl="auto" resolves to
+    # Pallas on TPU and jnp elsewhere; see repro.kernels.dispatch.
+    kernels: KernelConfig = dataclasses.field(default_factory=KernelConfig)
 
     # -- numerics ---------------------------------------------------------------
     dtype: str = "bfloat16"

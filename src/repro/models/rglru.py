@@ -11,10 +11,12 @@ RG-LRU recurrence (per channel):
     a_t = a ** (c · r_t),  a = σ(Λ)         (c = 8)
     h_t = a_t · h_{t−1} + sqrt(1 − a_t²) · (i_t ⊙ u_t)
 
-Training/prefill uses ``jax.lax.associative_scan`` over the sequence (the
-recurrence is linear in h), decode is a single-step state update — both O(S)
-and O(1) memory per token, which is why recurrentgemma runs the ``long_500k``
-shape.
+Training/prefill runs the linear recurrence through the kernel-dispatch
+layer (:func:`repro.kernels.ops.rglru_scan` — the Pallas doubling-scan
+kernel in repro/kernels/rglru_scan.py or its ``associative_scan`` jnp twin
+per ``cfg.kernels``, differentiable via custom_vjp); decode is a single-step
+state update — both O(S) compute and O(1) memory per token, which is why
+recurrentgemma runs the ``long_500k`` shape.
 
 TP: the LRU width is sharded over the model axis; the recurrence is
 channelwise so it needs NO collectives — only the final row-parallel W_out
@@ -30,6 +32,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.models.common import param, truncated_normal
 from repro.parallel.sharding import ShardCtx
 
@@ -114,15 +117,10 @@ def apply_rglru(
 
     decode = cache is not None and x.shape[1] == 1
     if not decode:
-        # h_t = a_t h_{t-1} + b_t  via associative scan over S
-        def combine(c1, c2):
-            a1, b1 = c1
-            a2, b2 = c2
-            return a1 * a2, a2 * b1 + b2
-
+        # h_t = a_t h_{t-1} + b_t — dispatched linear-recurrence kernel
         if cache is not None:  # prefill continuing from an existing state
             b = b.at[:, 0].add(a[:, 0] * cache.h)
-        a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = kernel_ops.rglru_scan(a, b, config=cfg.kernels)
         new_cache = (
             RGLRUCache(conv=new_conv, h=h[:, -1]) if cache is not None else None
         )

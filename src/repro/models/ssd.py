@@ -10,9 +10,11 @@ TP: heads are sharded over the model axis (state recurrence is head-local);
 B/C projections (ngroups=1, shared across heads) are replicated; the only
 collective is the row-parallel out-proj psum.
 
-The intra-chunk quadratic form is the compute hot-spot and has a Pallas
-kernel (repro/kernels/ssd_scan.py); this module is the jnp production path
-and the kernel's shape-semantics twin.
+The intra-chunk quadratic form is the compute hot-spot; it runs through the
+kernel-dispatch layer (:func:`repro.kernels.ops.ssd_chunk` — the Pallas
+kernel in repro/kernels/ssd_scan.py or its jnp twin per ``cfg.kernels``,
+differentiable via custom_vjp).  This module owns the projections, conv,
+gating and cache plumbing around it.
 """
 
 from __future__ import annotations
@@ -23,6 +25,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+from repro.kernels.dispatch import KernelConfig
 from repro.models.common import param, truncated_normal
 from repro.parallel.sharding import ShardCtx
 
@@ -99,63 +103,18 @@ def ssd_chunked(
     chunk: int,
     initial_state: jax.Array | None = None,  # (B, H, P, N)
     unroll: bool = False,
+    config: KernelConfig | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Chunked SSD: returns (y (B,S,H,P), final_state (B,H,P,N))."""
-    bsz, s, h, p = x.shape
-    n = b_mat.shape[-1]
-    q = min(chunk, s)
-    nc = math.ceil(s / q)
-    pad = nc * q - s
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
-        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
-        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    """Chunked SSD: returns (y (B,S,H,P), final_state (B,H,P,N)).
 
-    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
-    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
-    bc = b_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
-    cc = c_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
-
-    da = dtc * a[None, None, None, :]              # (B,nc,Q,H) log-decay per step
-    cums = jnp.cumsum(da, axis=2)                  # inclusive
-    # decay kernel L[i,j] = exp(cums_i − cums_j) for i ≥ j
-    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
-    tri = jnp.tril(jnp.ones((q, q), bool))
-    l_kern = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
-
-    xdt = xc * dtc[..., None]                      # dt_j · x_j
-    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,nc,Q,Q)
-    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, l_kern, xdt)
-
-    # per-chunk end states: Σ_j exp(cums_last − cums_j) dt_j B_j ⊗ x_j
-    decay_states = jnp.exp(cums[:, :, -1:, :] - cums)          # (B,nc,Q,H)
-    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, decay_states, xdt)
-
-    # inter-chunk recurrence
-    chunk_decay = jnp.exp(cums[:, :, -1, :])                    # (B,nc,H)
-    s0 = (
-        jnp.zeros((bsz, h, p, n), jnp.float32)
-        if initial_state is None
-        else initial_state.astype(jnp.float32)
+    Thin wrapper over the dispatched :func:`repro.kernels.ops.ssd_chunk`
+    (Pallas intra-chunk kernel or jnp twin + shared inter-chunk scan).  No
+    dtype casts here: both implementations upcast to f32 per-tile, so model-
+    dtype inputs stream at native width (apply_ssd already feeds f32)."""
+    return kernel_ops.ssd_chunk(
+        x, dt, a, b_mat, c_mat,
+        chunk=chunk, initial_state=initial_state, unroll=unroll, config=config,
     )
-
-    def scan_body(prev, inp):
-        st, dec = inp
-        new = prev * dec[:, :, None, None] + st
-        return new, prev  # emit state ENTERING this chunk
-
-    final, prev_states = jax.lax.scan(
-        scan_body,
-        s0,
-        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
-        unroll=unroll,
-    )
-    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
-
-    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, prev_states, jnp.exp(cums))
-    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)[:, :s]
-    return y, final
 
 
 def apply_ssd(
@@ -193,7 +152,7 @@ def apply_ssd(
         y, final_state = ssd_chunked(
             u_heads, dt, a, b_mat, c_mat, cfg.ssm_chunk,
             initial_state=cache.state if cache is not None else None,
-            unroll=cfg.unroll_scans,
+            unroll=cfg.unroll_scans, config=cfg.kernels,
         )
         new_cache = (
             SSDCache(conv=new_conv, state=final_state) if cache is not None else None

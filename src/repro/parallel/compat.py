@@ -1,0 +1,76 @@
+"""jax-version compat shims.
+
+The repo targets current jax (``jax.shard_map`` / ``jax.set_mesh`` /
+``jax.make_mesh(axis_types=...)``), but this box runs jax 0.4.37 where those
+live under older names:
+
+  * ``shard_map``  — ``jax.experimental.shard_map.shard_map`` with the
+    replication check spelled ``check_rep`` instead of ``check_vma``.
+  * ``set_mesh``   — absent; ``jax.sharding.Mesh`` is itself a context
+    manager (``with mesh:``), which is all our callers use it for.
+  * ``make_mesh``  — exists but without ``axis_types`` (and without
+    ``jax.sharding.AxisType`` to build the argument from).
+
+Everything in the repo that touches these APIs goes through this module so
+the multidevice runtime (and its tests) works on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "make_mesh", "HAS_NATIVE_SHARD_MAP"]
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); both toggle
+    the static replication-mismatch check.
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def set_mesh(mesh: Any):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` when available,
+    the Mesh's own context-manager protocol otherwise."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)  # pragma: no cover - AbstractMesh etc.
+
+
+def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
+    """``jax.make_mesh`` with Auto axis types when the installed jax knows
+    about axis types, plain ``jax.make_mesh`` otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kind = axis_type.Explicit if explicit else axis_type.Auto
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, axis_types=(kind,) * len(axis_names)
+            )
+        except TypeError:  # pragma: no cover - jax with AxisType but old make_mesh
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -27,10 +27,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.comm import CommConfig
 from repro.core import outer as outer_lib
 from repro.core.outer import OuterConfig, OuterState
+from repro.kernels.dispatch import KernelConfig
 from repro.models import model as model_api
 from repro.models.common import unzip
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.parallel import compat
 from repro.parallel import plans as plans_lib
 from repro.parallel.plans import Plan
 
@@ -125,7 +127,7 @@ def build_loss_shard(
 
     in_specs = (param_specs, batch_specs)
     out_specs = (P(rep_entry), {"lm_loss": P(rep_entry), "aux_loss": P(rep_entry)})
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
 
@@ -217,6 +219,7 @@ def build_outer_step(
     fuse_payload: bool = False,
     comm_cfg: CommConfig | None = None,
     perm_next: list[tuple[int, int]] | None = None,
+    kernel_cfg: KernelConfig | None = None,
 ):
     """One outer step over (theta, phi, delta) -> (theta', phi', delta').
 
@@ -247,6 +250,7 @@ def build_outer_step(
             new_state, new_theta, phi_pre = outer_lib.outer_step_sharded_overlapped(
                 state, theta, _squeeze_replica(phi_pre_l), outer_cfg,
                 axis_names=rep, perm=perm, perm_next=perm_next, comm_cfg=comm_cfg,
+                kernel_cfg=kernel_cfg,
             )
             return (
                 _unsqueeze_replica(new_theta),
@@ -259,6 +263,7 @@ def build_outer_step(
         state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
         new_state, new_theta = outer_lib.outer_step_sharded(
             state, theta, outer_cfg, axis_names=rep, perm=perm, comm_cfg=comm_cfg,
+            kernel_cfg=kernel_cfg,
         )
         return (
             _unsqueeze_replica(new_theta),
@@ -270,7 +275,7 @@ def build_outer_step(
     n_params = 4 if overlapped else 3
     in_specs = (param_specs,) * n_params + (P(rep_entry),)
     out_specs = (param_specs,) * n_params + (P(rep_entry),)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
     sh = plans_lib.shardings(mesh, param_specs)
     step_sh = NamedSharding(mesh, P(rep_entry))
     return jax.jit(
@@ -313,7 +318,7 @@ def build_decode_step(
         plan.model_axis if cfg.vocab_size % plan.tp == 0 and plan.tp > 1 else None
     )
     out_specs = (P(dp_entry, None, vocab_entry), cspecs)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
     logits_sh = NamedSharding(mesh, out_specs[0])
     return jax.jit(
         fn,
@@ -352,7 +357,7 @@ def build_prefill_step(
 
     in_specs = (pspecs, cspecs, bspecs)
     out_specs = (P(dp_entry, None, None), cspecs)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
     return jax.jit(
         fn,
         in_shardings=(

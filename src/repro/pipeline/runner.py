@@ -29,6 +29,7 @@ from repro.comm import CommConfig
 from repro.core import metrics as metrics_lib
 from repro.core import pairing
 from repro.core.outer import OuterConfig, OuterState, outer_step_stacked
+from repro.kernels.dispatch import KernelConfig
 from repro.models import model as model_api
 from repro.models import transformer as tfm
 from repro.models.common import values_of
@@ -119,6 +120,7 @@ class PipelineTrainer:
     routing: str = "random"
     outer: OuterConfig | None = None
     comm: CommConfig = dataclasses.field(default_factory=CommConfig)
+    kernel_cfg: KernelConfig = dataclasses.field(default_factory=KernelConfig)
     seed: int = 0
 
     @property
@@ -245,7 +247,7 @@ class PipelineTrainer:
             )
             new_ost, new_theta = outer_step_stacked(
                 ost, state["params"][s], self.outer,
-                partner=partner, comm_cfg=self.comm,
+                partner=partner, comm_cfg=self.comm, kernel_cfg=self.kernel_cfg,
             )
             new_params.append(new_theta)
             new_phi.append(new_ost.phi)

@@ -1,12 +1,18 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle.
+
+Dispatch-level parity (pallas vs jnp twin per registered op, gradients,
+end-to-end toy-LM) lives in tests/test_dispatch.py; here each Pallas kernel
+is pinned explicitly and checked against the naive oracle."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.dispatch import KernelConfig
 
 KEY = jax.random.PRNGKey(0)
+PALLAS = KernelConfig(impl="pallas", interpret=True)
 
 
 def _qkv(b, sq, sk, h, kv, d, dtype):
@@ -31,7 +37,7 @@ def _gold_attention(q, k, v, mode, window):
 
 @pytest.mark.parametrize("shape", [
     (1, 128, 128, 4, 4, 64),
-    (2, 256, 256, 4, 2, 64),   # GQA
+    (2, 256, 256, 4, 2, 64),   # GQA (grouped fold, no K/V expansion)
     (1, 256, 256, 2, 1, 128),  # MQA, d=128
     (1, 200, 200, 2, 2, 64),   # non-block-multiple
     (1, 128, 384, 2, 2, 64),   # cross lengths
@@ -40,7 +46,7 @@ def _gold_attention(q, k, v, mode, window):
 def test_flash_attention_sweep(shape, mode, window):
     b, sq, sk, h, kv, d = shape
     q, k, v = _qkv(b, sq, sk, h, kv, d, jnp.float32)
-    out = ops.flash_attention(q, k, v, mode=mode, window=window)
+    out = ops.flash_attention(q, k, v, mode=mode, window=window, config=PALLAS)
     gold = _gold_attention(q, k, v, mode, window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(gold), atol=3e-5, rtol=1e-4)
 
@@ -48,7 +54,7 @@ def test_flash_attention_sweep(shape, mode, window):
 @pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5), (jnp.bfloat16, 3e-2)])
 def test_flash_attention_dtypes(dtype, atol):
     q, k, v = _qkv(1, 128, 128, 4, 2, 64, dtype)
-    out = ops.flash_attention(q, k, v, mode="causal")
+    out = ops.flash_attention(q, k, v, mode="causal", config=PALLAS)
     gold = _gold_attention(q, k, v, "causal", 0)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(gold, np.float32), atol=atol, rtol=1e-2
@@ -58,33 +64,35 @@ def test_flash_attention_dtypes(dtype, atol):
 @pytest.mark.parametrize("n", [100, 4096, 10_000, 50_000])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_noloco_update_sweep(n, dtype):
-    args = [
+    phi, dmom, mean_d, mean_phi = [
         jax.random.normal(jax.random.fold_in(KEY, i), (n,), jnp.float32).astype(dtype)
-        for i in range(5)
+        for i in range(4)
     ]
     p1, d1 = ops.noloco_update_pytree(
-        {"w": args[0]}, {"w": args[1]}, {"w": args[2]}, {"w": args[3]}, {"w": args[4]},
-        alpha=0.5, beta=0.7, gamma=1.0,
+        {"w": phi}, {"w": dmom}, {"w": mean_d}, {"w": mean_phi},
+        alpha=0.5, beta=0.7, gamma=1.0, config=PALLAS,
     )
-    p2, d2 = ref.reference_noloco_update(*args, alpha=0.5, beta=0.7, gamma=1.0)
+    p2, d2 = ref.reference_noloco_update(
+        phi, dmom, mean_d, mean_phi, alpha=0.5, beta=0.7, gamma=1.0
+    )
     atol = 1e-6 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(p1["w"], np.float32), np.asarray(p2, np.float32), atol=atol)
     np.testing.assert_allclose(np.asarray(d1["w"], np.float32), np.asarray(d2, np.float32), atol=atol)
 
 
 def test_noloco_kernel_matches_outer_module():
-    """Kernel must agree with the core outer optimizer (same Eq. 1-3)."""
+    """Kernel must agree with the core outer optimizer (same Eqs. 2-3)."""
     from repro.core import outer as outer_lib
 
     n = 1000
     args = [jax.random.normal(jax.random.fold_in(KEY, 10 + i), (n,)) for i in range(5)]
     theta, phi, dmom, theta_p, phi_p = args
-    p1, d1 = ops.noloco_update_pytree(
-        {"w": theta}, {"w": phi}, {"w": dmom}, {"w": theta_p}, {"w": phi_p},
-        alpha=0.5, beta=0.7, gamma=1.0,
-    )
     mean_d = {"w": 0.5 * ((theta - phi) + (theta_p - phi_p))}
     mean_phi = {"w": 0.5 * (phi + phi_p)}
+    p1, d1 = ops.noloco_update_pytree(
+        {"w": phi}, {"w": dmom}, mean_d, mean_phi,
+        alpha=0.5, beta=0.7, gamma=1.0, config=PALLAS,
+    )
     p2, d2 = outer_lib.noloco_momentum_update(
         {"w": phi}, {"w": dmom}, mean_d, mean_phi, alpha=0.5, beta=0.7, gamma=1.0
     )
@@ -104,15 +112,51 @@ def test_ssd_chunk_kernel_sweep(shape):
     a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 22), (h,)) * 0.3)
     bm = jax.random.normal(jax.random.fold_in(KEY, 23), (b, s, n)) * 0.5
     cm = jax.random.normal(jax.random.fold_in(KEY, 24), (b, s, n)) * 0.5
-    y1, f1 = ops.ssd_chunk(x, dt, a, bm, cm, chunk=chunk)
+    y1, f1 = ops.ssd_chunk(x, dt, a, bm, cm, chunk=chunk, config=PALLAS)
     y2, f2 = ref.reference_ssd(x, dt, a, bm, cm)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=1e-3)
     np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=2e-4, rtol=1e-3)
 
 
+@pytest.mark.parametrize("shape", [
+    (2, 64, 32),
+    (1, 300, 128),   # seq pad (300 -> 2 chunks of 256)
+    (2, 257, 130),   # seq + width pad
+])
+def test_rglru_scan_kernel_sweep(shape):
+    b, s, w = shape
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 40), (b, s, w))) * 0.5 + 0.45
+    bb = jax.random.normal(jax.random.fold_in(KEY, 41), (b, s, w)) * 0.3
+    h1 = ops.rglru_scan(a, bb, config=PALLAS)
+    h2 = ref.jnp_rglru_scan(a, bb)
+    # serial oracle
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+    _, h3 = jax.lax.scan(step, jnp.zeros((b, w)), (a.transpose(1, 0, 2), bb.transpose(1, 0, 2)))
+    h3 = h3.transpose(1, 0, 2)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h3), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h3), atol=1e-5, rtol=1e-5)
+
+
+def test_int8_kernel_roundtrip():
+    x = jax.random.normal(jax.random.fold_in(KEY, 50), (37, 256))
+    q, scale, lo = ops.int8_quantize(x, config=PALLAS)
+    qj, sj, lj = ref.jnp_int8_quantize(x)
+    # reduction-order float differences may flip a rounding boundary: q within
+    # one level, metadata tight, decode within one quantization step
+    assert int(jnp.abs(q.astype(jnp.int32) - qj.astype(jnp.int32)).max()) <= 1
+    np.testing.assert_allclose(np.asarray(scale), np.asarray(sj), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(lo), np.asarray(lj), rtol=1e-6, atol=1e-6)
+    dec = ops.int8_dequantize(q, scale, lo, config=PALLAS)
+    err = jnp.abs(dec - x)
+    assert float((err - 1.01 * scale[:, None]).max()) <= 0.0
+
+
 def test_models_ssd_matches_oracle_too():
-    """The jnp production path (models/ssd.ssd_chunked) is the kernel's
-    shape-twin; it must match the token-recurrence oracle as well."""
+    """The model-level wrapper (models/ssd.ssd_chunked) delegates to the
+    dispatched op; it must match the token-recurrence oracle as well."""
     from repro.models.ssd import ssd_chunked
 
     b, s, h, p, n = 2, 64, 2, 16, 8

@@ -13,6 +13,7 @@ from repro.core.outer import gamma_band
 from repro.core.theory import variance_bounded
 from repro.data import pack_documents
 from repro.kernels import ops, ref
+from repro.kernels.dispatch import KernelConfig
 
 
 @given(world=st.integers(2, 64), step=st.integers(0, 1000), seed=st.integers(0, 5))
@@ -73,7 +74,8 @@ def test_flash_attention_property_sweep(sq, h, kv, d):
     q = jax.random.normal(key, (1, sq, h, d))
     k = jax.random.normal(jax.random.fold_in(key, 1), (1, sq, kv, d))
     v = jax.random.normal(jax.random.fold_in(key, 2), (1, sq, kv, d))
-    out = ops.flash_attention(q, k, v, mode="causal", block_q=32, block_kv=32)
+    out = ops.flash_attention(q, k, v, mode="causal", block_q=32, block_kv=32,
+                              config=KernelConfig("pallas", interpret=True))
     hm = (jnp.arange(h) * kv) // h
     qf = q.transpose(0, 2, 1, 3).reshape(h, sq, d)
     kf = jnp.take(k, hm, 2).transpose(0, 2, 1, 3).reshape(h, sq, d)

@@ -208,15 +208,13 @@ def test_eval_batches_helper():
 
 
 # ---------------------------------------------------------------------------
-# Distributed runtime (requires a jax with jax.shard_map / jax.set_mesh)
+# Distributed runtime (jax-version differences handled by parallel/compat)
 # ---------------------------------------------------------------------------
 
 
 @pytest.mark.multidevice
 def test_distributed_entry_resumes():
     """train_distributed drives the engine end-to-end with --resume."""
-    if not hasattr(jax, "shard_map"):
-        pytest.skip("shard_map runtime needs a newer jax")
     import subprocess, sys, tempfile
 
     env = dict(os.environ)
