@@ -2,6 +2,13 @@
 # Tier-1 verify: the fast suite, one command (see ROADMAP.md).
 # Slow multi-device subprocess tests can be skipped with:
 #   scripts/tier1.sh -m "not multidevice"
+# TIER1_BUDGET_S (optional) enforces a hard wall-clock budget: the run fails
+# with exit 124 when the suite outgrows it (CI sets 1800s), keeping "tier-1
+# stays fast" an enforced property rather than a hope.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+cmd=(python -m pytest -x -q "$@")
+if [[ -n "${TIER1_BUDGET_S:-}" ]]; then
+  cmd=(timeout --foreground "${TIER1_BUDGET_S}" "${cmd[@]}")
+fi
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} "${cmd[@]}"

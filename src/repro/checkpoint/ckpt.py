@@ -114,7 +114,12 @@ def restore(path: str, step: int | None = None) -> Any:
 def latest_step(path: str) -> int | None:
     if not os.path.isdir(path):
         return None
+    import re
+
     steps = [
-        int(n.split("_")[1]) for n in os.listdir(path) if n.startswith("step_")
+        int(m.group(1))
+        for n in os.listdir(path)
+        for m in [re.fullmatch(r"step_(\d+)", n)]
+        if m
     ]
     return max(steps) if steps else None

@@ -72,10 +72,25 @@ class Communicator:
 
 
 class StackedGather(Communicator):
-    """Replicas stacked on axis 0 of every leaf; partner via index gather."""
+    """Replicas stacked on axis 0 of every leaf; partner via index gather.
 
-    def __init__(self, partner: jax.Array | None, cfg: CommConfig | None = None):
+    ``active`` (optional (world,) bool mask) restricts :meth:`allreduce_mean`
+    to the active replica subset — the elastic DiLoCo baseline: dropped
+    replicas contribute nothing to the group mean (every replica still
+    RECEIVES the mean; freezing non-participants is the outer step's job).
+    The pairwise :meth:`exchange` needs no mask: sit-outs are already encoded
+    as self-pairs in the elastic partner table.
+    """
+
+    def __init__(
+        self,
+        partner: jax.Array | None,
+        cfg: CommConfig | None = None,
+        *,
+        active: jax.Array | None = None,
+    ):
         self.partner = None if partner is None else jnp.asarray(partner)
+        self.active = None if active is None else jnp.asarray(active, bool)
         self.cfg = cfg or CommConfig()
         self.cfg.validate()
 
@@ -90,9 +105,19 @@ class StackedGather(Communicator):
         return jax.vmap(lambda sub: wire_roundtrip(sub, self.cfg))(gathered)
 
     def allreduce_mean(self, tree: PyTree) -> PyTree:
-        return jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape), tree
-        )
+        if self.active is None:
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape),
+                tree,
+            )
+        w = self.active.astype(jnp.float32)
+        w = w / jnp.maximum(jnp.sum(w), 1.0)
+
+        def _masked(x):
+            wx = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+            return jnp.broadcast_to(jnp.sum(x * wx, axis=0, keepdims=True), x.shape)
+
+        return jax.tree.map(_masked, tree)
 
 
 class ShardedPermute(Communicator):

@@ -14,6 +14,7 @@ from repro.core.outer import (
     outer_step_stacked,
 )
 from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
+from repro.core.pairing import Membership
 from repro.core import latency, pairing, theory
 
 __all__ = [
@@ -28,6 +29,7 @@ __all__ = [
     "outer_step_sharded_overlapped",
     "outer_step_stacked",
     "GossipTrainer",
+    "Membership",
     "TrainState",
     "TrainerConfig",
     "latency",

@@ -87,10 +87,20 @@ class GossipTrainer:
     # -- steps ------------------------------------------------------------
 
     def inner_step(
-        self, state: TrainState, batch: PyTree, rng: jax.Array
+        self,
+        state: TrainState,
+        batch: PyTree,
+        rng: jax.Array,
+        active: jax.Array | None = None,
     ) -> tuple[TrainState, dict[str, jax.Array]]:
         """One local optimizer step on every replica.  ``batch`` leaves have a
-        leading replica axis (each replica sees its own shard)."""
+        leading replica axis (each replica sees its own shard).
+
+        ``active``: optional (world,) bool mask — inactive (dropped) replicas
+        keep θ and their AdamW moments frozen; the simulation still computes
+        their forward/grad (it is one vmap), but no state moves.  Their
+        reported loss is whatever the frozen weights score; elastic callers
+        aggregate over active replicas only."""
         rngs = jax.random.split(rng, state.world)
         loss, grads = self._vgrad(state.theta, batch, rngs)
         if self.cfg.sync_grads:
@@ -99,23 +109,36 @@ class GossipTrainer:
                 grads,
             )
         theta, opt, gnorm = self._vapply(grads, state.opt, state.theta)
+        if active is not None:
+            act = jnp.asarray(active, bool)
+
+            def _sel(new, old):
+                return jnp.where(act.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+
+            theta = jax.tree.map(_sel, theta, state.theta)
+            opt = jax.tree.map(_sel, opt, state.opt)
         new_state = TrainState(
             theta=theta, opt=opt, outer=state.outer, inner_step=state.inner_step + 1
         )
         return new_state, {"loss": loss, "grad_norm": gnorm}
 
     def outer_step(
-        self, state: TrainState, partner: jax.Array | None = None
+        self,
+        state: TrainState,
+        partner: jax.Array | None = None,
+        active: jax.Array | None = None,
     ) -> TrainState:
         """Gossip/all-reduce sync of slow weights; fast weights reset to the
         new slow weights (look-ahead semantics).
 
         When ``partner`` is None the pairing is derived HOST-side from the
         outer step counter inside :func:`outer_step_stacked`; jitted callers
-        must pass a precomputed table (a clear error is raised otherwise)."""
+        must pass a precomputed table (a clear error is raised otherwise).
+        ``active`` masks this round's participants (see
+        :func:`repro.core.outer.outer_step_stacked`)."""
         new_outer, new_theta = outer_lib.outer_step_stacked(
             state.outer, state.theta, self.cfg.outer, partner=partner,
-            comm_cfg=self.cfg.comm, kernel_cfg=self.cfg.kernels,
+            active=active, comm_cfg=self.cfg.comm, kernel_cfg=self.cfg.kernels,
         )
         return TrainState(
             theta=new_theta, opt=state.opt, outer=new_outer, inner_step=state.inner_step

@@ -306,6 +306,7 @@ def outer_step_stacked(
     cfg: OuterConfig,
     *,
     partner: jax.Array | None = None,
+    active: jax.Array | None = None,
     comm_cfg: CommConfig | None = None,
     kernel_cfg: KernelConfig | None = None,
 ) -> tuple[OuterState, PyTree]:
@@ -320,6 +321,16 @@ def outer_step_stacked(
     jitted callers MUST pass ``partner`` explicitly (a clear error is raised
     otherwise — the launchers precompute it).
 
+    ``active``: optional (world,) bool mask of this round's PARTICIPANTS
+    (elastic runs: active members minus stragglers).  Non-participants keep
+    (φ, δ, θ) untouched — a dropped replica is frozen, a straggler's θ keeps
+    training toward a 2m-step Δ at its next round.  A participant whose
+    partner table entry is itself (sit-out / skipped partner) runs the
+    self-group update: mean Δ and mean φ degenerate to its own, the γ term
+    vanishes, leaving the pure self-momentum path.  Pairings with sit-outs
+    encoded come from :func:`repro.core.pairing.elastic_partner_table`; the
+    outer step never decides WHO participates, only applies the mask.
+
     ``comm_cfg`` selects the wire codec/fusing; lossy codecs are applied to
     the partner's gathered values exactly as the distributed wire would.
     """
@@ -331,8 +342,22 @@ def outer_step_stacked(
             partner = _host_partner_table(state.step, world, cfg)
         comm = exchange_lib.StackedGather(jnp.asarray(partner), comm_cfg)
     elif cfg.method == "diloco":
-        comm = exchange_lib.StackedGather(None, comm_cfg)
+        comm = exchange_lib.StackedGather(
+            None, comm_cfg, active=active
+        )
     new_state, new_theta, _ = outer_step(state, theta, cfg, comm, kernel_cfg=kernel_cfg)
+    if active is not None:
+        act = jnp.asarray(active, bool)
+
+        def _sel(new, old):
+            return jnp.where(act.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+
+        new_theta = jax.tree.map(_sel, new_theta, theta)
+        new_state = OuterState(
+            phi=jax.tree.map(_sel, new_state.phi, state.phi),
+            delta=jax.tree.map(_sel, new_state.delta, state.delta),
+            step=new_state.step,
+        )
     return new_state, new_theta
 
 

@@ -13,9 +13,24 @@ For group size n=2 and an even world size this is a perfect matching; for odd
 world sizes one replica sits out the round (it still applies the momentum decay
 with its own Δ, i.e. a group of one).  For n>2 we partition a random
 permutation into contiguous groups of n.
+
+Elasticity (membership-aware scheduling): a :class:`Membership` names the
+ACTIVE subset of the world as an epoch-stamped bitmask, and
+:func:`elastic_partner_table` draws the round's matching over that subset by
+filtering the SAME full-world permutation — so the schedule stays
+coordinator-free and is a pure function of ``(seed, step, membership)``:
+every node that agrees on the membership view (which is what the epoch
+versions) computes the identical matching with zero control-plane messages.
+Inactive replicas deterministically sit out (``partner[i] == i``), an odd
+active count sits out one uniformly-random active replica per step (fair
+across steps), and with full membership the schedule is bit-identical to the
+static :func:`partner_table` — elasticity costs nothing when nobody churns.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
 
 import numpy as np
 
@@ -28,6 +43,9 @@ __all__ = [
     "partner_table",
     "ppermute_pairs",
     "all_pairs_seen",
+    "Membership",
+    "elastic_partner_table",
+    "elastic_ppermute_pairs",
 ]
 
 
@@ -106,6 +124,152 @@ def hypercube_partner_table(step: int, world: int, *, seed: int = 0) -> np.ndarr
 def hypercube_ppermute_pairs(step: int, world: int, *, seed: int = 0) -> list[tuple[int, int]]:
     partner = hypercube_partner_table(step, world, seed=seed)
     return [(int(src), int(partner[src])) for src in range(world)]
+
+
+# ---------------------------------------------------------------------------
+# Elastic (membership-aware) scheduling
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Membership:
+    """Epoch-stamped view of which replica slots are alive.
+
+    ``mask[i]`` is True iff replica ``i`` participates in training.  The
+    ``epoch`` increments on every membership CHANGE (drop / rejoin) — it is
+    the version number nodes agree on so that everyone derives the round's
+    pairing from the same view; the pairing itself is a pure function of
+    ``(seed, step, mask)``, so two epochs with identical masks schedule
+    identically (a node that left and came right back changes nothing).
+    """
+
+    world: int
+    mask: tuple[bool, ...]
+    epoch: int = 0
+
+    def __post_init__(self):
+        if self.world < 1:
+            raise ValueError("membership needs world >= 1")
+        if len(self.mask) != self.world:
+            raise ValueError(
+                f"mask length {len(self.mask)} != world {self.world}"
+            )
+        if not any(self.mask):
+            raise ValueError("membership must keep at least one active replica")
+
+    @classmethod
+    def full(cls, world: int) -> "Membership":
+        return cls(world=world, mask=(True,) * world, epoch=0)
+
+    @property
+    def active_ids(self) -> tuple[int, ...]:
+        return tuple(i for i, m in enumerate(self.mask) if m)
+
+    @property
+    def num_active(self) -> int:
+        return sum(self.mask)
+
+    @property
+    def is_full(self) -> bool:
+        return all(self.mask)
+
+    def active_array(self) -> np.ndarray:
+        """(world,) bool mask — the ``active`` argument of the outer step."""
+        return np.asarray(self.mask, dtype=bool)
+
+    def drop(self, replicas: Iterable[int]) -> "Membership":
+        """New membership with ``replicas`` deactivated; epoch bumped."""
+        ids = self._check_ids(replicas)
+        for r in ids:
+            if not self.mask[r]:
+                raise ValueError(f"replica {r} is already inactive")
+        mask = tuple(m and i not in ids for i, m in enumerate(self.mask))
+        return Membership(world=self.world, mask=mask, epoch=self.epoch + 1)
+
+    def add(self, replicas: Iterable[int]) -> "Membership":
+        """New membership with ``replicas`` (re)activated; epoch bumped."""
+        ids = self._check_ids(replicas)
+        for r in ids:
+            if self.mask[r]:
+                raise ValueError(f"replica {r} is already active")
+        mask = tuple(m or i in ids for i, m in enumerate(self.mask))
+        return Membership(world=self.world, mask=mask, epoch=self.epoch + 1)
+
+    def without(self, replicas: Iterable[int]) -> "Membership":
+        """Transient view excluding ``replicas`` (stragglers missing ONE
+        round): the epoch is NOT bumped — membership did not change, this
+        round's participation did."""
+        ids = self._check_ids(replicas)
+        if not ids:
+            return self
+        mask = tuple(m and i not in ids for i, m in enumerate(self.mask))
+        return Membership(world=self.world, mask=mask, epoch=self.epoch)
+
+    def _check_ids(self, replicas: Iterable[int]) -> frozenset[int]:
+        ids = frozenset(int(r) for r in replicas)
+        for r in ids:
+            if not 0 <= r < self.world:
+                raise ValueError(f"replica id {r} outside world {self.world}")
+        return ids
+
+
+def elastic_partner_table(
+    step: int,
+    membership: Membership,
+    *,
+    seed: int = 0,
+    groups: Sequence[Sequence[int]] | None = None,
+) -> np.ndarray:
+    """Partner table drawn over the ACTIVE replica set of ``membership``.
+
+    The full-world permutation of :func:`pairing_permutation` is filtered to
+    the active ids (order preserved) and consecutive actives pair up — so
+    with full membership this is bit-identical to :func:`partner_table`, and
+    under churn every node derives the same matching from ``(seed, step,
+    membership)`` alone.  Inactive replicas (and the odd active out — a
+    uniformly-random active id per step) map to themselves.
+
+    ``groups`` optionally restricts pairing to network-partition components:
+    each group pairs internally (its active members only) and NO pair crosses
+    a component boundary.  Groups must be disjoint; active replicas not
+    covered by any group sit out.
+    """
+    world = membership.world
+    perm = np.asarray(pairing_permutation(step, world, seed=seed))
+    partner = np.arange(world, dtype=np.int64)
+    if groups is None:
+        components = [membership.active_ids]
+    else:
+        components = [tuple(int(r) for r in g) for g in groups]
+        flat = [r for g in components for r in g]
+        if len(flat) != len(set(flat)):
+            raise ValueError("partition groups must be disjoint")
+        for r in flat:
+            if not 0 <= r < world:
+                raise ValueError(f"partition replica id {r} outside world {world}")
+    active = set(membership.active_ids)
+    for comp in components:
+        members = set(comp) & active
+        order = [int(r) for r in perm if int(r) in members]
+        for k in range(0, len(order) - 1, 2):
+            a, b = order[k], order[k + 1]
+            partner[a] = b
+            partner[b] = a
+    return partner
+
+
+def elastic_ppermute_pairs(
+    step: int,
+    membership: Membership,
+    *,
+    seed: int = 0,
+    groups: Sequence[Sequence[int]] | None = None,
+) -> list[tuple[int, int]]:
+    """(source, destination) ppermute list for the elastic matching: sit-outs
+    and inactive replicas self-loop, so the permutation stays total over the
+    mesh (``lax.ppermute`` needs every device addressed)."""
+    table = elastic_partner_table(step, membership, seed=seed, groups=groups)
+    return [(int(src), int(table[src])) for src in range(membership.world)]
 
 
 def all_pairs_seen(steps: int, world: int, *, seed: int = 0) -> np.ndarray:

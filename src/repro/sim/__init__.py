@@ -1,0 +1,13 @@
+"""Deterministic fault-injecting cluster simulator (DESIGN.md §7).
+
+``SimCluster`` wraps the real :class:`~repro.train.GossipProgram` as a
+:class:`~repro.train.program.TrainProgram` decorator and replays a
+:class:`FaultPlan` — node dropout, rejoin-with-warm-start, stragglers that
+miss outer rounds, network partitions — against the production outer-step
+math and telemetry, step for step reproducibly.
+"""
+
+from repro.sim.faults import FaultEvent, FaultPlan
+from repro.sim.cluster import SimCluster
+
+__all__ = ["FaultEvent", "FaultPlan", "SimCluster"]

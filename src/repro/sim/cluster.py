@@ -1,0 +1,214 @@
+"""SimCluster: drive the REAL training program through cluster churn.
+
+The simulator is a :class:`~repro.train.program.TrainProgram` decorator — the
+unified :class:`~repro.train.loop.TrainLoop` drives it exactly like a healthy
+program, and every inner/outer step below it is the production path
+(:class:`~repro.train.GossipProgram` → :class:`~repro.core.GossipTrainer` →
+``outer_step_stacked`` over the :class:`~repro.comm.StackedGather`
+communicator).  SimCluster only does three things:
+
+  * replays the :class:`~repro.sim.faults.FaultPlan` at inner-step
+    boundaries (membership drops/rejoins, straggler registration,
+    partition views) — each event is applied once, keyed by the state's own
+    step counter, so a resumed run never re-applies history;
+  * performs the rejoin warm start (θ = φ = a live peer's φ, δ = 0, fresh
+    AdamW moments) — the only state surgery elasticity needs;
+  * aggregates loop-facing metrics (loss, eval, weight std) over the ACTIVE
+    replica set and keeps an auditable ``history`` of events and per-round
+    participation (partner tables included) for tests and telemetry.
+
+What it does NOT model (see DESIGN.md §7): wall-clock skew, message loss
+inside a surviving pair, Byzantine values, or asynchronous outer rounds —
+every fault is a round-granular participation change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pairing as pairing_lib
+from repro.core.noloco import TrainState
+from repro.optim import AdamWState
+from repro.sim.faults import FaultEvent, FaultPlan
+from repro.train.adapters import GossipProgram
+
+PyTree = Any
+
+__all__ = ["SimCluster"]
+
+
+class SimCluster:
+    """Deterministic fault-injecting wrapper around a :class:`GossipProgram`."""
+
+    def __init__(self, program: GossipProgram, plan: FaultPlan):
+        plan.validate(program.replicas)
+        self.program = program
+        self.plan = plan
+        self.replicas = program.replicas
+        self._straggle: dict[int, int] = {}  # replica -> rounds left to miss
+        self.history: list[dict] = []
+
+    # -- membership passthrough (loop telemetry reads these) ----------------
+
+    @property
+    def membership(self) -> pairing_lib.Membership:
+        return self.program.membership
+
+    @property
+    def membership_epoch(self) -> int:
+        return self.program.membership_epoch
+
+    @property
+    def inner_steps(self) -> int:
+        return self.program.tcfg.outer.inner_steps
+
+    # -- fault application --------------------------------------------------
+
+    def _apply_events(self, state: TrainState, t: int) -> TrainState:
+        for ev in self.plan.events_at(t, self.inner_steps):
+            state = self._apply(state, ev, t)
+        return state
+
+    def _apply(self, state: TrainState, ev: FaultEvent, t: int) -> TrainState:
+        mem = self.program.membership
+        rec: dict[str, Any] = {"event": ev.kind, "step": t}
+        if ev.kind == "drop":
+            self.program.set_membership(mem.drop(ev.replicas))
+            rec["replicas"] = sorted(ev.replicas)
+        elif ev.kind == "rejoin":
+            source = ev.source
+            if source is None:
+                candidates = [r for r in mem.active_ids if r not in ev.replicas]
+                if not candidates:
+                    raise ValueError("rejoin needs at least one live peer to warm-start from")
+                source = candidates[0]
+            if source in ev.replicas or not mem.mask[source]:
+                raise ValueError(f"rejoin source {source} is not a live peer")
+            for r in ev.replicas:
+                state = self._warm_start(state, r, source)
+            self.program.set_membership(mem.add(ev.replicas))
+            rec["replicas"] = sorted(ev.replicas)
+            rec["source"] = source
+        elif ev.kind == "straggle":
+            for r in ev.replicas:
+                if not mem.mask[r]:
+                    raise ValueError(f"straggler {r} is not an active replica")
+                self._straggle[r] = max(self._straggle.get(r, 0), ev.rounds)
+            rec["replicas"] = sorted(ev.replicas)
+            rec["rounds"] = ev.rounds
+        elif ev.kind == "partition":
+            self.program.set_partition(ev.groups)
+            rec["groups"] = [sorted(g) for g in ev.groups]
+        elif ev.kind == "heal":
+            self.program.set_partition(None)
+        self.history.append(rec)
+        return state
+
+    def _warm_start(self, state: TrainState, replica: int, source: int) -> TrainState:
+        """Rejoin surgery: the comeback replica adopts a live peer's slow
+        weights as BOTH its φ and θ (fresh look-ahead), zero outer momentum,
+        zero inner-optimizer moments — exactly what a node that fetched φ
+        from one peer and restarted would hold."""
+        if self.program.membership.mask[replica]:
+            raise ValueError(f"replica {replica} is already active; cannot rejoin")
+
+        def adopt(x):
+            return x.at[replica].set(x[source])
+
+        def zero_row(x):
+            return x.at[replica].set(jnp.zeros_like(x[replica]))
+
+        return TrainState(
+            theta=jax.tree.map(
+                lambda th, p: th.at[replica].set(p[source]), state.theta, state.outer.phi
+            ),
+            opt=AdamWState(
+                mu=jax.tree.map(zero_row, state.opt.mu),
+                nu=jax.tree.map(zero_row, state.opt.nu),
+                count=state.opt.count.at[replica].set(0),
+            ),
+            outer=dataclasses.replace(
+                state.outer,
+                phi=jax.tree.map(adopt, state.outer.phi),
+                delta=jax.tree.map(zero_row, state.outer.delta),
+            ),
+            inner_step=state.inner_step,
+        )
+
+    # -- TrainProgram surface ----------------------------------------------
+
+    def init_state(self, example_batch: dict) -> TrainState:
+        return self.program.init_state(example_batch)
+
+    def inner_step(self, state: TrainState, batch: dict, rng):
+        state = self._apply_events(state, int(state.inner_step))
+        # the program itself aggregates loss over active replicas
+        return self.program.inner_step(state, batch, rng)
+
+    def maybe_outer_step(self, state: TrainState):
+        if not self.program.trainer.should_sync(state):
+            return state, False
+        round_idx = int(state.outer.step)
+        absent = frozenset(
+            r for r, k in self._straggle.items()
+            if k > 0 and self.program.membership.mask[r]
+        )
+        self.program.round_absent = absent
+        state, synced = self.program.maybe_outer_step(state)
+        self._straggle = {
+            r: k - 1 for r, k in self._straggle.items() if k > 1
+        }
+        partner = self.program.last_partner  # the table the round REALLY used
+        self.history.append({
+            "event": "round",
+            "round": round_idx,
+            "active": list(self.program.membership.active_ids),
+            "absent": sorted(absent),
+            "partner": None if partner is None else [int(p) for p in partner],
+            "partition": (
+                None if self.program.partition is None
+                else [sorted(g) for g in self.program.partition]
+            ),
+        })
+        return state, synced
+
+    def eval_step(self, state: TrainState, batch: dict, rng) -> float:
+        return self.program.eval_step(state, batch, rng)
+
+    def weight_std(self, state: TrainState) -> float:
+        return self.program.weight_std(state)
+
+    def state_pytree(self, state: TrainState) -> dict:
+        tree = self.program.state_pytree(state)
+        # in-flight straggler debts must survive a restart, or a resumed run
+        # would let a mid-straggle replica back into rounds it missed in the
+        # uninterrupted trajectory
+        straggle = np.zeros((self.replicas,), dtype=np.int64)
+        for r, k in self._straggle.items():
+            straggle[r] = k
+        tree["sim"] = {"straggle": straggle}
+        return tree
+
+    def load_state_pytree(self, state: TrainState, tree: dict) -> TrainState:
+        state = self.program.load_state_pytree(state, tree)
+        if "sim" in tree:
+            straggle = np.asarray(tree["sim"]["straggle"])
+            self._straggle = {
+                int(r): int(k) for r, k in enumerate(straggle) if k > 0
+            }
+        return state
+
+    def comm_cost(self):
+        return self.program.comm_cost()
+
+    # -- diagnostics --------------------------------------------------------
+
+    def rounds(self) -> list[dict]:
+        """The per-round participation records (subset of ``history``)."""
+        return [h for h in self.history if h["event"] == "round"]

@@ -1,0 +1,173 @@
+"""Fault plans: the declarative schedule of cluster events a SimCluster
+replays against a real training program.
+
+A plan is a list of :class:`FaultEvent`\\ s, each anchored either to an inner
+``step`` or to an outer ``round`` (``round: r`` resolves to the first inner
+step of round *r*'s inner phase, ``r * m`` — the event is in force for that
+round's exchange).  Plans are plain JSON on the wire::
+
+    {"events": [
+        {"kind": "drop",    "round": 2, "replicas": [3, 5]},
+        {"kind": "rejoin",  "round": 5, "replicas": [3, 5]},
+        {"kind": "straggle","round": 3, "replicas": [1], "rounds": 1},
+        {"kind": "partition","round": 4, "groups": [[0, 1, 2, 3], [4, 5, 6, 7]]},
+        {"kind": "heal",    "round": 6}
+    ]}
+
+Event kinds:
+
+``drop``
+    Replicas leave the cluster: frozen in inner AND outer steps, excluded
+    from every pairing draw (membership epoch bumps).
+``rejoin``
+    Replicas come back, warm-started from a live peer's slow weights φ
+    (``source``, default: lowest-id active replica): θ = φ = φ_source,
+    δ = 0, fresh inner-optimizer moments.  Membership epoch bumps.
+``straggle``
+    Replicas miss the next ``rounds`` outer rounds (participation, not
+    membership): their partners self-pair, their own (φ, δ, θ-reset) are
+    skipped, inner training continues — the next round they join sees a
+    Δ spanning the missed rounds' inner steps.
+``partition``
+    The pairing graph splits into ``groups``: pairs never cross a component
+    until a ``heal`` event (gossip keeps running inside each island).
+``heal``
+    Remove the partition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Iterable, Sequence
+
+__all__ = ["FaultEvent", "FaultPlan", "KINDS"]
+
+KINDS = ("drop", "rejoin", "straggle", "partition", "heal")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    kind: str
+    replicas: tuple[int, ...] = ()
+    step: int | None = None     # inner step the event applies before
+    round: int | None = None    # outer round whose inner phase it opens
+    rounds: int = 1             # straggle: consecutive outer rounds missed
+    source: int | None = None   # rejoin: peer whose φ seeds the warm start
+    groups: tuple[tuple[int, ...], ...] = ()  # partition components
+
+    def __post_init__(self):
+        object.__setattr__(self, "replicas", tuple(int(r) for r in self.replicas))
+        object.__setattr__(
+            self, "groups", tuple(tuple(int(r) for r in g) for g in self.groups)
+        )
+
+    def resolved_step(self, inner_steps: int) -> int:
+        """The inner step this event applies BEFORE."""
+        if self.step is not None:
+            return int(self.step)
+        return int(self.round) * int(inner_steps)
+
+    def validate(self, world: int) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind: {self.kind!r} (one of {KINDS})")
+        if (self.step is None) == (self.round is None):
+            raise ValueError(
+                f"{self.kind} event needs exactly one of step/round "
+                f"(got step={self.step}, round={self.round})"
+            )
+        anchor = self.step if self.step is not None else self.round
+        if anchor < 0:
+            raise ValueError(f"{self.kind} event anchored at negative {anchor}")
+        if self.kind in ("drop", "rejoin", "straggle") and not self.replicas:
+            raise ValueError(f"{self.kind} event needs replicas")
+        for r in self.replicas:
+            if not 0 <= r < world:
+                raise ValueError(f"replica id {r} outside world {world}")
+        if self.kind == "straggle" and self.rounds < 1:
+            raise ValueError("straggle needs rounds >= 1")
+        if self.kind == "partition":
+            if not self.groups:
+                raise ValueError("partition event needs groups")
+            flat = [r for g in self.groups for r in g]
+            if len(flat) != len(set(flat)):
+                raise ValueError("partition groups must be disjoint")
+            for r in flat:
+                if not 0 <= r < world:
+                    raise ValueError(f"partition replica id {r} outside world {world}")
+        if self.source is not None and not 0 <= self.source < world:
+            raise ValueError(f"source id {self.source} outside world {world}")
+
+    def as_dict(self) -> dict[str, Any]:
+        out: dict[str, Any] = {"kind": self.kind}
+        if self.step is not None:
+            out["step"] = self.step
+        if self.round is not None:
+            out["round"] = self.round
+        if self.replicas:
+            out["replicas"] = list(self.replicas)
+        if self.kind == "straggle":
+            out["rounds"] = self.rounds
+        if self.source is not None:
+            out["source"] = self.source
+        if self.groups:
+            out["groups"] = [list(g) for g in self.groups]
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "FaultEvent":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise ValueError(f"unknown fault event fields: {sorted(extra)}")
+        d = dict(d)
+        return cls(
+            kind=d.pop("kind"),
+            replicas=tuple(d.pop("replicas", ())),
+            groups=tuple(tuple(g) for g in d.pop("groups", ())),
+            **d,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An ordered schedule of fault events (order breaks same-step ties)."""
+
+    events: tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    def validate(self, world: int) -> None:
+        for ev in self.events:
+            ev.validate(world)
+
+    def events_at(self, step: int, inner_steps: int) -> list[FaultEvent]:
+        return [
+            ev for ev in self.events if ev.resolved_step(inner_steps) == step
+        ]
+
+    def to_json(self) -> str:
+        return json.dumps({"events": [ev.as_dict() for ev in self.events]}, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        data = json.loads(text)
+        events = data["events"] if isinstance(data, dict) else data
+        return cls(events=tuple(FaultEvent.from_dict(d) for d in events))
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def build(cls, events: Iterable[FaultEvent | dict]) -> "FaultPlan":
+        return cls(events=tuple(
+            ev if isinstance(ev, FaultEvent) else FaultEvent.from_dict(ev)
+            for ev in events
+        ))

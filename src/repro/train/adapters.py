@@ -25,8 +25,10 @@ import jax.numpy as jnp
 
 from repro.comm import CommConfig, bytes_model
 from repro.core import metrics as metrics_lib
+from repro.core import pairing as pairing_lib
 from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
 from repro.core.outer import OuterState
+from repro.core.pairing import Membership
 from repro.models import model as model_api
 from repro.models.common import values_of
 from repro.models.config import ModelConfig
@@ -61,15 +63,44 @@ def _cost(tree_one: PyTree, comm: CommConfig, method: str, world: int):
 
 
 class GossipProgram:
-    """Stacked-simulation runtime: :class:`GossipTrainer` under one jit."""
+    """Stacked-simulation runtime: :class:`GossipTrainer` under one jit.
+
+    Elastic membership (DESIGN.md §7): the program carries an epoch-stamped
+    :class:`~repro.core.pairing.Membership` over its replica slots plus an
+    optional network-partition view, and draws every round's pairing with
+    :func:`~repro.core.pairing.elastic_partner_table` — inactive replicas are
+    frozen in both inner and outer steps, a replica whose partner misses the
+    round self-pairs (pure self-momentum, the odd-world sit-out path), and
+    eval/weight-std aggregate over ACTIVE replicas only.  ``round_absent``
+    names stragglers for the NEXT outer round only (participation, not
+    membership — it clears once consumed).  Membership and partition ride in
+    the checkpoint pytree, so a resumed run reproduces the elastic trajectory.
+    """
 
     def __init__(
-        self, cfg: ModelConfig, tcfg: TrainerConfig, *, replicas: int, seed: int = 0
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainerConfig,
+        *,
+        replicas: int,
+        seed: int = 0,
+        membership: Membership | None = None,
     ):
         self.cfg = cfg
         self.tcfg = tcfg
         self.replicas = replicas
         self.seed = seed
+        self.membership = membership or Membership.full(replicas)
+        if self.membership.world != replicas:
+            raise ValueError(
+                f"membership world {self.membership.world} != replicas {replicas}"
+            )
+        self.partition: tuple[tuple[int, ...], ...] | None = None
+        self.round_absent: frozenset[int] = frozenset()
+        # the pairing the LAST outer round actually used ((world,) ndarray,
+        # None for diloco's all-reduce) — the audit source for SimCluster
+        # history / telemetry, never recomputed downstream
+        self.last_partner: np.ndarray | None = None
         ctx = ShardCtx.local()
 
         def loss_fn(params, batch, rng):
@@ -77,9 +108,35 @@ class GossipProgram:
 
         self.trainer = GossipTrainer(tcfg, loss_fn)
         self._inner_jit = jax.jit(self.trainer.inner_step)
-        self._eval_jit = jax.jit(
-            lambda th, b, r: jnp.mean(self.trainer.eval_loss(th, b, r))
+        self._eval_jit = jax.jit(self.trainer.eval_loss)
+
+    # -- membership ---------------------------------------------------------
+
+    @property
+    def membership_epoch(self) -> int:
+        return self.membership.epoch
+
+    def set_membership(self, membership: Membership) -> None:
+        if membership.world != self.replicas:
+            raise ValueError(
+                f"membership world {membership.world} != replicas {self.replicas}"
+            )
+        self.membership = membership
+
+    def set_partition(self, groups) -> None:
+        """Restrict pairings to partition components (None heals)."""
+        self.partition = (
+            None if groups is None else tuple(tuple(int(r) for r in g) for g in groups)
         )
+
+    def _active_arr(self) -> jnp.ndarray | None:
+        """(world,) bool mask for the inner step, or None when everyone is in
+        (keeps the healthy path's compiled signature untouched)."""
+        if self.membership.is_full:
+            return None
+        return jnp.asarray(self.membership.active_array())
+
+    # -- TrainProgram -------------------------------------------------------
 
     def init_state(self, example_batch: dict) -> TrainState:
         one = values_of(model_api.init_params(jax.random.PRNGKey(self.seed), self.cfg))
@@ -89,20 +146,64 @@ class GossipProgram:
         return self.trainer.init(stacked)
 
     def inner_step(self, state, batch, rng):
-        return self._inner_jit(state, batch, rng)
+        active = self._active_arr()
+        if active is None:
+            return self._inner_jit(state, batch, rng)
+        state, metrics = self._inner_jit(state, batch, rng, active)
+        # frozen replicas' stale-weight losses are not training signal: the
+        # loop's mean (and telemetry) sees active replicas only, consistent
+        # with eval_step/weight_std
+        ids = jnp.asarray(self.membership.active_ids)
+        metrics = dict(metrics, loss=jnp.take(metrics["loss"], ids))
+        return state, metrics
 
     def maybe_outer_step(self, state):
-        if self.trainer.should_sync(state):
-            return self.trainer.outer_step(state), True
-        return state, False
+        if not self.trainer.should_sync(state):
+            return state, False
+        absent, self.round_absent = self.round_absent, frozenset()
+        absent = absent & set(self.membership.active_ids)
+        if absent == set(self.membership.active_ids):
+            # every live replica timed out this round: nobody exchanges, the
+            # round still happens (the outer counter must advance so the
+            # schedule stays aligned across the cluster)
+            self.last_partner = np.arange(self.replicas)
+            active = jnp.zeros((self.replicas,), bool)
+            return self.trainer.outer_step(
+                state, partner=jnp.asarray(self.last_partner), active=active
+            ), True
+        participants = self.membership.without(absent)
+        partner = None
+        self.last_partner = None
+        if self.tcfg.outer.method == "noloco":
+            self.last_partner = pairing_lib.elastic_partner_table(
+                int(state.outer.step), participants,
+                seed=self.tcfg.outer.seed, groups=self.partition,
+            )
+            partner = jnp.asarray(self.last_partner)
+        active = None
+        if not participants.is_full:
+            active = jnp.asarray(participants.active_array())
+        return self.trainer.outer_step(state, partner=partner, active=active), True
 
     def eval_step(self, state, batch, rng) -> float:
-        return float(self._eval_jit(state.theta, batch, rng))
+        losses = self._eval_jit(state.theta, batch, rng)
+        return float(jnp.mean(losses[jnp.asarray(self.membership.active_ids)]))
 
     def weight_std(self, state) -> float:
-        return float(metrics_lib.replica_weight_std(state.theta))
+        """Cross-replica weight std over ACTIVE replicas (a dropped replica's
+        stale weights are not part of the ensemble)."""
+        if self.membership.num_active < 2:
+            return 0.0
+        ids = jnp.asarray(self.membership.active_ids)
+        theta = jax.tree.map(lambda x: jnp.take(x, ids, axis=0), state.theta)
+        return float(metrics_lib.replica_weight_std(theta))
 
     def state_pytree(self, state: TrainState) -> dict:
+        part = np.full((self.replicas,), -1, dtype=np.int64)
+        if self.partition is not None:
+            for gid, group in enumerate(self.partition):
+                for r in group:
+                    part[r] = gid
         return {
             "theta": state.theta,
             "opt": {"mu": state.opt.mu, "nu": state.opt.nu, "count": state.opt.count},
@@ -112,9 +213,30 @@ class GossipProgram:
                 "step": state.outer.step,
             },
             "inner_step": state.inner_step,
+            "membership": {
+                "mask": np.asarray(self.membership.mask, dtype=bool),
+                "epoch": np.int64(self.membership.epoch),
+                "partition": part,
+            },
         }
 
     def load_state_pytree(self, state: TrainState, tree: dict) -> TrainState:
+        if "membership" in tree:
+            mem = tree["membership"]
+            self.membership = Membership(
+                world=self.replicas,
+                mask=tuple(bool(b) for b in np.asarray(mem["mask"])),
+                epoch=int(mem["epoch"]),
+            )
+            part = np.asarray(mem["partition"])
+            if (part >= 0).any():
+                groups = [
+                    tuple(int(i) for i in np.nonzero(part == g)[0])
+                    for g in sorted(set(int(p) for p in part if p >= 0))
+                ]
+                self.partition = tuple(groups)
+            else:
+                self.partition = None
         return TrainState(
             theta=tree["theta"],
             opt=AdamWState(

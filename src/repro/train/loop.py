@@ -148,6 +148,9 @@ class TrainLoop:
         comm_bytes = 0
         blocking_bytes = 0
         total_tokens = 0
+        # elastic programs expose an epoch-stamped Membership; emit a
+        # telemetry event whenever the view changes (drop / rejoin)
+        last_epoch = getattr(self.program, "membership_epoch", None)
         t0 = time.time()
 
         for t in range(start_step, cfg.steps):
@@ -160,6 +163,14 @@ class TrainLoop:
             losses.append(loss)
             total_tokens += int(np.prod(batch["tokens"].shape))
             state, synced = self.program.maybe_outer_step(state)
+            epoch = getattr(self.program, "membership_epoch", None)
+            if epoch != last_epoch:
+                last_epoch = epoch
+                mem = self.program.membership
+                self._emit(
+                    "membership", step=t + 1, epoch=epoch,
+                    num_active=mem.num_active, active=list(mem.active_ids),
+                )
             dt = time.time() - step_t0
             self._emit(
                 "step", step=t + 1, loss=loss, dt_s=round(dt, 6),
@@ -214,6 +225,7 @@ class TrainLoop:
                 blocking_bytes / comm_bytes if comm_bytes else 0.0
             ),
             "final_weight_std": final_std,
+            "membership_epoch": last_epoch,
         }
         self._emit("run_end", **summary)
         if self._jsonl is not None:

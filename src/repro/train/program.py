@@ -26,7 +26,15 @@ __all__ = ["TrainProgram"]
 
 @runtime_checkable
 class TrainProgram(Protocol):
-    """What a runtime must provide to be driven by :class:`TrainLoop`."""
+    """What a runtime must provide to be driven by :class:`TrainLoop`.
+
+    Elastic programs (the stacked :class:`~repro.train.GossipProgram` and
+    the :class:`~repro.sim.SimCluster` decorator) additionally expose
+    ``membership`` (an epoch-stamped :class:`~repro.core.pairing.Membership`)
+    and ``membership_epoch``; the loop duck-types on their presence to emit
+    ``membership`` telemetry events when the view changes and otherwise
+    ignores them — a fixed-world program needs neither.
+    """
 
     #: number of gossip replicas (the leading axis of stacked batches)
     replicas: int

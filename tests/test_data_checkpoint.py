@@ -1,8 +1,10 @@
 """Data pipeline determinism + checkpoint roundtrip."""
+import os
 import tempfile
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import restore, save, latest_step
 from repro.data import LoaderConfig, SyntheticLM, pack_documents, shard_iterator
@@ -67,3 +69,60 @@ def test_checkpoint_roundtrip_nested():
         assert back["opt"][1] is None
         assert isinstance(back["count"], tuple)
         assert int(back["count"][0]) == 7
+
+
+def _steps_on_disk(d):
+    import re
+
+    return sorted(
+        int(m.group(1))
+        for n in os.listdir(d)
+        for m in [re.fullmatch(r"step_(\d+)", n)]
+        if m
+    )
+
+
+def test_checkpoint_keep_prunes_oldest(tmp_path):
+    """save(keep=N) retains exactly the N newest step dirs, prunes in age
+    order, and each pruned dir is fully removed (no orphan files)."""
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(4.0)}
+    for step in (2, 5, 8, 11, 14):
+        save(d, step, tree, keep=3)
+    assert _steps_on_disk(d) == [8, 11, 14]
+    assert latest_step(d) == 14
+    # the survivors still restore
+    np.testing.assert_array_equal(np.asarray(restore(d, 8)["w"]), np.arange(4.0))
+    # pruned dirs are gone entirely
+    assert not os.path.exists(os.path.join(d, "step_00000002"))
+    with pytest.raises(FileNotFoundError):
+        restore(d, 2)
+
+
+def test_checkpoint_keep_ignores_foreign_entries(tmp_path):
+    """Retention only counts step_* dirs: unrelated files and non-step names
+    under the checkpoint root are never deleted."""
+    d = str(tmp_path)
+    tree = {"w": jnp.zeros(2)}
+    os.makedirs(os.path.join(d, "notes"))
+    with open(os.path.join(d, "events.jsonl"), "w") as f:
+        f.write("{}\n")
+    with open(os.path.join(d, "step_final.txt"), "w") as f:
+        f.write("not a checkpoint dir\n")
+    for step in (1, 2, 3):
+        save(d, step, tree, keep=2)
+    assert _steps_on_disk(d) == [2, 3]
+    assert os.path.isdir(os.path.join(d, "notes"))
+    assert os.path.exists(os.path.join(d, "events.jsonl"))
+    assert os.path.exists(os.path.join(d, "step_final.txt"))
+
+
+def test_checkpoint_keep_none_retains_everything(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": jnp.zeros(2)}
+    for step in (1, 2, 3, 4):
+        save(d, step, tree)  # keep=None
+    assert _steps_on_disk(d) == [1, 2, 3, 4]
+    # a later bounded save prunes the backlog in one pass
+    save(d, 5, tree, keep=2)
+    assert _steps_on_disk(d) == [4, 5]

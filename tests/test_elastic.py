@@ -1,0 +1,359 @@
+"""Elastic gossip runtime scenarios: the fault-injecting SimCluster drives
+the REAL GossipProgram/TrainLoop through dropout, stragglers, partitions and
+rejoin-with-warm-start — asserting that "no blocking collective" holds up as
+a tested fault-tolerance property (loss keeps descending, the active-set
+weight std stays bounded and re-contracts)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pairing import Membership
+from repro.launch.train_elastic import run_elastic_training
+from repro.models.config import ModelConfig
+from repro.sim import FaultEvent, FaultPlan, SimCluster
+
+TINY = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                   d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+KW = dict(replicas=8, per_replica_batch=2, seq_len=32, steps=50, inner_steps=5,
+          inner_lr=3e-3, eval_every=5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def healthy8():
+    """The uninterrupted 8-replica baseline the fault scenarios compare to."""
+    return run_elastic_training(TINY, FaultPlan(), **KW)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance scenario: 8 replicas lose 2 at round k, rejoin 3 rounds later
+# ---------------------------------------------------------------------------
+
+
+def test_acceptance_drop_two_rejoin_three_rounds_later(healthy8):
+    """ISSUE 4 acceptance: an 8-replica run drops replicas {3, 5} at outer
+    round 2 and rejoins them (warm-started from a live peer's φ) at round 5.
+    Final eval loss must land within 5% of the uninterrupted run and the
+    cross-replica weight std must re-contract after the rejoin."""
+    plan = FaultPlan.build([
+        {"kind": "drop", "round": 2, "replicas": [3, 5]},
+        {"kind": "rejoin", "round": 5, "replicas": [3, 5]},
+    ])
+    res = run_elastic_training(TINY, plan, **KW)
+
+    # loss keeps descending through the churn
+    assert np.isfinite(res["losses"]).all()
+    assert res["losses"][-1] < 0.7 * res["losses"][0]
+
+    # final eval within 5% of the healthy run
+    he, fe = healthy8["evals"][-1][1], res["evals"][-1][1]
+    assert abs(fe - he) / he < 0.05, (fe, he)
+
+    # weight std re-contracts after the rejoin: the final ensemble spread is
+    # below the post-rejoin peak and lands in the healthy run's ballpark
+    rejoin_step = 5 * KW["inner_steps"]
+    post = [w for s, w in res["weight_stds"] if s > rejoin_step]
+    assert res["final_weight_std"] < max(post[:-1]), (res["final_weight_std"], post)
+    assert res["final_weight_std"] < 2.5 * healthy8["final_weight_std"]
+
+    # structural: rounds 2-4 ran with 6 actives and never paired the dropped
+    # replicas; round 5 onward is full again, membership epoch advanced twice
+    by_round = {r["round"]: r for r in res["rounds"]}
+    for k in (2, 3, 4):
+        assert by_round[k]["active"] == [0, 1, 2, 4, 6, 7]
+        assert by_round[k]["partner"][3] == 3 and by_round[k]["partner"][5] == 5
+    for k in (0, 1, 5, 6, 7, 8, 9):
+        assert by_round[k]["active"] == list(range(8))
+    assert res["membership"] == {"epoch": 2, "active": list(range(8))}
+
+
+# ---------------------------------------------------------------------------
+# Individual fault families
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_without_rejoin_keeps_training():
+    """Losing replicas permanently degrades capacity, not correctness: the
+    surviving active set keeps gossiping and descending."""
+    plan = FaultPlan.build([{"kind": "drop", "round": 1, "replicas": [0, 7]}])
+    res = run_elastic_training(TINY, plan, **{**KW, "steps": 30})
+    assert np.isfinite(res["losses"]).all()
+    assert res["losses"][-1] < 0.8 * res["losses"][0]
+    assert res["membership"]["active"] == [1, 2, 3, 4, 5, 6]
+    # every post-drop round pairs only survivors
+    for r in res["rounds"]:
+        if r["round"] >= 1:
+            assert r["active"] == [1, 2, 3, 4, 5, 6]
+            assert r["partner"][0] == 0 and r["partner"][7] == 7
+
+
+def test_straggler_misses_one_round(healthy8):
+    """A straggler misses exactly one outer round: its partner self-pairs
+    (self-momentum sit-out path), it keeps inner-training, and it rejoins the
+    next round's pairing with a 2m-step Δ — no divergence."""
+    plan = FaultPlan.build([
+        {"kind": "straggle", "round": 3, "replicas": [1], "rounds": 1},
+    ])
+    res = run_elastic_training(TINY, plan, **KW)
+    by_round = {r["round"]: r for r in res["rounds"]}
+    assert by_round[3]["absent"] == [1]
+    assert by_round[3]["partner"][1] == 1  # sat out...
+    assert by_round[4]["absent"] == []
+    assert by_round[4]["partner"][1] != 1  # ...back in the next draw
+    # membership never changed — stragglers are participation, not epoch
+    assert res["membership"]["epoch"] == 0
+    assert np.isfinite(res["losses"]).all()
+    he, fe = healthy8["evals"][-1][1], res["evals"][-1][1]
+    assert abs(fe - he) / he < 0.05, (fe, he)
+
+
+def test_partition_then_heal_recontracts(healthy8):
+    """A network partition splits the pairing graph into two islands that
+    drift apart (weight std grows vs healthy); healing re-mixes them and the
+    std re-contracts."""
+    plan = FaultPlan.build([
+        {"kind": "partition", "round": 1, "groups": [[0, 1, 2, 3], [4, 5, 6, 7]]},
+        {"kind": "heal", "round": 5},
+    ])
+    res = run_elastic_training(TINY, plan, **KW)
+    # structurally: rounds 1-4 never pair across the cut
+    for r in res["rounds"]:
+        if 1 <= r["round"] <= 4:
+            assert r["partition"] == [[0, 1, 2, 3], [4, 5, 6, 7]]
+            for i in range(8):
+                assert (i < 4) == (r["partner"][i] < 4)
+        else:
+            assert r["partition"] is None
+    # the islands drifted: spread at the heal point well above healthy
+    heal_step = 5 * KW["inner_steps"]
+    w = dict(res["weight_stds"])
+    hw = dict(healthy8["weight_stds"])
+    assert w[heal_step] > 1.3 * hw[heal_step], (w[heal_step], hw[heal_step])
+    # ...and healing re-contracts it
+    assert res["final_weight_std"] < 0.5 * max(w.values()), (
+        res["final_weight_std"], w
+    )
+    assert np.isfinite(res["losses"]).all()
+
+
+# ---------------------------------------------------------------------------
+# Rejoin warm-start state surgery
+# ---------------------------------------------------------------------------
+
+
+def test_rejoin_warm_start_adopts_peer_phi():
+    """The comeback replica adopts the source peer's φ as BOTH φ and θ, with
+    zero outer momentum and fresh AdamW moments."""
+    from repro.data import LoaderConfig, shard_iterator
+    from repro.launch.train import method_config
+    from repro.train import GossipProgram
+
+    tcfg = method_config("noloco", inner_lr=3e-3, total_steps=8, inner_steps=2)
+    prog = GossipProgram(TINY, tcfg, replicas=4, seed=0)
+    plan = FaultPlan.build([
+        {"kind": "drop", "step": 1, "replicas": [2]},
+        {"kind": "rejoin", "step": 5, "replicas": [2], "source": 0},
+    ])
+    sim = SimCluster(prog, plan)
+    it = shard_iterator(LoaderConfig(
+        vocab_size=TINY.vocab_size, seq_len=16, per_replica_batch=2, replicas=4
+    ))
+    state = sim.init_state(next(it))
+    rng = jax.random.PRNGKey(0)
+    for t in range(5):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, _ = sim.inner_step(state, batch, jax.random.fold_in(rng, t))
+        state, _ = sim.maybe_outer_step(state)
+    # t=5's inner step applies the rejoin first: φ/δ/opt surgery is visible
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, _ = sim.inner_step(state, batch, jax.random.fold_in(rng, 5))
+    for leaf_phi in jax.tree.leaves(state.outer.phi):
+        np.testing.assert_array_equal(np.asarray(leaf_phi[2]), np.asarray(leaf_phi[0]))
+    for leaf_delta in jax.tree.leaves(state.outer.delta):
+        assert not np.asarray(leaf_delta[2]).any()
+    assert int(state.opt.count[2]) == 1  # reset to 0, then one post-rejoin step
+    assert sim.membership.epoch == 2 and sim.membership.is_full
+
+
+def test_dropped_replica_is_frozen():
+    """While dropped, a replica's θ, φ, δ and AdamW moments do not move."""
+    from repro.data import LoaderConfig, shard_iterator
+    from repro.launch.train import method_config
+    from repro.train import GossipProgram
+
+    tcfg = method_config("noloco", inner_lr=3e-3, total_steps=8, inner_steps=2)
+    prog = GossipProgram(TINY, tcfg, replicas=4, seed=0)
+    sim = SimCluster(prog, FaultPlan.build(
+        [{"kind": "drop", "step": 2, "replicas": [1]}]
+    ))
+    it = shard_iterator(LoaderConfig(
+        vocab_size=TINY.vocab_size, seq_len=16, per_replica_batch=2, replicas=4
+    ))
+    state = sim.init_state(next(it))
+    rng = jax.random.PRNGKey(0)
+    snap = None
+    for t in range(6):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, _ = sim.inner_step(state, batch, jax.random.fold_in(rng, t))
+        state, _ = sim.maybe_outer_step(state)
+        if t == 2:
+            snap = jax.tree.map(lambda x: np.asarray(x[1]).copy(), {
+                "theta": state.theta, "phi": state.outer.phi,
+                "delta": state.outer.delta, "mu": state.opt.mu,
+            })
+    end = jax.tree.map(lambda x: np.asarray(x[1]), {
+        "theta": state.theta, "phi": state.outer.phi,
+        "delta": state.outer.delta, "mu": state.opt.mu,
+    })
+    for a, b in zip(jax.tree.leaves(snap), jax.tree.leaves(end)):
+        np.testing.assert_array_equal(a, b)
+    # the survivors did move
+    assert not np.allclose(
+        np.asarray(jax.tree.leaves(state.theta)[0][0]),
+        np.asarray(jax.tree.leaves(state.outer.phi)[0][1]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Resume across a membership change
+# ---------------------------------------------------------------------------
+
+
+def test_resume_after_membership_change(tmp_path):
+    """Checkpoint AFTER a drop, restore with the smaller active set: the
+    continued run reproduces the uninterrupted faulted trajectory exactly
+    (membership mask + epoch ride in the checkpoint)."""
+    plan = FaultPlan.build([{"kind": "drop", "round": 1, "replicas": [2, 6]}])
+    kw = dict(replicas=8, per_replica_batch=2, seq_len=32, steps=24,
+              inner_steps=4, inner_lr=3e-3, eval_every=0, seed=0,
+              total_steps=24)
+    full = run_elastic_training(TINY, plan, **kw)
+    d = str(tmp_path / "elastic")
+    run_elastic_training(TINY, plan, ckpt_dir=d, **{**kw, "steps": 12})
+    cont = run_elastic_training(TINY, plan, ckpt_dir=d, resume=True, **kw)
+    assert cont["start_step"] == 12
+    np.testing.assert_array_equal(
+        np.asarray(full["losses"][12:]), np.asarray(cont["losses"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(full["state"].theta)[0]),
+        np.asarray(jax.tree.leaves(cont["state"].theta)[0]),
+    )
+    assert cont["membership"] == {"epoch": 1,
+                                  "active": [0, 1, 3, 4, 5, 7]}
+    # post-resume rounds keep excluding the dropped replicas
+    for r in cont["rounds"]:
+        assert r["partner"][2] == 2 and r["partner"][6] == 6
+
+
+# ---------------------------------------------------------------------------
+# Plan plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_resume_mid_straggle_reproduces_trajectory(tmp_path):
+    """A straggler debt spanning the checkpoint boundary must survive the
+    restart: the resumed run keeps the replica out of the rounds it missed
+    in the uninterrupted run (straggle counters ride in the checkpoint)."""
+    plan = FaultPlan.build([
+        {"kind": "straggle", "round": 1, "replicas": [1], "rounds": 3},
+    ])
+    kw = dict(replicas=4, per_replica_batch=2, seq_len=32, steps=24,
+              inner_steps=4, inner_lr=3e-3, eval_every=0, seed=0,
+              total_steps=24)
+    full = run_elastic_training(TINY, plan, **kw)
+    d = str(tmp_path / "straggle")
+    # interrupt after rounds 1-2 were missed but round 3's debt is pending
+    run_elastic_training(TINY, plan, ckpt_dir=d, **{**kw, "steps": 12})
+    cont = run_elastic_training(TINY, plan, ckpt_dir=d, resume=True, **kw)
+    assert cont["start_step"] == 12
+    # round 3 (fires at step 16, post-resume) still excludes the straggler
+    by_round = {r["round"]: r for r in cont["rounds"]}
+    assert by_round[3]["absent"] == [1]
+    assert by_round[4]["absent"] == []
+    np.testing.assert_array_equal(
+        np.asarray(full["losses"][12:]), np.asarray(cont["losses"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(full["state"].theta)[0]),
+        np.asarray(jax.tree.leaves(cont["state"].theta)[0]),
+    )
+
+
+def test_membership_and_partition_checkpoint_roundtrip(tmp_path):
+    """The program's membership mask/epoch AND partition view ride in the
+    checkpoint pytree and restore onto a fresh program."""
+    from repro.checkpoint import restore, save
+    from repro.data import LoaderConfig, shard_iterator
+    from repro.launch.train import method_config
+    from repro.train import GossipProgram
+
+    tcfg = method_config("noloco", inner_lr=3e-3, total_steps=4, inner_steps=2)
+    prog = GossipProgram(TINY, tcfg, replicas=6, seed=0)
+    prog.set_membership(prog.membership.drop([4]))
+    prog.set_partition([(0, 1), (2, 3, 5)])
+    it = shard_iterator(LoaderConfig(
+        vocab_size=TINY.vocab_size, seq_len=16, per_replica_batch=1, replicas=6
+    ))
+    state = prog.init_state(next(it))
+    d = str(tmp_path)
+    save(d, 1, prog.state_pytree(state))
+    prog2 = GossipProgram(TINY, tcfg, replicas=6, seed=0)
+    st2 = prog2.load_state_pytree(prog2.init_state(next(it)), restore(d, 1))
+    assert prog2.membership == prog.membership
+    assert prog2.partition == ((0, 1), (2, 3, 5))
+    for a, b in zip(jax.tree.leaves(st2.theta), jax.tree.leaves(state.theta)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan.build([
+        {"kind": "drop", "round": 2, "replicas": [3, 5]},
+        {"kind": "straggle", "step": 7, "replicas": [1], "rounds": 2},
+        {"kind": "partition", "round": 4, "groups": [[0, 1], [2, 3]]},
+        {"kind": "heal", "round": 6},
+        {"kind": "rejoin", "round": 5, "replicas": [3], "source": 0},
+    ])
+    p = str(tmp_path / "plan.json")
+    plan.save(p)
+    loaded = FaultPlan.load(p)
+    assert loaded == plan
+    loaded.validate(world=8)
+    # resolution: round anchors scale with m, step anchors don't
+    assert loaded.events[0].resolved_step(5) == 10
+    assert loaded.events[1].resolved_step(5) == 7
+
+
+def test_fault_plan_validation_rejects_bad_events():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.build([{"kind": "nuke", "step": 0}]).validate(4)
+    with pytest.raises(ValueError, match="exactly one of step/round"):
+        FaultPlan.build([{"kind": "drop", "replicas": [0]}]).validate(4)
+    with pytest.raises(ValueError, match="outside world"):
+        FaultPlan.build([{"kind": "drop", "step": 0, "replicas": [9]}]).validate(4)
+    with pytest.raises(ValueError, match="disjoint"):
+        FaultPlan.build([
+            {"kind": "partition", "step": 0, "groups": [[0, 1], [1, 2]]}
+        ]).validate(4)
+    with pytest.raises(ValueError, match="needs replicas"):
+        FaultPlan.build([{"kind": "rejoin", "round": 1}]).validate(4)
+
+
+def test_membership_api():
+    m = Membership.full(6)
+    assert m.is_full and m.epoch == 0 and m.num_active == 6
+    d = m.drop([1, 4])
+    assert d.active_ids == (0, 2, 3, 5) and d.epoch == 1
+    with pytest.raises(ValueError, match="already inactive"):
+        d.drop([1])
+    back = d.add([1])
+    assert back.epoch == 2 and back.active_ids == (0, 1, 2, 3, 5)
+    with pytest.raises(ValueError, match="already active"):
+        back.add([0])
+    # transient straggler view: same epoch
+    t = back.without([0])
+    assert t.epoch == back.epoch and 0 not in t.active_ids
+    with pytest.raises(ValueError, match="at least one active"):
+        Membership(world=2, mask=(False, False))

