@@ -59,24 +59,41 @@ def save(path: str, step: int, tree: Any, *, keep: int | None = None) -> str:
     """Serialize a pytree of arrays (dataclass states should be passed as
     dicts via dataclasses.asdict-style conversion by the caller).
 
+    The write is ATOMIC at the directory level: contents go into a
+    ``step_XXXXXXXX.tmp`` staging directory that is renamed into place only
+    once both files are fully written.  A run killed mid-save (the elastic
+    story's normal failure mode — node churn) can therefore never leave a
+    half-written latest checkpoint for ``--resume`` to pick up;
+    :func:`latest_step` ignores staging directories by construction.
+
     ``keep``: retain only the newest ``keep`` step directories (incl. this
     one) — bounds disk use under the engine's periodic checkpointing."""
+    import shutil
+
     d = os.path.join(path, f"step_{step:08d}")
-    os.makedirs(d, exist_ok=True)
+    tmp = d + ".tmp"
+    # sweep staging leftovers from runs killed mid-save (any step, not just
+    # this one) so crashes can't accumulate unpruned disk use
+    if os.path.isdir(path):
+        for name in os.listdir(path):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(path, name), ignore_errors=True)
+    os.makedirs(tmp, exist_ok=True)
     leaves: list[np.ndarray] = []
     manifest = _encode_tree(tree, leaves)
-    with open(os.path.join(d, "manifest.msgpack"), "wb") as f:
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
     blobs = []
     for arr in leaves:
         a = np.ascontiguousarray(arr)  # NB: promotes 0-d to 1-d; keep arr.shape
         # bfloat16 has no numpy dtype string msgpack knows; ship raw bytes
         blobs.append({"dtype": str(a.dtype), "shape": list(arr.shape), "data": a.tobytes()})
-    with open(os.path.join(d, "arrays.msgpack"), "wb") as f:
+    with open(os.path.join(tmp, "arrays.msgpack"), "wb") as f:
         f.write(msgpack.packb(blobs))
+    shutil.rmtree(d, ignore_errors=True)  # re-saving the same step overwrites
+    os.rename(tmp, d)
     if keep is not None and keep > 0:
         import re
-        import shutil
 
         found = sorted(
             (int(m.group(1)), n)

@@ -154,17 +154,40 @@ class ShardedPermute(Communicator):
 
 
 class AllReduce(Communicator):
-    """lax.pmean over the replica axes — the DiLoCo all-reduce baseline."""
+    """lax.pmean over the replica axes — the DiLoCo all-reduce baseline.
 
-    def __init__(self, axis_names: Sequence[str], cfg: CommConfig | None = None):
+    ``weight`` (optional scalar, this shard's participation weight) turns the
+    mean into the elastic weighted mean ``psum(w·x)/psum(w)`` — the shard_map
+    twin of ``StackedGather(active=…)``: a dropped replica contributes zero
+    weight, every replica still receives the group mean (freezing
+    non-participants is the outer step's job, not the communicator's).
+    """
+
+    def __init__(
+        self,
+        axis_names: Sequence[str],
+        cfg: CommConfig | None = None,
+        *,
+        weight: jax.Array | None = None,
+    ):
         self.axis_names = tuple(axis_names)
         self.cfg = cfg or CommConfig()
+        self.weight = None if weight is None else jnp.asarray(weight, jnp.float32)
 
     def exchange(self, tree: PyTree) -> PyTree:
         raise NotImplementedError("AllReduce has no pairwise exchange; use pmean")
 
     def allreduce_mean(self, tree: PyTree) -> PyTree:
-        return jax.tree.map(lambda x: jax.lax.pmean(x, self.axis_names), tree)
+        if self.weight is None:
+            return jax.tree.map(lambda x: jax.lax.pmean(x, self.axis_names), tree)
+        w = self.weight.reshape(())
+        denom = jnp.maximum(jax.lax.psum(w, self.axis_names), 1.0)
+
+        def _masked(x):
+            s = jax.lax.psum(x * w.astype(x.dtype), self.axis_names)
+            return (s / denom.astype(x.dtype)).astype(x.dtype)
+
+        return jax.tree.map(_masked, tree)
 
 
 def exchange_gossip(

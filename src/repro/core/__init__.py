@@ -13,11 +13,15 @@ from repro.core.outer import (
     outer_step_sharded_overlapped,
     outer_step_stacked,
 )
+from repro.core.elastic import ElasticContext, RoundPlan, stream_assignment
 from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
 from repro.core.pairing import Membership
 from repro.core import latency, pairing, theory
 
 __all__ = [
+    "ElasticContext",
+    "RoundPlan",
+    "stream_assignment",
     "OuterConfig",
     "OuterState",
     "default_gamma",

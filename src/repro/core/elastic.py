@@ -1,0 +1,204 @@
+"""ElasticContext: the runtime-agnostic owner of elasticity state.
+
+Every :class:`~repro.train.program.TrainProgram` adapter that supports churn
+(stacked :class:`~repro.train.GossipProgram`, shard_map
+:class:`~repro.train.DistributedProgram`, routed
+:class:`~repro.train.PipelineProgram`) holds ONE of these; the runtimes never
+own membership themselves.  The context carries exactly four things
+(DESIGN.md §7):
+
+  * ``membership``    — the epoch-stamped :class:`~repro.core.pairing.
+    Membership` bitmask over replica slots (who is in the cluster),
+  * ``partition``     — the transient network-partition view (pairings never
+    cross a component),
+  * ``round_absent``  — stragglers missing the NEXT outer round only
+    (participation, not membership; consumed by :meth:`plan_round`),
+  * ``last_partner``  — the partner table the last outer round ACTUALLY used
+    (the audit source for :class:`~repro.sim.SimCluster` history/telemetry).
+
+:meth:`plan_round` is the one place the round's participant set is decided:
+it consumes the straggler view, degrades an all-absent round to a frozen
+no-exchange round (the outer counter still advances so the schedule stays
+aligned), and hands the caller a :class:`RoundPlan` with the active mask and
+the partner table from the caller-supplied ``partner_fn`` — each runtime
+supplies its own (stacked gather table, ppermute pool pairs, per-stage
+pipeline tables), the membership semantics stay shared.
+
+The checkpoint view (:meth:`state_dict` / :meth:`load_state_dict`) rides in
+every program's ``state_pytree``, so resume-after-churn restores the same
+membership epoch on all three runtimes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.pairing import Membership
+
+__all__ = ["ElasticContext", "RoundPlan", "stream_assignment"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """One outer round's participation, as decided by ``plan_round``."""
+
+    participants: Membership          # membership minus this round's stragglers
+    partner: np.ndarray | None        # (world,) table used, None for all-reduce
+    active: np.ndarray | None         # (world,) bool mask, None when full
+    all_absent: bool = False          # every live replica timed out this round
+
+
+class ElasticContext:
+    """Membership epoch + active mask + partner source, shared by runtimes."""
+
+    def __init__(
+        self,
+        membership: Membership | None = None,
+        *,
+        world: int | None = None,
+    ):
+        # NB: no seed lives here on purpose — pairing PRNG seeds belong to
+        # the partner source (trainer config / program pool); the context
+        # only decides WHO participates, never how they pair.
+        if membership is None:
+            if world is None:
+                raise ValueError("ElasticContext needs a membership or a world size")
+            membership = Membership.full(world)
+        self.membership = membership
+        self.partition: tuple[tuple[int, ...], ...] | None = None
+        self.round_absent: frozenset[int] = frozenset()
+        self.last_partner: np.ndarray | None = None
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def world(self) -> int:
+        return self.membership.world
+
+    @property
+    def epoch(self) -> int:
+        return self.membership.epoch
+
+    @property
+    def is_full(self) -> bool:
+        return self.membership.is_full
+
+    def active_array(self) -> np.ndarray | None:
+        """(world,) bool mask for inner-step freezing, or None when everyone
+        is in (keeps the healthy path's compiled signature untouched)."""
+        if self.membership.is_full:
+            return None
+        return self.membership.active_array()
+
+    def active_ids(self) -> tuple[int, ...]:
+        return self.membership.active_ids
+
+    # -- mutation ------------------------------------------------------------
+
+    def set_membership(self, membership: Membership) -> None:
+        if membership.world != self.world:
+            raise ValueError(
+                f"membership world {membership.world} != world {self.world}"
+            )
+        self.membership = membership
+
+    def set_partition(self, groups: Sequence[Sequence[int]] | None) -> None:
+        """Restrict pairings to partition components (None heals)."""
+        self.partition = (
+            None if groups is None
+            else tuple(tuple(int(r) for r in g) for g in groups)
+        )
+
+    # -- the round decision ---------------------------------------------------
+
+    def plan_round(
+        self,
+        partner_fn: Callable[[Membership], np.ndarray] | None = None,
+    ) -> RoundPlan:
+        """Decide one outer round's participants; consumes ``round_absent``.
+
+        ``partner_fn(participants)`` supplies the runtime's partner table for
+        the decided participant set (None for all-reduce methods).  The
+        returned table is recorded as ``last_partner`` — the audit value, the
+        one the round REALLY used."""
+        absent, self.round_absent = self.round_absent, frozenset()
+        active_now = set(self.membership.active_ids)
+        absent = absent & active_now
+        if absent == active_now:
+            # every live replica timed out: nobody exchanges, but the round
+            # still happens (the outer counter must advance so the schedule
+            # stays aligned across the cluster)
+            self.last_partner = np.arange(self.world, dtype=np.int64)
+            return RoundPlan(
+                participants=self.membership,
+                partner=self.last_partner,
+                active=np.zeros((self.world,), dtype=bool),
+                all_absent=True,
+            )
+        participants = self.membership.without(absent)
+        partner = None if partner_fn is None else partner_fn(participants)
+        self.last_partner = partner
+        active = None if participants.is_full else participants.active_array()
+        return RoundPlan(participants=participants, partner=partner, active=active)
+
+    # -- checkpoint view ------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        part = np.full((self.world,), -1, dtype=np.int64)
+        if self.partition is not None:
+            for gid, group in enumerate(self.partition):
+                for r in group:
+                    part[r] = gid
+        return {
+            "mask": np.asarray(self.membership.mask, dtype=bool),
+            "epoch": np.int64(self.membership.epoch),
+            "partition": part,
+        }
+
+    def load_state_dict(self, tree: dict) -> None:
+        self.membership = Membership(
+            world=self.world,
+            mask=tuple(bool(b) for b in np.asarray(tree["mask"])),
+            epoch=int(tree["epoch"]),
+        )
+        part = np.asarray(tree["partition"])
+        if (part >= 0).any():
+            self.partition = tuple(
+                tuple(int(i) for i in np.nonzero(part == g)[0])
+                for g in sorted(set(int(p) for p in part if p >= 0))
+            )
+        else:
+            self.partition = None
+
+
+def stream_assignment(membership: Membership, t: int) -> np.ndarray:
+    """Elastic data reassignment: which loader stream each replica consumes
+    at inner step ``t`` — a pure function of ``(membership, t)``.
+
+    The loader's contract (:func:`repro.data.shard_iterator`) makes stream
+    ``r`` at step ``t`` a pure function of ``(seed, r, t)``, so redistributing
+    data needs no loader state: each dropped replica's stream is adopted by a
+    survivor (round-robin over actives by dropped rank), and the survivor
+    TIME-MULTIPLEXES its own stream with its adopted ones — at step ``t`` it
+    reads ``pool[t % len(pool)]`` where ``pool`` is its own stream followed by
+    the adopted ones.  Every stream keeps being consumed (at a reduced rate),
+    no token is read twice in a step, and the assignment is reproducible
+    after resume because nothing here is stateful.
+
+    Identity at full membership; inactive replicas map to their own stream
+    (they are frozen — the row is never consumed)."""
+    world = membership.world
+    table = np.arange(world, dtype=np.int64)
+    if membership.is_full:
+        return table
+    actives = sorted(membership.active_ids)
+    dropped = [r for r in range(world) if r not in set(actives)]
+    pools: dict[int, list[int]] = {a: [a] for a in actives}
+    for rank, d in enumerate(dropped):
+        pools[actives[rank % len(actives)]].append(d)
+    for a, pool in pools.items():
+        table[a] = pool[t % len(pool)]
+    return table

@@ -386,6 +386,7 @@ def outer_step_sharded(
     fuse_payload: bool = False,
     comm_cfg: CommConfig | None = None,
     kernel_cfg: KernelConfig | None = None,
+    active_flag: jax.Array | None = None,
 ) -> tuple[OuterState, PyTree]:
     """One outer step inside ``shard_map``: each program instance holds ONE
     replica's (φ, δ, θ) shards.
@@ -397,6 +398,12 @@ def outer_step_sharded(
 
     ``fuse_payload`` is the legacy switch for ``comm_cfg.fuse``; pass a full
     :class:`~repro.comm.CommConfig` to also select a wire codec.
+
+    ``active_flag`` (optional scalar: does THIS shard's replica participate
+    in the round?) feeds the elastic DiLoCo weighted mean — NoLoCo needs no
+    flag here because sit-outs are already encoded as self-loops in ``perm``;
+    FREEZING a non-participant's (φ, δ, θ) is the caller's select, since only
+    the caller still holds the pre-step values.
     """
     cfg.validate()
     axis_names = tuple(axis_names)
@@ -408,7 +415,10 @@ def outer_step_sharded(
             raise ValueError("sharded NoLoCo requires an explicit ppermute perm")
         comm = exchange_lib.ShardedPermute(axis_names, perm, comm_cfg)
     elif cfg.method == "diloco":
-        comm = exchange_lib.AllReduce(axis_names)
+        weight = None
+        if active_flag is not None:
+            weight = jnp.asarray(active_flag, jnp.float32).reshape(())
+        comm = exchange_lib.AllReduce(axis_names, weight=weight)
     new_state, new_theta, _ = outer_step(state, theta, cfg, comm, kernel_cfg=kernel_cfg)
     return new_state, new_theta
 

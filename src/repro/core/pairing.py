@@ -42,10 +42,16 @@ __all__ = [
     "group_assignment",
     "partner_table",
     "ppermute_pairs",
+    "hypercube_dim",
+    "hypercube_partner_table",
+    "hypercube_ppermute_pairs",
     "all_pairs_seen",
     "Membership",
     "elastic_partner_table",
     "elastic_ppermute_pairs",
+    "elastic_hypercube_partner_table",
+    "elastic_hypercube_ppermute_pairs",
+    "elastic_route_permutation",
 ]
 
 
@@ -100,9 +106,22 @@ def ppermute_pairs(step: int, world: int, *, seed: int = 0) -> list[tuple[int, i
     return [(int(src), int(partner[src])) for src in range(world)]
 
 
+def hypercube_dim(step: int, world: int, *, seed: int = 0) -> int:
+    """The hypercube dimension ``j`` used at outer step ``step``: a random
+    cyclic order over the log2(world) dimensions, refreshed every log2(world)
+    steps.  Exposed separately because ``j`` is the compiled-program pool key
+    of the hypercube schedule (``parallel.steps.OuterProgramPool``)."""
+    if world & (world - 1):
+        raise ValueError("hypercube schedule needs a power-of-two world size")
+    dims = max(int(np.log2(world)), 1)
+    cycle, slot = divmod(step, dims)
+    order = np.random.default_rng((seed + 1) * 7_919 + cycle).permutation(dims)
+    return int(order[slot])
+
+
 def hypercube_partner_table(step: int, world: int, *, seed: int = 0) -> np.ndarray:
     """Deterministic HYPERCUBE gossip schedule: partner = id XOR 2^j, with the
-    dimension j drawn pseudo-randomly per step.
+    dimension j drawn pseudo-randomly per step (:func:`hypercube_dim`).
 
     Why it exists: ``lax.ppermute`` needs a STATIC permutation, so uniformly
     random matchings require a precompiled pool of programs.  The hypercube
@@ -110,14 +129,10 @@ def hypercube_partner_table(step: int, world: int, *, seed: int = 0) -> np.ndarr
     optimally — after any log2(world) consecutive distinct dimensions, every
     pair of replicas has exchanged information (a classic dissemination
     bound).  Requires a power-of-two world."""
-    if world & (world - 1):
-        raise ValueError("hypercube schedule needs a power-of-two world size")
-    dims = int(np.log2(world))
-    # random cyclic order over dimensions, refreshed every `dims` steps
-    epoch, slot = divmod(step, dims)
-    order = np.random.default_rng((seed + 1) * 7_919 + epoch).permutation(dims)
-    j = int(order[slot])
+    j = hypercube_dim(step, world, seed=seed)
     ids = np.arange(world, dtype=np.int64)
+    if world == 1:
+        return ids
     return ids ^ (1 << j)
 
 
@@ -270,6 +285,78 @@ def elastic_ppermute_pairs(
     mesh (``lax.ppermute`` needs every device addressed)."""
     table = elastic_partner_table(step, membership, seed=seed, groups=groups)
     return [(int(src), int(table[src])) for src in range(membership.world)]
+
+
+def elastic_hypercube_partner_table(
+    step: int,
+    membership: Membership,
+    *,
+    seed: int = 0,
+    groups: Sequence[Sequence[int]] | None = None,
+) -> np.ndarray:
+    """Membership-filtered hypercube matching: partner = id XOR 2^j, with any
+    pair touching an inactive replica (or crossing a partition component)
+    degraded to two self-loops.
+
+    This is the BOUNDED-COMPILE elastic schedule: the table is a pure function
+    of ``(j, membership)``, so a compiled-program pool needs at most
+    log2(world) programs PER MEMBERSHIP VIEW (vs ``pairing_pool`` for the
+    random schedule).  With full membership and no partition it is
+    bit-identical to :func:`hypercube_partner_table` — and, like it, an
+    involution by construction (XOR pairs are symmetric; degrading one
+    endpoint to a self-loop degrades both)."""
+    world = membership.world
+    j = hypercube_dim(step, world, seed=seed)
+    ids = np.arange(world, dtype=np.int64)
+    if world == 1:
+        return ids
+    raw = ids ^ (1 << j)
+    # component id per replica: one component without a partition; replicas
+    # outside every partition group get -1 (they sit out, like the random
+    # elastic schedule)
+    comp = np.zeros(world, dtype=np.int64)
+    if groups is not None:
+        comp[:] = -1
+        for gid, g in enumerate(groups):
+            for r in g:
+                comp[int(r)] = gid
+    active = np.asarray(membership.mask, dtype=bool)
+    ok = active & active[raw] & (comp == comp[raw]) & (comp >= 0)
+    return np.where(ok, raw, ids)
+
+
+def elastic_hypercube_ppermute_pairs(
+    step: int,
+    membership: Membership,
+    *,
+    seed: int = 0,
+    groups: Sequence[Sequence[int]] | None = None,
+) -> list[tuple[int, int]]:
+    table = elastic_hypercube_partner_table(step, membership, seed=seed, groups=groups)
+    return [(int(src), int(table[src])) for src in range(membership.world)]
+
+
+def elastic_route_permutation(
+    step: int, membership: Membership, *, seed: int = 0
+) -> np.ndarray:
+    """Membership-aware pipeline routing permutation: the full-world
+    permutation of :func:`pairing_permutation` restricted to the ACTIVE ids.
+
+    ``route[i]`` is the replica whose activations replica ``i`` consumes at
+    the next stage boundary; inactive replicas route to themselves (their
+    stages are frozen and carry no traffic).  With full membership this is
+    bit-identical to ``pairing_permutation(step, world)`` — the routed
+    pipeline's existing schedule — and for any membership it restricts to a
+    bijection on the active set (the paper's backward-retraces-forward rule
+    stays exact under churn)."""
+    world = membership.world
+    perm = np.asarray(pairing_permutation(step, world, seed=seed), dtype=np.int64)
+    route = np.arange(world, dtype=np.int64)
+    active = set(membership.active_ids)
+    targets = [int(r) for r in perm if int(r) in active]
+    for slot, src in zip(sorted(active), targets):
+        route[slot] = src
+    return route
 
 
 def all_pairs_seen(steps: int, world: int, *, seed: int = 0) -> np.ndarray:

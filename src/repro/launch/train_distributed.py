@@ -1,11 +1,19 @@
 """Distributed NoLoCo training driver: the shard_map runtime
 (parallel/steps.py) — per-replica inner AdamW steps with ZERO cross-replica
-collectives, plus a gossip outer step every m steps from a PRECOMPILED pool
-of pairing programs (ppermute needs static permutations).
+collectives, plus a gossip outer step every m steps from the per-membership-
+view :class:`~repro.parallel.steps.OuterProgramPool` (ppermute needs static
+permutations; the pool bounds recompiles to ``pairing_pool`` — or log2(world)
+with ``--schedule hypercube`` — per membership view, recompiling only at
+membership-view boundaries).
 
 :class:`DistributedTrainer` owns the compiled programs and mesh state; the
 step loop, eval cadence, telemetry and checkpoint/resume are the unified
 engine's (:mod:`repro.train`, via :class:`~repro.train.DistributedProgram`).
+Elasticity (drop / rejoin / straggle under ``--fault-plan``) is owned by a
+:class:`~repro.core.elastic.ElasticContext` exactly as in the stacked
+runtime, replayed by the same :class:`~repro.sim.SimCluster`, with rejoin
+warm-start performed over the mesh and the membership epoch riding in the
+checkpoint — resume-after-churn reproduces the trajectory exactly.
 
 On this CPU box it runs on forced host devices for validation:
 
@@ -20,7 +28,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import json
+import time
 from typing import Any
 
 import numpy as np
@@ -31,7 +41,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm import CommConfig
 from repro.configs import registry
-from repro.core import pairing
+from repro.core.elastic import ElasticContext
 from repro.core.outer import OuterConfig
 from repro.kernels.dispatch import KernelConfig
 from repro.data import LoaderConfig
@@ -60,9 +70,21 @@ class DistributedTrainer:
     pairing_pool: int = 16        # precompiled random matchings, cycled
     schedule: str = "random"      # "random" pool | "hypercube" (log2 N programs)
     seed: int = 0
+    elastic: ElasticContext | None = None  # None: fixed-world (no churn support)
 
     def __post_init__(self):
-        self._outer_fns: dict[Any, Any] = {}
+        if self.elastic is not None:
+            if self.elastic.world != self.plan.replicas:
+                raise ValueError(
+                    f"elastic world {self.elastic.world} != plan replicas "
+                    f"{self.plan.replicas}"
+                )
+            if self.comm_cfg.overlap:
+                raise ValueError(
+                    "elastic membership does not support the φ-prefetch overlap "
+                    "(the pre-send pairing would be invalidated by churn)"
+                )
+        self.recompile_events: list[dict] = []
 
     # -- setup -------------------------------------------------------------
 
@@ -81,12 +103,16 @@ class DistributedTrainer:
             )
             phi = jax.device_put(vals, self.bundle.theta_shardings)
             delta = jax.tree.map(jnp.zeros_like, phi)
-            rep = self.plan.replica_axes
-            rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
             step_c = jax.device_put(
                 jnp.zeros((self.plan.replicas,), jnp.int32),
-                NamedSharding(self.mesh, P(rep_entry)),
+                NamedSharding(self.mesh, P(self.plan.replica_entry)),
             )
+        self.pool = steps_lib.OuterProgramPool(
+            self.plan, self.mesh, self.bundle.pspecs, self.outer_cfg,
+            comm_cfg=self.comm_cfg, kernel_cfg=self.kernel_cfg,
+            schedule=self.schedule, pairing_pool=self.pairing_pool,
+            seed=self.seed,
+        )
         self._bspecs = steps_lib.batch_pspecs(self.plan, batch_example)
         self._theta_struct = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), theta
@@ -100,40 +126,78 @@ class DistributedTrainer:
             state["phi_pre"] = jax.tree.map(jnp.copy, phi)
         return state
 
-    def _pool_perm(self, outer_index: int):
-        """(pool key, static ppermute pairs) for one outer step index."""
-        world = self.plan.replicas
-        if self.schedule == "hypercube":
-            key = outer_index % max(int(np.log2(world)), 1)
-            return key, pairing.hypercube_ppermute_pairs(key, world, seed=self.seed)
-        key = outer_index % self.pairing_pool
-        return key, pairing.ppermute_pairs(key, world, seed=self.seed)
+    # -- elastic helpers ----------------------------------------------------
 
-    def _outer_fn(self, outer_index: int):
-        """Compiled gossip program for this outer step (cycled pool).
+    @functools.cached_property
+    def _take_rows(self):
+        """jit: gather the given replica rows of a stacked tree."""
+        return jax.jit(lambda tree, ids: jax.tree.map(
+            lambda x: jnp.take(x, ids, axis=0), tree
+        ))
 
-        With ``comm_cfg.overlap`` the program also pre-sends φ′ along the NEXT
-        pairing, so it is keyed by the (this, next) pool-key pair."""
-        key, perm = self._pool_perm(outer_index)
-        perm_next = None
-        if self.comm_cfg.overlap and self.outer_cfg.method == "noloco":
-            key_next, perm_next = self._pool_perm(outer_index + 1)
-            key = (key, key_next)
-        if key not in self._outer_fns:
-            with compat.set_mesh(self.mesh):
-                self._outer_fns[key] = steps_lib.build_outer_step(
-                    self.plan, self.mesh, self.bundle.pspecs, self.outer_cfg, perm,
-                    comm_cfg=self.comm_cfg, perm_next=perm_next,
-                    kernel_cfg=self.kernel_cfg,
-                )
-        return self._outer_fns[key]
+    @functools.cached_property
+    def _put_rows(self):
+        """jit: scatter saved replica rows back into a stacked tree."""
+        return jax.jit(lambda tree, ids, rows: jax.tree.map(
+            lambda x, r: x.at[ids].set(r), tree, rows
+        ))
+
+    @functools.cached_property
+    def _warm_start_fn(self):
+        """jit: rejoin surgery over the mesh — the comeback replica adopts a
+        live peer's slow weights as BOTH φ and θ (fresh look-ahead), zero
+        outer momentum, zero inner-optimizer moments."""
+        def surgery(theta, phi, delta, mu, nu, count, replica, source):
+            adopt = lambda x: x.at[replica].set(x[source])
+            zero = lambda x: x.at[replica].set(jnp.zeros_like(x[replica]))
+            theta = jax.tree.map(
+                lambda th, p: th.at[replica].set(p[source]), theta, phi
+            )
+            return (
+                theta,
+                jax.tree.map(adopt, phi),
+                jax.tree.map(zero, delta),
+                jax.tree.map(zero, mu),
+                jax.tree.map(zero, nu),
+                count.at[replica].set(0),
+            )
+        return jax.jit(surgery)
+
+    def warm_start(self, state: dict, replica: int, source: int) -> dict:
+        theta, phi, delta, mu, nu, count = self._warm_start_fn(
+            state["theta"], state["phi"], state["delta"],
+            state["opt"].mu, state["opt"].nu, state["opt"].count,
+            jnp.asarray(replica), jnp.asarray(source),
+        )
+        from repro.optim import AdamWState
+
+        return dict(state, theta=theta, phi=phi, delta=delta,
+                    opt=AdamWState(mu=mu, nu=nu, count=count))
+
+    def _active_mask(self) -> np.ndarray | None:
+        if self.elastic is None:
+            return None
+        return self.elastic.active_array()
 
     # -- steps ---------------------------------------------------------------
 
     def inner_step(self, state, batch):
+        mask = self._active_mask()
+        snap = None
+        if mask is not None:
+            # freeze dropped replicas: the step function donates its inputs,
+            # so their pre-step rows are snapshotted and written back after
+            ids = jnp.asarray(np.nonzero(~mask)[0])
+            snap = (
+                self._take_rows(state["theta"], ids),
+                self._take_rows(state["opt"], ids),
+            )
         with compat.set_mesh(self.mesh):
             batch = jax.device_put(batch, plans_lib.shardings(self.mesh, self._bspecs))
             theta, opt, metrics = self.bundle.step_fn(state["theta"], state["opt"], batch)
+            if snap is not None:
+                theta = self._put_rows(theta, ids, snap[0])
+                opt = self._put_rows(opt, ids, snap[1])
         state = dict(state, theta=theta, opt=opt, inner_step=state["inner_step"] + 1)
         return state, metrics
 
@@ -141,19 +205,84 @@ class DistributedTrainer:
         if state["inner_step"] % self.outer_cfg.inner_steps:
             return state, False
         outer_index = state["inner_step"] // self.outer_cfg.inner_steps - 1
-        fn = self._outer_fn(outer_index)
+        if self.elastic is None:
+            fn, info = self.pool.program(
+                outer_index, overlap_next=self.comm_cfg.overlap
+            )
+        else:
+            partner_fn = None
+            if self.outer_cfg.method == "noloco":
+                # the ppermute pairs ARE the audit table: dst indexed by src
+                def partner_fn(parts):
+                    return np.asarray(
+                        [d for _, d in self.pool.pairs_for(
+                            outer_index, parts, self.elastic.partition
+                        )[1]],
+                        dtype=np.int64,
+                    )
+
+            plan = self.elastic.plan_round(partner_fn)
+            if plan.all_absent:
+                fn, info = self._all_absent_program(outer_index)
+            else:
+                fn, info = self.pool.program(
+                    outer_index, plan.participants, self.elastic.partition
+                )
+        t0 = time.time()
         with compat.set_mesh(self.mesh):
             if self.comm_cfg.overlap and self.outer_cfg.method == "noloco":
                 theta, phi, delta, phi_pre, step_c = fn(
                     state["theta"], state["phi"], state["delta"],
                     state["phi_pre"], state["outer_step"],
                 )
-                return dict(state, theta=theta, phi=phi, delta=delta,
-                            phi_pre=phi_pre, outer_step=step_c), True
-            theta, phi, delta, step_c = fn(
-                state["theta"], state["phi"], state["delta"], state["outer_step"]
-            )
-        return dict(state, theta=theta, phi=phi, delta=delta, outer_step=step_c), True
+                new = dict(state, theta=theta, phi=phi, delta=delta,
+                           phi_pre=phi_pre, outer_step=step_c)
+            else:
+                theta, phi, delta, step_c = fn(
+                    state["theta"], state["phi"], state["delta"], state["outer_step"]
+                )
+                new = dict(state, theta=theta, phi=phi, delta=delta,
+                           outer_step=step_c)
+        if info["compiled"]:
+            # first invocation of a fresh program: its wall-clock includes the
+            # lazy XLA compile — the churn-induced stall telemetry measures
+            for ev in self.pool.drain_events():
+                self.recompile_events.append(dict(
+                    ev, wall_s=round(time.time() - t0, 4),
+                    outer_index=outer_index,
+                ))
+        return new, True
+
+    def _all_absent_program(self, outer_index: int):
+        """Every live replica timed out: identity pairing + all-frozen mask,
+        cached in the pool (one extra entry total) and telemetered like any
+        other program."""
+        world = self.plan.replicas
+        key = "all-absent"  # identity pairing — the slot is irrelevant
+        if key not in self.pool._programs:
+            self.pool.misses += 1
+            t0 = time.time()
+            with compat.set_mesh(self.mesh):
+                self.pool._programs[key] = steps_lib.build_outer_step(
+                    self.plan, self.mesh, self.bundle.pspecs, self.outer_cfg,
+                    [(i, i) for i in range(world)],
+                    comm_cfg=self.comm_cfg, kernel_cfg=self.kernel_cfg,
+                    active=np.zeros((world,), dtype=bool),
+                )
+            self.pool.events.append({
+                "slot": key, "view": "all-absent", "epoch": None,
+                "build_s": round(time.time() - t0, 4),
+                "pool_size": len(self.pool._programs),
+            })
+            return self.pool._programs[key], {
+                "key": key, "slot": key, "view": "all-absent",
+                "compiled": True, "pool_size": len(self.pool._programs),
+            }
+        self.pool.hits += 1
+        return self.pool._programs[key], {
+            "key": key, "slot": key, "view": "all-absent",
+            "compiled": False, "pool_size": len(self.pool._programs),
+        }
 
     def eval_loss(self, state, batch):
         """Grad-free per-replica losses (R,) via the bundle's eval program."""
@@ -183,6 +312,8 @@ def main() -> None:
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--schedule", default="random", choices=["random", "hypercube"])
+    ap.add_argument("--pairing-pool", type=int, default=16,
+                    help="random-schedule matchings per membership view")
     ap.add_argument("--codec", default="none",
                     choices=["none", "fp16", "bf16", "int8"],
                     help="gossip wire codec (repro.comm)")
@@ -190,6 +321,12 @@ def main() -> None:
                     help="one ppermute per leaf instead of one fused buffer per dtype")
     ap.add_argument("--overlap", action="store_true",
                     help="§3.2 φ-prefetch: pre-send φ′ along the next pairing")
+    ap.add_argument("--fault-plan", default=None,
+                    help="JSON FaultPlan (repro.sim.faults): run the shard_map "
+                         "runtime elastically under churn")
+    ap.add_argument("--reassign-data", action="store_true",
+                    help="redistribute dropped replicas' loader streams over "
+                         "survivors (repro.core.elastic.stream_assignment)")
     add_engine_flags(ap)
     args = ap.parse_args()
 
@@ -198,12 +335,27 @@ def main() -> None:
             f"need {args.data * args.model} devices; set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=N"
         )
+    if args.fault_plan and args.overlap:
+        raise SystemExit("--fault-plan and --overlap are mutually exclusive "
+                         "(elastic membership invalidates the pre-send pairing)")
     mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
     kcfg = kernel_config_from_args(args)
     cfg = registry.get_config(args.arch).reduced(
         vocab_size=512, dtype="float32", remat=False, kernels=kcfg
     )
     plan = plans_lib.make_plan("gossip_dp", mesh, shape_kind="train")
+
+    elastic = None
+    fault_plan = None
+    if args.fault_plan:
+        from repro.sim import FaultPlan
+
+        fault_plan = FaultPlan.load(args.fault_plan)
+        elastic = ElasticContext(world=plan.replicas)
+        horizon = fault_plan.max_anchor_step(args.inner_steps)
+        if horizon >= args.steps:
+            print(f"WARNING: fault plan extends to step {horizon} but the run "
+                  f"stops at {args.steps}; later events never fire", flush=True)
 
     trainer = DistributedTrainer(
         cfg=cfg, mesh=mesh, plan=plan,
@@ -212,13 +364,21 @@ def main() -> None:
         comm_cfg=CommConfig(codec=args.codec, fuse=not args.no_fuse,
                             overlap=args.overlap),
         kernel_cfg=kcfg,
-        schedule=args.schedule, seed=args.seed,
+        schedule=args.schedule, pairing_pool=args.pairing_pool, seed=args.seed,
+        elastic=elastic,
     )
 
     from repro.train import DistributedProgram, LoopConfig, make_loop
 
+    program: Any = DistributedProgram(trainer)
+    if fault_plan is not None:
+        from repro.sim import SimCluster
+
+        program = SimCluster(program, fault_plan,
+                             reassign_data=args.reassign_data)
+
     loop = make_loop(
-        DistributedProgram(trainer),
+        program,
         LoaderConfig(
             vocab_size=cfg.vocab_size, seq_len=args.seq,
             per_replica_batch=args.batch_per_replica, replicas=plan.replicas,
@@ -232,15 +392,24 @@ def main() -> None:
         ),
     )
     res = loop.run()
-    print(json.dumps({
+    pool_stats = trainer.pool.stats()
+    out = {
         "arch": cfg.name, "replicas": plan.replicas, "tp": plan.tp,
         "codec": args.codec, "fuse": not args.no_fuse, "overlap": args.overlap,
         "final_loss": res["losses"][-1] if res["losses"] else None,
+        "final_eval": res["evals"][-1][1] if res["evals"] else None,
         "tokens_per_s": round(res["tokens_per_s"], 1),
         "comm_bytes": res["comm_bytes"],
         "wall_s": round(res["wall_s"], 1),
-        "compiled_outer_programs": len(trainer._outer_fns),
-    }))
+        "pool": pool_stats,
+        "recompiles": pool_stats["misses"],
+    }
+    if fault_plan is not None:
+        out["fault_events"] = len(fault_plan.events)
+        out["membership"] = {
+            "epoch": elastic.epoch, "active": list(elastic.active_ids()),
+        }
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -57,10 +57,15 @@ def run_elastic_training(
     codec: str = "none",
     impl: str = "auto",
     interpret: bool | None = None,
+    reassign_data: bool = False,
 ) -> dict[str, Any]:
     """Train under ``plan``; returns the engine result dict plus
     ``rounds`` (the simulator's per-round participation history) and the
-    final membership."""
+    final membership.
+
+    ``reassign_data`` redistributes dropped replicas' loader streams over
+    survivors (:func:`repro.core.elastic.stream_assignment` — deterministic,
+    resume-safe); the default keeps the seed behavior of skipping them."""
     kcfg = KernelConfig(impl=impl, interpret=interpret)
     cfg = dataclasses.replace(cfg, kernels=kcfg)
     tcfg = method_config(
@@ -69,7 +74,7 @@ def run_elastic_training(
         seed=seed, comm=CommConfig(codec=codec), kernels=kcfg,
     )
     program = GossipProgram(cfg, tcfg, replicas=replicas, seed=seed)
-    sim = SimCluster(program, plan)
+    sim = SimCluster(program, plan, reassign_data=reassign_data)
     loop = make_loop(
         sim,
         LoaderConfig(
@@ -111,6 +116,9 @@ def main() -> None:
                     choices=["none", "fp16", "bf16", "int8"])
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reassign-data", action="store_true",
+                    help="redistribute dropped replicas' loader streams over "
+                         "survivors (default: skip them)")
     ap.add_argument("--out", default=None)
     add_engine_flags(ap)
     args = ap.parse_args()
@@ -129,6 +137,7 @@ def main() -> None:
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, resume=args.resume,
         log=True, log_jsonl=args.log_jsonl, codec=args.codec,
         impl=args.impl, interpret=args.interpret,
+        reassign_data=args.reassign_data,
     )
     summary = {
         "arch": cfg.name, "method": args.method,

@@ -150,7 +150,6 @@ def _lm_loss(
     mc = mask.reshape(b, nc, LOSS_CHUNK).transpose(1, 0, 2) if mask is not None else None
 
     def body(carry, inp):
-        nll_sum, cnt_sum = carry
         if mc is None:
             xi, li = inp
             mi = None
@@ -158,13 +157,15 @@ def _lm_loss(
             xi, li, mi = inp
         logits = logits_sharded(p["embed"], cfg, xi, ctx)
         nll, cnt = cross_entropy_parts(logits, li, cfg, ctx, mi)
-        return (nll_sum + nll, cnt_sum + cnt), None
+        # rank-1 carry: old-jax shard_map's transpose rejects rank-0 avals
+        # crossing a scan inside the body (parallel/compat.py notes)
+        return carry + jnp.stack([nll, cnt]), None
 
     xs = (xc, lc) if mc is None else (xc, lc, mc)
-    (nll_sum, cnt_sum), _ = jax.lax.scan(
-        body, (jnp.zeros(()), jnp.zeros(())), xs, unroll=cfg.unroll_scans
+    sums, _ = jax.lax.scan(
+        body, jnp.zeros((2,)), xs, unroll=cfg.unroll_scans
     )
-    return nll_sum / jnp.maximum(cnt_sum, 1.0)
+    return sums[0] / jnp.maximum(sums[1], 1.0)
 
 
 # ---------------------------------------------------------------------------

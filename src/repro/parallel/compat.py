@@ -13,6 +13,15 @@ live under older names:
 
 Everything in the repo that touches these APIs goes through this module so
 the multidevice runtime (and its tests) works on both sides of the rename.
+
+Known old-jax limitation (no shim possible, avoid the pattern instead): the
+0.4.x ``shard_map`` TRANSPOSE rule re-checks specs on the rewritten body and
+rejects rank-0 avals that cross a ``lax.scan`` boundary inside it
+(``_SpecError: [ShapedArray(float32[]), NoFail, ...]``).  Any scan carried
+state inside a shard_map'd loss must therefore be rank ≥ 1 — the chunked LM
+loss (``models/model.py::_lm_loss``) carries a (2,) sum vector instead of
+two scalars for exactly this reason; ``launch/dryrun.py`` (seq ≥ 2·2048
+triggers the chunked path) was broken on this box until it did.
 """
 
 from __future__ import annotations

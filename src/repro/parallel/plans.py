@@ -70,6 +70,15 @@ class Plan:
         """All non-model axes: batch/token parallelism dims."""
         return tuple(a for a in self.mesh_axes if a != self.model_axis)
 
+    @property
+    def replica_entry(self):
+        """The replica axes as ONE PartitionSpec entry: a tuple when the
+        replicas span several mesh axes, the bare axis name for one, None for
+        a single-replica plan (the ``rep if len(rep) > 1 else ...`` dance
+        previously copy-pasted across steps.py and the launchers)."""
+        rep = self.replica_axes
+        return rep if len(rep) > 1 else (rep[0] if rep else None)
+
 
 def make_plan(
     plan_name: str,

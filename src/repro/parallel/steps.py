@@ -17,8 +17,10 @@ uses ``lax.pmean`` (all-reduce).  Roofline reads these straight from the HLO.
 from __future__ import annotations
 
 import dataclasses
-import functools
+import time
 from typing import Any, Callable
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -26,10 +28,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.comm import CommConfig
 from repro.core import outer as outer_lib
+from repro.core import pairing as pairing_lib
 from repro.core.outer import OuterConfig, OuterState
+from repro.core.pairing import Membership
 from repro.kernels.dispatch import KernelConfig
 from repro.models import model as model_api
-from repro.models.common import unzip
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
 from repro.parallel import compat
@@ -109,8 +112,7 @@ def build_loss_shard(
 ):
     """shard_map'd per-replica loss: (stacked theta, batch) -> (R,) losses."""
     ctx = plan.ctx()
-    rep = plan.replica_axes
-    rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
+    rep_entry = plan.replica_entry
 
     def body(theta_local, batch_local):
         theta = _squeeze_replica(theta_local)  # drop leading local replica dim
@@ -174,8 +176,7 @@ def build_train_step(
 
     theta_sh = plans_lib.shardings(mesh, pspecs)
     # AdamW moments mirror param specs (f32); count is per-replica (R,)
-    rep = plan.replica_axes
-    rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
+    rep_entry = plan.replica_entry
     opt_pspecs = AdamWState(
         mu=pspecs, nu=jax.tree.map(lambda s: s, pspecs), count=P(rep_entry)
     )
@@ -209,6 +210,15 @@ def init_opt_state(params_stacked_values: PyTree, replicas: int) -> AdamWState:
 # ---------------------------------------------------------------------------
 
 
+def _local_replica_index(plan: Plan, mesh: Mesh) -> jax.Array:
+    """This shard's LINEARIZED replica id (pod-major), inside shard_map."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    idx = jnp.zeros((), jnp.int32)
+    for a in plan.replica_axes:
+        idx = idx * sizes[a] + jax.lax.axis_index(a)
+    return idx
+
+
 def build_outer_step(
     plan: Plan,
     mesh: Mesh,
@@ -220,6 +230,7 @@ def build_outer_step(
     comm_cfg: CommConfig | None = None,
     perm_next: list[tuple[int, int]] | None = None,
     kernel_cfg: KernelConfig | None = None,
+    active: Any | None = None,
 ):
     """One outer step over (theta, phi, delta) -> (theta', phi', delta').
 
@@ -233,12 +244,28 @@ def build_outer_step(
     the legacy switch for ``comm_cfg.fuse``).  With ``perm_next`` the §3.2
     φ-prefetch overlap is compiled in: the program takes an extra
     ``phi_prefetched`` input and returns the φ′ pre-send for the NEXT pairing
-    as an extra output — (theta, phi, delta, phi_pre, step) in and out."""
+    as an extra output — (theta, phi, delta, phi_pre, step) in and out.
+
+    ``active`` (optional host-side (world,) bool array) bakes this round's
+    PARTICIPANT set into the program (elastic runs; the pairing ``perm``
+    already self-loops non-participants): a non-participant's (θ, φ, δ) pass
+    through untouched — a dropped replica is frozen, a straggler keeps inner-
+    training toward a multi-m Δ — and elastic DiLoCo means over participants
+    only.  ``active=None`` (the healthy path) compiles the EXACT program it
+    always did, so full membership stays bit-identical to the static
+    schedule.  Programs are keyed per (membership view, pairing slot) by
+    :class:`OuterProgramPool`; this builder never decides who participates."""
     rep = plan.replica_axes
-    rep_entry = rep if len(rep) > 1 else (rep[0] if rep else None)
+    rep_entry = plan.replica_entry
     if comm_cfg is None:
         comm_cfg = CommConfig(fuse=fuse_payload)
     overlapped = perm_next is not None and outer_cfg.method == "noloco"
+    if active is not None and overlapped:
+        raise ValueError(
+            "elastic membership does not support the φ-prefetch overlap: the "
+            "pre-send pairing would be invalidated by a membership change"
+        )
+    active_host = None if active is None else np.asarray(active, dtype=bool)
 
     def body(theta_l, phi_l, delta_l, *rest):
         theta = _squeeze_replica(theta_l)
@@ -260,11 +287,26 @@ def build_outer_step(
                 new_state.step.reshape((1,)),
             )
         (step_l,) = rest
+        flag = None
+        if active_host is not None:
+            flag = jnp.asarray(active_host)[_local_replica_index(plan, mesh)]
         state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
         new_state, new_theta = outer_lib.outer_step_sharded(
             state, theta, outer_cfg, axis_names=rep, perm=perm, comm_cfg=comm_cfg,
-            kernel_cfg=kernel_cfg,
+            kernel_cfg=kernel_cfg, active_flag=flag,
         )
+        if flag is not None:
+            # freeze non-participants: keep pre-round (θ, φ, δ); the outer
+            # counter still advances so the schedule stays aligned
+            _sel = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(flag, a, b), new, old
+            )
+            new_theta = _sel(new_theta, theta)
+            new_state = OuterState(
+                phi=_sel(new_state.phi, phi),
+                delta=_sel(new_state.delta, delta),
+                step=new_state.step,
+            )
         return (
             _unsqueeze_replica(new_theta),
             _unsqueeze_replica(new_state.phi),
@@ -283,6 +325,205 @@ def build_outer_step(
         in_shardings=(sh,) * n_params + (step_sh,),
         donate_argnums=tuple(range(n_params)),
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-membership-view compiled program pool
+# ---------------------------------------------------------------------------
+
+
+class OuterProgramPool:
+    """Compiled outer-step programs keyed by (membership view, pairing slot).
+
+    ``lax.ppermute`` needs a STATIC permutation, so the shard_map runtime
+    cannot draw a fresh random matching per round without recompiling.  The
+    pool bounds compilation two ways (DESIGN.md §3):
+
+      * ``schedule="random"`` — ``pairing_pool`` cycling matchings: round k
+        uses the matching of pairing slot ``k % pairing_pool``, preserving
+        the paper's random-matching statistics with at most ``pairing_pool``
+        programs per membership view.
+      * ``schedule="hypercube"`` — partner = id XOR 2^j with j =
+        :func:`~repro.core.pairing.hypercube_dim`: at most log2(world)
+        programs per membership view and still optimal mixing.
+
+    Programs are keyed by the PARTICIPANT VIEW (mask + partition), not the
+    membership epoch: two epochs with identical masks schedule identically
+    (a node that left and came right back recompiles nothing), and the
+    healthy view compiles the exact static-schedule programs (``active=None``
+    path of :func:`build_outer_step`) — full membership stays bit-identical.
+    Recompiles therefore happen ONLY at membership-view boundaries, at most
+    ``max_programs_per_view`` per view, and each one is recorded for the
+    engine's ``recompile`` telemetry (:mod:`repro.train.loop`).
+    """
+
+    def __init__(
+        self,
+        plan: Plan,
+        mesh: Mesh,
+        param_specs: PyTree,
+        outer_cfg: OuterConfig,
+        *,
+        comm_cfg: CommConfig | None = None,
+        kernel_cfg: KernelConfig | None = None,
+        schedule: str = "random",
+        pairing_pool: int = 16,
+        seed: int = 0,
+    ):
+        if schedule not in ("random", "hypercube"):
+            raise ValueError(f"unknown pairing schedule: {schedule!r}")
+        self.plan = plan
+        self.mesh = mesh
+        self.param_specs = param_specs
+        self.outer_cfg = outer_cfg
+        self.comm_cfg = comm_cfg or CommConfig()
+        self.kernel_cfg = kernel_cfg
+        self.schedule = schedule
+        self.pairing_pool = pairing_pool
+        self.seed = seed
+        self._programs: dict[Any, Any] = {}
+        self.hits = 0
+        self.misses = 0
+        self.events: list[dict] = []  # one record per compile (drained by the loop)
+
+    # -- pure key/pairing derivation (no compilation; property-tested) -------
+
+    @property
+    def max_programs_per_view(self) -> int:
+        """Upper bound on compiled programs per membership view.
+
+        With the §3.2 overlap each program is keyed by the (slot, next-slot)
+        PAIR: the random schedule's cycling slots still yield ``pairing_pool``
+        distinct pairs, but the hypercube schedule redraws its dimension
+        order every log2(world) rounds, so pairs range over dims² — the
+        bound must say so (overlap is full-membership-only, so this is the
+        TOTAL program bound there)."""
+        world = self.plan.replicas
+        overlap = self.comm_cfg.overlap and self.outer_cfg.method == "noloco"
+        if self.schedule == "hypercube":
+            dims = max(int(np.log2(world)), 1)
+            return dims * dims if overlap else dims
+        return self.pairing_pool
+
+    def pool_slot(self, outer_index: int) -> int:
+        """The pairing slot of outer round ``outer_index`` — the bounded part
+        of the program key."""
+        if self.schedule == "hypercube":
+            return pairing_lib.hypercube_dim(
+                outer_index, self.plan.replicas, seed=self.seed
+            )
+        return outer_index % max(self.pairing_pool, 1)
+
+    def pairs_for(
+        self,
+        outer_index: int,
+        membership: Membership | None = None,
+        groups: Any | None = None,
+    ) -> tuple[int, list[tuple[int, int]]]:
+        """(pool slot, static ppermute pairs) for one outer round.
+
+        A pure function of ``(seed, slot, membership view)``: every node that
+        agrees on the membership view derives the same pairs with zero
+        control-plane messages — the coordinator-free property, preserved on
+        the compiled path."""
+        world = self.plan.replicas
+        slot = self.pool_slot(outer_index)
+        full = membership is None or (membership.is_full and groups is None)
+        if self.schedule == "hypercube":
+            if full:
+                return slot, pairing_lib.hypercube_ppermute_pairs(
+                    outer_index, world, seed=self.seed
+                )
+            return slot, pairing_lib.elastic_hypercube_ppermute_pairs(
+                outer_index, membership, seed=self.seed, groups=groups
+            )
+        if full:
+            return slot, pairing_lib.ppermute_pairs(slot, world, seed=self.seed)
+        return slot, pairing_lib.elastic_ppermute_pairs(
+            slot, membership, seed=self.seed, groups=groups
+        )
+
+    def view_key(
+        self, membership: Membership | None, groups: Any | None = None
+    ) -> Any:
+        """Hashable participant-view part of the program key (None = the
+        healthy full-membership view, shared by epochs with equal masks)."""
+        if membership is None or (membership.is_full and groups is None):
+            return None
+        gk = None if groups is None else tuple(tuple(int(r) for r in g) for g in groups)
+        return (tuple(membership.mask), gk)
+
+    # -- compiled program lookup --------------------------------------------
+
+    def program(
+        self,
+        outer_index: int,
+        membership: Membership | None = None,
+        groups: Any | None = None,
+        *,
+        overlap_next: bool = False,
+    ) -> tuple[Any, dict]:
+        """Compiled program for round ``outer_index`` under the given view.
+
+        Returns ``(fn, info)`` with ``info = {key, slot, view, compiled,
+        build_s, pool_size}`` — ``compiled`` marks a pool miss (the caller
+        times the first invocation for the ``recompile`` telemetry event's
+        wall-clock; XLA compiles lazily)."""
+        slot, perm = self.pairs_for(outer_index, membership, groups)
+        view = self.view_key(membership, groups)
+        perm_next = None
+        key: Any = (view, slot)
+        if overlap_next and self.outer_cfg.method == "noloco":
+            if view is not None:
+                raise ValueError(
+                    "elastic membership does not support the φ-prefetch overlap"
+                )
+            slot_next, perm_next = self.pairs_for(outer_index + 1)
+            key = (view, (slot, slot_next))
+        active = None
+        if view is not None:
+            # the PARTICIPANT mask is the membership mask alone: an active
+            # replica outside every partition component stays a participant
+            # (its pairs self-loop, so it runs the self-momentum path) —
+            # matching the stacked runtime's semantics exactly
+            active = np.asarray(membership.mask, dtype=bool)
+        compiled = key not in self._programs
+        build_s = 0.0
+        if compiled:
+            self.misses += 1
+            t0 = time.time()
+            with compat.set_mesh(self.mesh):
+                self._programs[key] = build_outer_step(
+                    self.plan, self.mesh, self.param_specs, self.outer_cfg, perm,
+                    comm_cfg=self.comm_cfg, perm_next=perm_next,
+                    kernel_cfg=self.kernel_cfg, active=active,
+                )
+            build_s = time.time() - t0
+            self.events.append({
+                "slot": str(slot), "view": "full" if view is None else "elastic",
+                "epoch": None if membership is None else membership.epoch,
+                "build_s": round(build_s, 4), "pool_size": len(self._programs),
+            })
+        else:
+            self.hits += 1
+        info = {
+            "key": key, "slot": slot, "view": view, "compiled": compiled,
+            "build_s": build_s, "pool_size": len(self._programs),
+        }
+        return self._programs[key], info
+
+    def drain_events(self) -> list[dict]:
+        events, self.events = self.events, []
+        return events
+
+    def stats(self) -> dict:
+        return {
+            "pool_size": len(self._programs),
+            "hits": self.hits,
+            "misses": self.misses,
+            "schedule": self.schedule,
+            "max_programs_per_view": self.max_programs_per_view,
+        }
 
 
 # ---------------------------------------------------------------------------

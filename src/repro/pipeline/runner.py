@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.comm import CommConfig
 from repro.core import metrics as metrics_lib
 from repro.core import pairing
+from repro.core.elastic import ElasticContext
 from repro.core.outer import OuterConfig, OuterState, outer_step_stacked
 from repro.kernels.dispatch import KernelConfig
 from repro.models import model as model_api
@@ -111,7 +112,16 @@ class PipelineTrainer:
     NoLoCo/DiLoCo outer step over its replica axis, reusing the exact
     :func:`repro.core.outer.outer_step_stacked` machinery (pairings from
     :mod:`repro.core.pairing`, wire codec from ``comm``).  ``outer=None``
-    keeps the routing-only trainer (the §5.2 no-outer baseline)."""
+    keeps the routing-only trainer (the §5.2 no-outer baseline).
+
+    ``elastic`` attaches the shared :class:`~repro.core.elastic.
+    ElasticContext` (DESIGN.md §7): routing permutations restrict to the
+    ACTIVE replica set (:func:`~repro.core.pairing.elastic_route_permutation`
+    — inactive stage-replicas carry no traffic and their params/opt freeze),
+    every stage's gossip pairing is drawn over active members only via
+    :func:`~repro.core.pairing.elastic_partner_table` (per-stage seed offset,
+    partition-aware), and loss/eval/weight-std aggregate over active
+    replicas.  ``elastic=None`` keeps the fixed-world trainer bit-for-bit."""
 
     cfg: ModelConfig
     num_stages: int
@@ -122,6 +132,13 @@ class PipelineTrainer:
     comm: CommConfig = dataclasses.field(default_factory=CommConfig)
     kernel_cfg: KernelConfig = dataclasses.field(default_factory=KernelConfig)
     seed: int = 0
+    elastic: ElasticContext | None = None
+
+    def __post_init__(self):
+        if self.elastic is not None and self.elastic.world != self.replicas:
+            raise ValueError(
+                f"elastic world {self.elastic.world} != replicas {self.replicas}"
+            )
 
     @property
     def outer_enabled(self) -> bool:
@@ -151,22 +168,46 @@ class PipelineTrainer:
     # -- routing --------------------------------------------------------
 
     def routes(self, step: int) -> list[jax.Array]:
-        """One permutation per stage boundary (num_stages-1 of them)."""
+        """One permutation per stage boundary (num_stages-1 of them).
+
+        With an elastic context and a partial membership the permutations
+        restrict to a bijection on the ACTIVE set (inactive replicas route to
+        themselves and carry no traffic); at full membership the elastic draw
+        is bit-identical to the static one, so the healthy path never
+        changes."""
         if self.routing == "fixed":
             return [jnp.arange(self.replicas)] * (self.num_stages - 1)
+        elastic_view = (
+            self.elastic.membership
+            if self.elastic is not None and not self.elastic.is_full
+            else None
+        )
         out = []
         for b in range(self.num_stages - 1):
-            out.append(
-                pairing.pairing_permutation(
+            if elastic_view is not None:
+                out.append(jnp.asarray(pairing.elastic_route_permutation(
+                    step * 97 + b, elastic_view, seed=self.seed
+                )))
+            else:
+                out.append(pairing.pairing_permutation(
                     step * 97 + b, self.replicas, seed=self.seed
-                )
-            )
+                ))
         return out
+
+    def _active_weights(self) -> jax.Array:
+        """(R,) f32 participation weights for loss/eval aggregation."""
+        if self.elastic is None or self.elastic.is_full:
+            return jnp.ones((self.replicas,), jnp.float32)
+        return jnp.asarray(self.elastic.membership.active_array()).astype(jnp.float32)
 
     # -- loss over routed paths ------------------------------------------
 
-    def loss(self, params: list, batch: dict, routes: list[jax.Array]) -> jax.Array:
-        """Mean loss over replicas; x (R, B, S) follows the routed path."""
+    def loss(
+        self, params: list, batch: dict, routes: list[jax.Array],
+        weights: jax.Array | None = None,
+    ) -> jax.Array:
+        """Active-weighted mean loss over replicas; x (R, B, S) follows the
+        routed path.  ``weights=None`` (or all ones) is the plain mean."""
         ctx = ShardCtx.local()
         x = batch["tokens"]
         for s in range(self.num_stages):
@@ -182,21 +223,35 @@ class PipelineTrainer:
         losses = jax.vmap(
             lambda p, xx, ll: stage_loss(p, self.cfg, xx, ll, ctx)
         )(params[-1], x, lab)
-        return jnp.mean(losses)
+        if weights is None:
+            return jnp.mean(losses)
+        return jnp.sum(losses * weights) / jnp.maximum(jnp.sum(weights), 1.0)
 
     # -- one SGD step -------------------------------------------------------
 
     def _jitted_step(self):
         if not hasattr(self, "_step_cache"):
-            def step(params, opt, batch, routes):
+            def step(params, opt, batch, routes, weights):
                 loss, grads = jax.value_and_grad(
-                    lambda ps: self.loss(ps, batch, routes)
+                    lambda ps: self.loss(ps, batch, routes, weights)
                 )(params)
+                act = weights > 0
+
+                def _sel(new, old):
+                    return jnp.where(
+                        act.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+                    )
+
                 new_params, new_opt = [], []
                 for p, o, g in zip(params, opt, grads):
                     np_, no_, _ = jax.vmap(
                         lambda gg, oo, pp: adamw_update(gg, oo, pp, self.inner)
                     )(g, o, p)
+                    # frozen (inactive) replicas keep params AND moments: the
+                    # weighted loss already zeroes their grads, but AdamW's
+                    # count/eps math would still drift them
+                    np_ = jax.tree.map(_sel, np_, p)
+                    no_ = jax.tree.map(_sel, no_, o)
                     new_params.append(np_)
                     new_opt.append(no_)
                 return new_params, new_opt, loss
@@ -207,7 +262,7 @@ class PipelineTrainer:
     def train_step(self, state: dict, batch: dict) -> tuple[dict, float]:
         routes = self.routes(state["step"])
         new_params, new_opt, loss = self._jitted_step()(
-            state["params"], state["opt"], batch, routes
+            state["params"], state["opt"], batch, routes, self._active_weights()
         )
         new_state = dict(
             state, params=new_params, opt=new_opt, step=state["step"] + 1
@@ -233,13 +288,28 @@ class PipelineTrainer:
         # inner steps (calling twice at the same step is a no-op)
         if state["step"] < (k + 1) * m:
             return state, False
+        round_plan = None
+        active = None
+        if self.elastic is not None:
+            # one participation decision for the round, shared by all stages
+            # (consumes the straggler view); each stage draws its OWN pairing
+            # over those participants below
+            round_plan = self.elastic.plan_round(None)
+            active = None if round_plan.active is None else jnp.asarray(round_plan.active)
         new_params, new_phi, new_delta = [], [], []
         for s in range(self.num_stages):
             partner = None
             if self.outer.method == "noloco":
-                partner = jnp.asarray(pairing.partner_table(
-                    k, self.replicas, seed=self.seed + 1_000_003 * (s + 1)
-                ))
+                stage_seed = self.seed + 1_000_003 * (s + 1)
+                if round_plan is not None:
+                    partner = jnp.asarray(pairing.elastic_partner_table(
+                        k, round_plan.participants, seed=stage_seed,
+                        groups=self.elastic.partition,
+                    ))
+                else:
+                    partner = jnp.asarray(pairing.partner_table(
+                        k, self.replicas, seed=stage_seed
+                    ))
             ost = OuterState(
                 phi=state["outer"]["phi"][s],
                 delta=state["outer"]["delta"][s],
@@ -247,7 +317,8 @@ class PipelineTrainer:
             )
             new_ost, new_theta = outer_step_stacked(
                 ost, state["params"][s], self.outer,
-                partner=partner, comm_cfg=self.comm, kernel_cfg=self.kernel_cfg,
+                partner=partner, active=active,
+                comm_cfg=self.comm, kernel_cfg=self.kernel_cfg,
             )
             new_params.append(new_theta)
             new_phi.append(new_ost.phi)
@@ -262,19 +333,29 @@ class PipelineTrainer:
     # -- grad-free eval --------------------------------------------------------
 
     def eval_loss(self, params: list, batch: dict) -> jax.Array:
-        """Mean loss over replicas WITHOUT routing (identity routes): each
-        replica is evaluated as a self-contained pipeline, no gradients."""
+        """Active-mean loss over replicas WITHOUT routing (identity routes):
+        each replica is evaluated as a self-contained pipeline, no
+        gradients."""
         if not hasattr(self, "_eval_cache"):
             fixed = [jnp.arange(self.replicas)] * (self.num_stages - 1)
             object.__setattr__(
                 self, "_eval_cache",
-                jax.jit(lambda ps, b: self.loss(ps, b, fixed)),
+                jax.jit(lambda ps, b, w: self.loss(ps, b, fixed, w)),
             )
-        return self._eval_cache(params, batch)
+        return self._eval_cache(params, batch, self._active_weights())
 
     # -- §5.2 metric -----------------------------------------------------------
 
     def weight_std(self, state: dict) -> float:
-        """Mean across params of the std across replicas (all stages) —
-        shared impl: :func:`repro.core.metrics.replica_weight_std`."""
-        return float(metrics_lib.replica_weight_std(state["params"]))
+        """Mean across params of the std across ACTIVE replicas (all stages)
+        — shared impl: :func:`repro.core.metrics.replica_weight_std`."""
+        params = state["params"]
+        if self.elastic is not None and not self.elastic.is_full:
+            ids = jnp.asarray(self.elastic.active_ids())
+            if len(ids) < 2:
+                return 0.0
+            params = [
+                jax.tree.map(lambda x: jnp.take(x, ids, axis=0), p)
+                for p in params
+            ]
+        return float(metrics_lib.replica_weight_std(params))

@@ -1,10 +1,13 @@
 """Deterministic fault-injecting cluster simulator (DESIGN.md §7).
 
-``SimCluster`` wraps the real :class:`~repro.train.GossipProgram` as a
+``SimCluster`` wraps a real elastic program — the stacked
+:class:`~repro.train.GossipProgram` or the shard_map
+:class:`~repro.train.DistributedProgram` — as a
 :class:`~repro.train.program.TrainProgram` decorator and replays a
 :class:`FaultPlan` — node dropout, rejoin-with-warm-start, stragglers that
 miss outer rounds, network partitions — against the production outer-step
-math and telemetry, step for step reproducibly.
+math and telemetry, step for step reproducibly; on the mesh that path is
+the per-membership-view compiled ppermute program pool.
 """
 
 from repro.sim.faults import FaultEvent, FaultPlan

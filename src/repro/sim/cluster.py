@@ -1,21 +1,29 @@
-"""SimCluster: drive the REAL training program through cluster churn.
+"""SimCluster: drive a REAL training program through cluster churn.
 
 The simulator is a :class:`~repro.train.program.TrainProgram` decorator — the
 unified :class:`~repro.train.loop.TrainLoop` drives it exactly like a healthy
-program, and every inner/outer step below it is the production path
-(:class:`~repro.train.GossipProgram` → :class:`~repro.core.GossipTrainer` →
-``outer_step_stacked`` over the :class:`~repro.comm.StackedGather`
-communicator).  SimCluster only does three things:
+program, and every inner/outer step below it is the production path.  It is
+RUNTIME-AGNOSTIC: any program exposing the elastic surface (an attached
+:class:`~repro.core.elastic.ElasticContext` plus the
+``inner_step_index`` / ``outer_round_index`` / ``sync_due`` / ``warm_start``
+hooks) can be decorated — the stacked :class:`~repro.train.GossipProgram`
+(vmap gather gossip) and the shard_map
+:class:`~repro.train.DistributedProgram` (compiled ppermute programs from the
+per-membership-view pool) replay the SAME fault plans through their own
+outer steps.  SimCluster only does four things:
 
   * replays the :class:`~repro.sim.faults.FaultPlan` at inner-step
     boundaries (membership drops/rejoins, straggler registration,
     partition views) — each event is applied once, keyed by the state's own
     step counter, so a resumed run never re-applies history;
-  * performs the rejoin warm start (θ = φ = a live peer's φ, δ = 0, fresh
-    AdamW moments) — the only state surgery elasticity needs;
-  * aggregates loop-facing metrics (loss, eval, weight std) over the ACTIVE
-    replica set and keeps an auditable ``history`` of events and per-round
-    participation (partner tables included) for tests and telemetry.
+  * delegates the rejoin warm start to the program (θ = φ = a live peer's φ,
+    δ = 0, fresh AdamW moments — on the mesh that is a gather+scatter over
+    the replica axis);
+  * optionally redistributes dropped replicas' loader streams over survivors
+    (``reassign_data``, the pure :func:`~repro.core.elastic.stream_assignment`
+    of ``(membership, t)`` — deterministic, resume-safe);
+  * keeps an auditable ``history`` of events and per-round participation
+    (partner tables included) for tests and telemetry.
 
 What it does NOT model (see DESIGN.md §7): wall-clock skew, message loss
 inside a surviving pair, Byzantine values, or asynchronous outer rounds —
@@ -24,19 +32,15 @@ every fault is a round-granular participation change.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import pairing as pairing_lib
-from repro.core.noloco import TrainState
-from repro.optim import AdamWState
+from repro.core.elastic import stream_assignment
 from repro.sim.faults import FaultEvent, FaultPlan
-from repro.train.adapters import GossipProgram
 
 PyTree = Any
 
@@ -44,13 +48,20 @@ __all__ = ["SimCluster"]
 
 
 class SimCluster:
-    """Deterministic fault-injecting wrapper around a :class:`GossipProgram`."""
+    """Deterministic fault-injecting wrapper around an elastic program."""
 
-    def __init__(self, program: GossipProgram, plan: FaultPlan):
+    def __init__(self, program, plan: FaultPlan, *, reassign_data: bool = False):
+        if getattr(program, "elastic", None) is None:
+            raise ValueError(
+                "SimCluster needs a program with an ElasticContext attached "
+                "(GossipProgram, or DistributedProgram whose trainer was "
+                "built with elastic=...)"
+            )
         plan.validate(program.replicas)
         self.program = program
         self.plan = plan
         self.replicas = program.replicas
+        self.reassign_data = reassign_data
         self._straggle: dict[int, int] = {}  # replica -> rounds left to miss
         self.history: list[dict] = []
 
@@ -64,18 +75,21 @@ class SimCluster:
     def membership_epoch(self) -> int:
         return self.program.membership_epoch
 
-    @property
-    def inner_steps(self) -> int:
-        return self.program.tcfg.outer.inner_steps
-
     # -- fault application --------------------------------------------------
 
-    def _apply_events(self, state: TrainState, t: int) -> TrainState:
-        for ev in self.plan.events_at(t, self.inner_steps):
+    def _inner_steps(self) -> int:
+        # both runtimes expose the cadence through their outer config
+        prog = self.program
+        if hasattr(prog, "tcfg"):
+            return prog.tcfg.outer.inner_steps
+        return prog.trainer.outer_cfg.inner_steps
+
+    def _apply_events(self, state, t: int):
+        for ev in self.plan.events_at(t, self._inner_steps()):
             state = self._apply(state, ev, t)
         return state
 
-    def _apply(self, state: TrainState, ev: FaultEvent, t: int) -> TrainState:
+    def _apply(self, state, ev: FaultEvent, t: int):
         mem = self.program.membership
         rec: dict[str, Any] = {"event": ev.kind, "step": t}
         if ev.kind == "drop":
@@ -91,7 +105,9 @@ class SimCluster:
             if source in ev.replicas or not mem.mask[source]:
                 raise ValueError(f"rejoin source {source} is not a live peer")
             for r in ev.replicas:
-                state = self._warm_start(state, r, source)
+                if mem.mask[r]:
+                    raise ValueError(f"replica {r} is already active; cannot rejoin")
+                state = self.program.warm_start(state, r, source)
             self.program.set_membership(mem.add(ev.replicas))
             rec["replicas"] = sorted(ev.replicas)
             rec["source"] = source
@@ -110,51 +126,26 @@ class SimCluster:
         self.history.append(rec)
         return state
 
-    def _warm_start(self, state: TrainState, replica: int, source: int) -> TrainState:
-        """Rejoin surgery: the comeback replica adopts a live peer's slow
-        weights as BOTH its φ and θ (fresh look-ahead), zero outer momentum,
-        zero inner-optimizer moments — exactly what a node that fetched φ
-        from one peer and restarted would hold."""
-        if self.program.membership.mask[replica]:
-            raise ValueError(f"replica {replica} is already active; cannot rejoin")
-
-        def adopt(x):
-            return x.at[replica].set(x[source])
-
-        def zero_row(x):
-            return x.at[replica].set(jnp.zeros_like(x[replica]))
-
-        return TrainState(
-            theta=jax.tree.map(
-                lambda th, p: th.at[replica].set(p[source]), state.theta, state.outer.phi
-            ),
-            opt=AdamWState(
-                mu=jax.tree.map(zero_row, state.opt.mu),
-                nu=jax.tree.map(zero_row, state.opt.nu),
-                count=state.opt.count.at[replica].set(0),
-            ),
-            outer=dataclasses.replace(
-                state.outer,
-                phi=jax.tree.map(adopt, state.outer.phi),
-                delta=jax.tree.map(zero_row, state.outer.delta),
-            ),
-            inner_step=state.inner_step,
-        )
-
     # -- TrainProgram surface ----------------------------------------------
 
-    def init_state(self, example_batch: dict) -> TrainState:
+    def init_state(self, example_batch: dict):
         return self.program.init_state(example_batch)
 
-    def inner_step(self, state: TrainState, batch: dict, rng):
-        state = self._apply_events(state, int(state.inner_step))
+    def inner_step(self, state, batch: dict, rng):
+        t = self.program.inner_step_index(state)
+        state = self._apply_events(state, t)
+        if self.reassign_data and not self.program.membership.is_full:
+            # survivors adopt dropped replicas' streams (time-multiplexed);
+            # a pure function of (membership, t), so resume replays it exactly
+            table = jnp.asarray(stream_assignment(self.program.membership, t))
+            batch = {k: jnp.take(v, table, axis=0) for k, v in batch.items()}
         # the program itself aggregates loss over active replicas
         return self.program.inner_step(state, batch, rng)
 
-    def maybe_outer_step(self, state: TrainState):
-        if not self.program.trainer.should_sync(state):
+    def maybe_outer_step(self, state):
+        if not self.program.sync_due(state):
             return state, False
-        round_idx = int(state.outer.step)
+        round_idx = self.program.outer_round_index(state)
         absent = frozenset(
             r for r, k in self._straggle.items()
             if k > 0 and self.program.membership.mask[r]
@@ -178,13 +169,13 @@ class SimCluster:
         })
         return state, synced
 
-    def eval_step(self, state: TrainState, batch: dict, rng) -> float:
+    def eval_step(self, state, batch: dict, rng) -> float:
         return self.program.eval_step(state, batch, rng)
 
-    def weight_std(self, state: TrainState) -> float:
+    def weight_std(self, state) -> float:
         return self.program.weight_std(state)
 
-    def state_pytree(self, state: TrainState) -> dict:
+    def state_pytree(self, state) -> dict:
         tree = self.program.state_pytree(state)
         # in-flight straggler debts must survive a restart, or a resumed run
         # would let a mid-straggle replica back into rounds it missed in the
@@ -195,7 +186,7 @@ class SimCluster:
         tree["sim"] = {"straggle": straggle}
         return tree
 
-    def load_state_pytree(self, state: TrainState, tree: dict) -> TrainState:
+    def load_state_pytree(self, state, tree: dict):
         state = self.program.load_state_pytree(state, tree)
         if "sim" in tree:
             straggle = np.asarray(tree["sim"]["straggle"])
@@ -206,6 +197,16 @@ class SimCluster:
 
     def comm_cost(self):
         return self.program.comm_cost()
+
+    # -- program passthrough (telemetry) ------------------------------------
+
+    def drain_recompile_events(self) -> list[dict]:
+        drain = getattr(self.program, "drain_recompile_events", None)
+        return [] if drain is None else drain()
+
+    def pool_stats(self) -> dict | None:
+        stats = getattr(self.program, "pool_stats", None)
+        return None if stats is None else stats()
 
     # -- diagnostics --------------------------------------------------------
 

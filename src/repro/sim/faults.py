@@ -147,6 +147,15 @@ class FaultPlan:
             ev for ev in self.events if ev.resolved_step(inner_steps) == step
         ]
 
+    def max_anchor_step(self, inner_steps: int) -> int:
+        """The last inner step any event applies before (-1 for an empty
+        plan).  Launchers compare this against the run horizon: an event
+        anchored past ``--steps`` silently never fires, which is almost
+        always a misconfigured plan worth warning about."""
+        if not self.events:
+            return -1
+        return max(ev.resolved_step(inner_steps) for ev in self.events)
+
     def to_json(self) -> str:
         return json.dumps({"events": [ev.as_dict() for ev in self.events]}, indent=2)
 

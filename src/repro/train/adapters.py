@@ -4,7 +4,8 @@
     GossipTrainer`): replicas on a leading vmap axis, CPU-friendly.
   * :class:`DistributedProgram` — shard_map runtime (:class:`repro.launch.
     train_distributed.DistributedTrainer`): per-replica shards on a device
-    mesh, ppermute gossip from a precompiled pairing pool.
+    mesh, ppermute gossip from the per-membership-view
+    :class:`~repro.parallel.steps.OuterProgramPool`.
   * :class:`PipelineProgram`    — routed pipeline (:class:`repro.pipeline.
     PipelineTrainer`): §3.1 random routing + per-stage §3.2 gossip.
 
@@ -12,6 +13,15 @@ Each adapter owns exactly three concerns: batch-layout conversion, the
 checkpoint pytree round trip (``state_pytree`` / ``load_state_pytree``), and
 the static :class:`~repro.comm.bytes_model.CommCost` of one outer step.  All
 training math stays in the wrapped runtime.
+
+Elasticity is owned by ONE object across all three runtimes: a
+:class:`~repro.core.elastic.ElasticContext` (membership epoch + active mask +
+partner source, DESIGN.md §7).  The shared :class:`_ElasticSurface` mixin
+exposes the context uniformly (``membership`` / ``membership_epoch`` /
+``set_membership`` / ``set_partition`` / ``round_absent`` / ``last_partner``)
+so :class:`~repro.sim.SimCluster` and the loop's membership telemetry drive
+any adapter without knowing which runtime is underneath; membership rides in
+every adapter's checkpoint pytree via the context's ``state_dict``.
 """
 
 from __future__ import annotations
@@ -26,6 +36,7 @@ import jax.numpy as jnp
 from repro.comm import CommConfig, bytes_model
 from repro.core import metrics as metrics_lib
 from repro.core import pairing as pairing_lib
+from repro.core.elastic import ElasticContext
 from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
 from repro.core.outer import OuterState
 from repro.core.pairing import Membership
@@ -57,24 +68,74 @@ def _cost(tree_one: PyTree, comm: CommConfig, method: str, world: int):
     )
 
 
+class _ElasticSurface:
+    """The uniform elastic surface over ``self.elastic`` (an
+    :class:`~repro.core.elastic.ElasticContext` or None for a fixed world).
+
+    ``membership_epoch`` is None for a fixed-world program — the loop's
+    telemetry duck-types on that and stays silent."""
+
+    elastic: ElasticContext | None
+
+    @property
+    def membership(self) -> Membership | None:
+        return None if self.elastic is None else self.elastic.membership
+
+    @property
+    def membership_epoch(self) -> int | None:
+        return None if self.elastic is None else self.elastic.epoch
+
+    @property
+    def partition(self):
+        return None if self.elastic is None else self.elastic.partition
+
+    @property
+    def round_absent(self) -> frozenset[int]:
+        return frozenset() if self.elastic is None else self.elastic.round_absent
+
+    @round_absent.setter
+    def round_absent(self, value) -> None:
+        self._require_elastic().round_absent = frozenset(value)
+
+    @property
+    def last_partner(self) -> np.ndarray | None:
+        return None if self.elastic is None else self.elastic.last_partner
+
+    def set_membership(self, membership: Membership) -> None:
+        self._require_elastic().set_membership(membership)
+
+    def set_partition(self, groups) -> None:
+        """Restrict pairings to partition components (None heals)."""
+        self._require_elastic().set_partition(groups)
+
+    def _require_elastic(self) -> ElasticContext:
+        if self.elastic is None:
+            raise ValueError(
+                f"{type(self).__name__} has no ElasticContext attached; "
+                "construct it with one to drive membership changes"
+            )
+        return self.elastic
+
+
 # ---------------------------------------------------------------------------
 # Stacked simulation
 # ---------------------------------------------------------------------------
 
 
-class GossipProgram:
+class GossipProgram(_ElasticSurface):
     """Stacked-simulation runtime: :class:`GossipTrainer` under one jit.
 
-    Elastic membership (DESIGN.md §7): the program carries an epoch-stamped
-    :class:`~repro.core.pairing.Membership` over its replica slots plus an
-    optional network-partition view, and draws every round's pairing with
-    :func:`~repro.core.pairing.elastic_partner_table` — inactive replicas are
-    frozen in both inner and outer steps, a replica whose partner misses the
-    round self-pairs (pure self-momentum, the odd-world sit-out path), and
-    eval/weight-std aggregate over ACTIVE replicas only.  ``round_absent``
-    names stragglers for the NEXT outer round only (participation, not
-    membership — it clears once consumed).  Membership and partition ride in
-    the checkpoint pytree, so a resumed run reproduces the elastic trajectory.
+    Elastic membership (DESIGN.md §7): the program's
+    :class:`~repro.core.elastic.ElasticContext` carries the epoch-stamped
+    :class:`~repro.core.pairing.Membership` over its replica slots plus the
+    partition view and per-round straggler set; every round's pairing comes
+    from :func:`~repro.core.pairing.elastic_partner_table` via
+    ``ElasticContext.plan_round`` — inactive replicas are frozen in both
+    inner and outer steps, a replica whose partner misses the round
+    self-pairs (pure self-momentum, the odd-world sit-out path), and
+    eval/weight-std aggregate over ACTIVE replicas only.  Membership and
+    partition ride in the checkpoint pytree, so a resumed run reproduces the
+    elastic trajectory.
     """
 
     def __init__(
@@ -85,22 +146,21 @@ class GossipProgram:
         replicas: int,
         seed: int = 0,
         membership: Membership | None = None,
+        elastic: ElasticContext | None = None,
     ):
         self.cfg = cfg
         self.tcfg = tcfg
         self.replicas = replicas
         self.seed = seed
-        self.membership = membership or Membership.full(replicas)
-        if self.membership.world != replicas:
+        if elastic is None:
+            elastic = ElasticContext(membership or Membership.full(replicas))
+        elif membership is not None:
+            raise ValueError("pass membership OR elastic, not both")
+        if elastic.world != replicas:
             raise ValueError(
-                f"membership world {self.membership.world} != replicas {replicas}"
+                f"elastic world {elastic.world} != replicas {replicas}"
             )
-        self.partition: tuple[tuple[int, ...], ...] | None = None
-        self.round_absent: frozenset[int] = frozenset()
-        # the pairing the LAST outer round actually used ((world,) ndarray,
-        # None for diloco's all-reduce) — the audit source for SimCluster
-        # history / telemetry, never recomputed downstream
-        self.last_partner: np.ndarray | None = None
+        self.elastic = elastic
         ctx = ShardCtx.local()
 
         def loss_fn(params, batch, rng):
@@ -110,31 +170,53 @@ class GossipProgram:
         self._inner_jit = jax.jit(self.trainer.inner_step)
         self._eval_jit = jax.jit(self.trainer.eval_loss)
 
-    # -- membership ---------------------------------------------------------
+    # -- elastic runtime hooks (SimCluster drives these) ---------------------
 
-    @property
-    def membership_epoch(self) -> int:
-        return self.membership.epoch
+    def inner_step_index(self, state: TrainState) -> int:
+        return int(state.inner_step)
 
-    def set_membership(self, membership: Membership) -> None:
-        if membership.world != self.replicas:
-            raise ValueError(
-                f"membership world {membership.world} != replicas {self.replicas}"
-            )
-        self.membership = membership
+    def outer_round_index(self, state: TrainState) -> int:
+        return int(state.outer.step)
 
-    def set_partition(self, groups) -> None:
-        """Restrict pairings to partition components (None heals)."""
-        self.partition = (
-            None if groups is None else tuple(tuple(int(r) for r in g) for g in groups)
+    def sync_due(self, state: TrainState) -> bool:
+        return self.trainer.should_sync(state)
+
+    def warm_start(self, state: TrainState, replica: int, source: int) -> TrainState:
+        """Rejoin surgery: the comeback replica adopts a live peer's slow
+        weights as BOTH its φ and θ (fresh look-ahead), zero outer momentum,
+        zero inner-optimizer moments — exactly what a node that fetched φ
+        from one peer and restarted would hold."""
+        import dataclasses
+
+        def adopt(x):
+            return x.at[replica].set(x[source])
+
+        def zero_row(x):
+            return x.at[replica].set(jnp.zeros_like(x[replica]))
+
+        return TrainState(
+            theta=jax.tree.map(
+                lambda th, p: th.at[replica].set(p[source]),
+                state.theta, state.outer.phi,
+            ),
+            opt=AdamWState(
+                mu=jax.tree.map(zero_row, state.opt.mu),
+                nu=jax.tree.map(zero_row, state.opt.nu),
+                count=state.opt.count.at[replica].set(0),
+            ),
+            outer=dataclasses.replace(
+                state.outer,
+                phi=jax.tree.map(adopt, state.outer.phi),
+                delta=jax.tree.map(zero_row, state.outer.delta),
+            ),
+            inner_step=state.inner_step,
         )
 
     def _active_arr(self) -> jnp.ndarray | None:
         """(world,) bool mask for the inner step, or None when everyone is in
         (keeps the healthy path's compiled signature untouched)."""
-        if self.membership.is_full:
-            return None
-        return jnp.asarray(self.membership.active_array())
+        arr = self.elastic.active_array()
+        return None if arr is None else jnp.asarray(arr)
 
     # -- TrainProgram -------------------------------------------------------
 
@@ -153,57 +235,42 @@ class GossipProgram:
         # frozen replicas' stale-weight losses are not training signal: the
         # loop's mean (and telemetry) sees active replicas only, consistent
         # with eval_step/weight_std
-        ids = jnp.asarray(self.membership.active_ids)
+        ids = jnp.asarray(self.elastic.active_ids())
         metrics = dict(metrics, loss=jnp.take(metrics["loss"], ids))
         return state, metrics
 
     def maybe_outer_step(self, state):
         if not self.trainer.should_sync(state):
             return state, False
-        absent, self.round_absent = self.round_absent, frozenset()
-        absent = absent & set(self.membership.active_ids)
-        if absent == set(self.membership.active_ids):
-            # every live replica timed out this round: nobody exchanges, the
-            # round still happens (the outer counter must advance so the
-            # schedule stays aligned across the cluster)
-            self.last_partner = np.arange(self.replicas)
-            active = jnp.zeros((self.replicas,), bool)
-            return self.trainer.outer_step(
-                state, partner=jnp.asarray(self.last_partner), active=active
-            ), True
-        participants = self.membership.without(absent)
-        partner = None
-        self.last_partner = None
+        partner_fn = None
         if self.tcfg.outer.method == "noloco":
-            self.last_partner = pairing_lib.elastic_partner_table(
-                int(state.outer.step), participants,
-                seed=self.tcfg.outer.seed, groups=self.partition,
-            )
-            partner = jnp.asarray(self.last_partner)
-        active = None
-        if not participants.is_full:
-            active = jnp.asarray(participants.active_array())
+            step = int(state.outer.step)
+
+            def partner_fn(parts):
+                return pairing_lib.elastic_partner_table(
+                    step, parts, seed=self.tcfg.outer.seed,
+                    groups=self.elastic.partition,
+                )
+
+        plan = self.elastic.plan_round(partner_fn)
+        partner = None if plan.partner is None else jnp.asarray(plan.partner)
+        active = None if plan.active is None else jnp.asarray(plan.active)
         return self.trainer.outer_step(state, partner=partner, active=active), True
 
     def eval_step(self, state, batch, rng) -> float:
         losses = self._eval_jit(state.theta, batch, rng)
-        return float(jnp.mean(losses[jnp.asarray(self.membership.active_ids)]))
+        return float(jnp.mean(losses[jnp.asarray(self.elastic.active_ids())]))
 
     def weight_std(self, state) -> float:
         """Cross-replica weight std over ACTIVE replicas (a dropped replica's
         stale weights are not part of the ensemble)."""
-        if self.membership.num_active < 2:
+        if self.elastic.membership.num_active < 2:
             return 0.0
-        ids = jnp.asarray(self.membership.active_ids)
+        ids = jnp.asarray(self.elastic.active_ids())
         theta = jax.tree.map(lambda x: jnp.take(x, ids, axis=0), state.theta)
         return float(metrics_lib.replica_weight_std(theta))
 
     def state_pytree(self, state: TrainState) -> dict:
-        part = np.full((self.replicas,), -1, dtype=np.int64)
-        if self.partition is not None:
-            for gid, group in enumerate(self.partition):
-                for r in group:
-                    part[r] = gid
         return {
             "theta": state.theta,
             "opt": {"mu": state.opt.mu, "nu": state.opt.nu, "count": state.opt.count},
@@ -213,30 +280,12 @@ class GossipProgram:
                 "step": state.outer.step,
             },
             "inner_step": state.inner_step,
-            "membership": {
-                "mask": np.asarray(self.membership.mask, dtype=bool),
-                "epoch": np.int64(self.membership.epoch),
-                "partition": part,
-            },
+            "membership": self.elastic.state_dict(),
         }
 
     def load_state_pytree(self, state: TrainState, tree: dict) -> TrainState:
         if "membership" in tree:
-            mem = tree["membership"]
-            self.membership = Membership(
-                world=self.replicas,
-                mask=tuple(bool(b) for b in np.asarray(mem["mask"])),
-                epoch=int(mem["epoch"]),
-            )
-            part = np.asarray(mem["partition"])
-            if (part >= 0).any():
-                groups = [
-                    tuple(int(i) for i in np.nonzero(part == g)[0])
-                    for g in sorted(set(int(p) for p in part if p >= 0))
-                ]
-                self.partition = tuple(groups)
-            else:
-                self.partition = None
+            self.elastic.load_state_dict(tree["membership"])
         return TrainState(
             theta=tree["theta"],
             opt=AdamWState(
@@ -264,15 +313,23 @@ class GossipProgram:
 # ---------------------------------------------------------------------------
 
 
-class DistributedProgram:
+class DistributedProgram(_ElasticSurface):
     """Mesh runtime: wraps a configured ``DistributedTrainer``.
 
     Stacked ``(R, B, S)`` loader batches are flattened to the global
-    replica-major ``(R*B, S)`` rows the shard_map step consumes."""
+    replica-major ``(R*B, S)`` rows the shard_map step consumes.
+
+    Elasticity: the trainer's :class:`~repro.core.elastic.ElasticContext`
+    (when attached) is surfaced here exactly like the stacked program's —
+    SimCluster replays fault plans against the REAL compiled path, the outer
+    step comes from the per-membership-view program pool, eval/weight-std
+    aggregate over active replicas, and the membership epoch rides in the
+    checkpoint so resume-after-churn reproduces the trajectory exactly."""
 
     def __init__(self, trainer):
         self.trainer = trainer
         self.replicas = trainer.plan.replicas
+        self.elastic = trainer.elastic
 
     @staticmethod
     def _to_global(batch: dict) -> dict:
@@ -281,21 +338,68 @@ class DistributedProgram:
             for k, v in batch.items()
         }
 
+    # -- elastic runtime hooks ----------------------------------------------
+
+    def inner_step_index(self, state) -> int:
+        return int(state["inner_step"])
+
+    def outer_round_index(self, state) -> int:
+        # the stacked runtime reads the outer counter BEFORE the exchange
+        # (round labels are 0-indexed); mirror that from the inner counter
+        return int(state["inner_step"]) // self.trainer.outer_cfg.inner_steps - 1
+
+    def sync_due(self, state) -> bool:
+        m = self.trainer.outer_cfg.inner_steps
+        return state["inner_step"] > 0 and state["inner_step"] % m == 0
+
+    def warm_start(self, state, replica: int, source: int):
+        """Rejoin over the mesh: the peer's φ row moves across replica shards
+        (a gather+scatter on the replica axis — the only cross-replica traffic
+        a rejoin costs)."""
+        return self.trainer.warm_start(state, replica, source)
+
+    def drain_recompile_events(self) -> list[dict]:
+        events, self.trainer.recompile_events = self.trainer.recompile_events, []
+        return events
+
+    def pool_stats(self) -> dict:
+        return self.trainer.pool.stats()
+
+    def _active_ids(self) -> jnp.ndarray | None:
+        if self.elastic is None or self.elastic.is_full:
+            return None
+        return jnp.asarray(self.elastic.active_ids())
+
+    # -- TrainProgram -------------------------------------------------------
+
     def init_state(self, example_batch: dict):
         return self.trainer.init_state(self._to_global(example_batch))
 
     def inner_step(self, state, batch, rng):
-        return self.trainer.inner_step(state, self._to_global(batch))
+        state, metrics = self.trainer.inner_step(state, self._to_global(batch))
+        ids = self._active_ids()
+        if ids is not None:
+            metrics = dict(metrics, loss=jnp.take(metrics["loss"], ids))
+        return state, metrics
 
     def maybe_outer_step(self, state):
         return self.trainer.maybe_outer_step(state)
 
     def eval_step(self, state, batch, rng) -> float:
         losses = self.trainer.eval_loss(state, self._to_global(batch))
+        ids = self._active_ids()
+        if ids is not None:
+            losses = jnp.take(losses, ids)
         return float(jnp.mean(losses))
 
     def weight_std(self, state) -> float:
-        return float(metrics_lib.replica_weight_std(state["theta"]))
+        ids = self._active_ids()
+        theta = state["theta"]
+        if ids is not None:
+            if len(ids) < 2:
+                return 0.0
+            theta = jax.tree.map(lambda x: jnp.take(x, ids, axis=0), theta)
+        return float(metrics_lib.replica_weight_std(theta))
 
     def state_pytree(self, state) -> dict:
         tree = {
@@ -311,9 +415,13 @@ class DistributedProgram:
         }
         if "phi_pre" in state:
             tree["phi_pre"] = state["phi_pre"]
+        if self.elastic is not None:
+            tree["membership"] = self.elastic.state_dict()
         return tree
 
     def load_state_pytree(self, state, tree) -> dict:
+        if "membership" in tree and self.elastic is not None:
+            self.elastic.load_state_dict(tree["membership"])
         b = self.trainer.bundle
         put = jax.device_put
         new = dict(
@@ -354,12 +462,18 @@ class DistributedProgram:
 # ---------------------------------------------------------------------------
 
 
-class PipelineProgram:
-    """Routed-pipeline runtime: §3.1 routing + per-stage §3.2 gossip."""
+class PipelineProgram(_ElasticSurface):
+    """Routed-pipeline runtime: §3.1 routing + per-stage §3.2 gossip.
+
+    Elasticity: the trainer's :class:`~repro.core.elastic.ElasticContext`
+    restricts routing permutations to the active set and draws every stage's
+    gossip pairing over the active members only (inactive stage-replicas are
+    frozen, carry no routed traffic, and never appear in a pairing)."""
 
     def __init__(self, trainer: PipelineTrainer):
         self.trainer = trainer
         self.replicas = trainer.replicas
+        self.elastic = trainer.elastic
 
     def init_state(self, example_batch: dict) -> dict:
         return self.trainer.init(jax.random.PRNGKey(self.trainer.seed))
@@ -391,9 +505,13 @@ class PipelineProgram:
                 "delta": state["outer"]["delta"],
                 "step": np.int64(state["outer"]["step"]),
             }
+        if self.elastic is not None:
+            tree["membership"] = self.elastic.state_dict()
         return tree
 
     def load_state_pytree(self, state, tree) -> dict:
+        if "membership" in tree and self.elastic is not None:
+            self.elastic.load_state_dict(tree["membership"])
         new = {
             "params": list(tree["params"]),
             "opt": [

@@ -148,6 +148,7 @@ class TrainLoop:
         comm_bytes = 0
         blocking_bytes = 0
         total_tokens = 0
+        recompiles = 0
         # elastic programs expose an epoch-stamped Membership; emit a
         # telemetry event whenever the view changes (drop / rejoin)
         last_epoch = getattr(self.program, "membership_epoch", None)
@@ -163,6 +164,16 @@ class TrainLoop:
             losses.append(loss)
             total_tokens += int(np.prod(batch["tokens"].shape))
             state, synced = self.program.maybe_outer_step(state)
+            # elastic shard_map programs recompile at membership-view
+            # boundaries (OuterProgramPool): surface every compile as its own
+            # telemetry event so churn-induced stalls are visible in
+            # BENCH_engine-style runs (epoch, pool slot, build + first-call
+            # wall-clock, pool size)
+            drain = getattr(self.program, "drain_recompile_events", None)
+            if drain is not None:
+                for ev in drain():
+                    recompiles += 1
+                    self._emit("recompile", step=t + 1, **ev)
             epoch = getattr(self.program, "membership_epoch", None)
             if epoch != last_epoch:
                 last_epoch = epoch
@@ -226,7 +237,12 @@ class TrainLoop:
             ),
             "final_weight_std": final_std,
             "membership_epoch": last_epoch,
+            "recompiles": recompiles,
         }
+        stats_fn = getattr(self.program, "pool_stats", None)
+        pool_stats = stats_fn() if stats_fn is not None else None
+        if pool_stats is not None:
+            summary["pool"] = pool_stats
         self._emit("run_end", **summary)
         if self._jsonl is not None:
             self._jsonl.close()

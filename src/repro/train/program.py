@@ -28,12 +28,21 @@ __all__ = ["TrainProgram"]
 class TrainProgram(Protocol):
     """What a runtime must provide to be driven by :class:`TrainLoop`.
 
-    Elastic programs (the stacked :class:`~repro.train.GossipProgram` and
-    the :class:`~repro.sim.SimCluster` decorator) additionally expose
-    ``membership`` (an epoch-stamped :class:`~repro.core.pairing.Membership`)
-    and ``membership_epoch``; the loop duck-types on their presence to emit
-    ``membership`` telemetry events when the view changes and otherwise
-    ignores them — a fixed-world program needs neither.
+    Elastic programs (adapters with a :class:`~repro.core.elastic.
+    ElasticContext` attached, and the :class:`~repro.sim.SimCluster`
+    decorator over them) additionally expose ``membership`` (an epoch-stamped
+    :class:`~repro.core.pairing.Membership`) and ``membership_epoch``; the
+    loop duck-types on their presence to emit ``membership`` telemetry events
+    when the view changes and otherwise ignores them — a fixed-world program
+    needs neither.  Programs with a compiled-program pool may also expose
+    ``drain_recompile_events()`` / ``pool_stats()``; the loop surfaces those
+    as ``recompile`` events and the ``run_end`` pool summary.
+
+    To be DRIVEN BY SimCluster a program must further provide the elastic
+    runtime hooks: ``inner_step_index(state)``, ``outer_round_index(state)``,
+    ``sync_due(state)`` and ``warm_start(state, replica, source)`` (see
+    :class:`repro.train.adapters._ElasticSurface` and the two elastic
+    adapters for the contract).
     """
 
     #: number of gossip replicas (the leading axis of stacked batches)

@@ -357,3 +357,135 @@ def test_membership_api():
     assert t.epoch == back.epoch and 0 not in t.active_ids
     with pytest.raises(ValueError, match="at least one active"):
         Membership(world=2, mask=(False, False))
+
+
+# ---------------------------------------------------------------------------
+# Elastic data reassignment (flag-gated; default skips dropped streams)
+# ---------------------------------------------------------------------------
+
+
+def test_reassign_data_deterministic_and_changes_stream():
+    """With --reassign-data survivors adopt dropped replicas' streams via the
+    pure (membership, t) assignment: two runs are bit-identical to each
+    other, and diverge from the default skip-streams run after the drop."""
+    plan = FaultPlan.build([{"kind": "drop", "round": 1, "replicas": [0, 7]}])
+    kw = {**KW, "steps": 16, "eval_every": 0}
+    a = run_elastic_training(TINY, plan, reassign_data=True, **kw)
+    b = run_elastic_training(TINY, plan, reassign_data=True, **kw)
+    c = run_elastic_training(TINY, plan, **kw)
+    np.testing.assert_array_equal(np.asarray(a["losses"]), np.asarray(b["losses"]))
+    # pre-drop (steps 0-4) identical to the default, divergent after
+    np.testing.assert_array_equal(
+        np.asarray(a["losses"][:5]), np.asarray(c["losses"][:5])
+    )
+    assert not np.array_equal(np.asarray(a["losses"][6:]), np.asarray(c["losses"][6:]))
+    assert np.isfinite(a["losses"]).all()
+
+
+def test_stream_assignment_contract():
+    """The assignment itself: identity at full membership, disjoint picks,
+    full coverage over a cycle, pure in (membership, t)."""
+    from repro.core.elastic import stream_assignment
+
+    full = Membership.full(8)
+    np.testing.assert_array_equal(stream_assignment(full, 11), np.arange(8))
+    mem = full.drop([2, 5, 6])
+    seen = set()
+    for t in range(8):
+        tab = stream_assignment(mem, t)
+        picks = [int(tab[a]) for a in mem.active_ids]
+        assert len(picks) == len(set(picks))
+        seen.update(picks)
+        np.testing.assert_array_equal(tab, stream_assignment(mem, t))  # pure
+    assert seen == set(range(8))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline runtime consumes the same ElasticContext
+# ---------------------------------------------------------------------------
+
+
+def _pipeline_trainer(elastic=None, replicas=4):
+    from repro.core.elastic import ElasticContext
+    from repro.core.outer import OuterConfig
+    from repro.optim import AdamWConfig
+    from repro.pipeline import PipelineTrainer
+
+    return PipelineTrainer(
+        cfg=TINY, num_stages=2, replicas=replicas,
+        inner=AdamWConfig(lr=3e-3, weight_decay=0.0),
+        outer=OuterConfig(method="noloco", inner_steps=2),
+        seed=0, elastic=elastic,
+    )
+
+
+def _pipeline_batches(n, replicas=4):
+    from repro.data import LoaderConfig, shard_iterator
+
+    it = shard_iterator(LoaderConfig(
+        vocab_size=TINY.vocab_size, seq_len=16, per_replica_batch=2,
+        replicas=replicas,
+    ))
+    return [
+        {k: jnp.asarray(v) for k, v in next(it).items()} for _ in range(n)
+    ]
+
+
+def test_pipeline_elastic_full_membership_matches_legacy():
+    """Attaching an ElasticContext at full membership changes NOTHING: the
+    routed-pipeline trajectory is bit-identical to the fixed-world trainer."""
+    from repro.core.elastic import ElasticContext
+
+    batches = _pipeline_batches(6)
+    t_legacy = _pipeline_trainer(None)
+    t_elastic = _pipeline_trainer(ElasticContext(world=4))
+    s1 = t_legacy.init(jax.random.PRNGKey(0))
+    s2 = t_elastic.init(jax.random.PRNGKey(0))
+    for b in batches:
+        s1, l1 = t_legacy.train_step(s1, b)
+        s2, l2 = t_elastic.train_step(s2, b)
+        assert l1 == l2
+        s1, _ = t_legacy.maybe_outer_step(s1)
+        s2, _ = t_elastic.maybe_outer_step(s2)
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipeline_elastic_membership_freezes_and_excludes():
+    """Dropping a stage-replica: its params/opt freeze across inner AND outer
+    steps, routing never touches it, and every stage's gossip pairing
+    self-loops it."""
+    from repro.core.elastic import ElasticContext
+
+    ctx = ElasticContext(world=4)
+    tr = _pipeline_trainer(ctx)
+    state = tr.init(jax.random.PRNGKey(0))
+    batches = _pipeline_batches(8)
+    for b in batches[:2]:
+        state, _ = tr.train_step(state, b)
+        state, _ = tr.maybe_outer_step(state)
+    ctx.set_membership(ctx.membership.drop([2]))
+    snap = [jax.tree.map(lambda x: np.asarray(x[2]).copy(), p)
+            for p in state["params"]]
+    synced = 0
+    for b in batches[2:]:
+        routes = tr.routes(state["step"])
+        for r in routes:
+            assert int(r[2]) == 2  # no traffic through the dropped replica
+            others = [int(r[i]) for i in (0, 1, 3)]
+            assert sorted(others) == [0, 1, 3]
+        state, _ = tr.train_step(state, b)
+        state, did = tr.maybe_outer_step(state)
+        synced += did
+    assert synced >= 2
+    for snap_p, p in zip(snap, state["params"]):
+        for a, b in zip(jax.tree.leaves(snap_p), jax.tree.leaves(p)):
+            np.testing.assert_array_equal(a, np.asarray(b)[2])
+    # survivors moved
+    assert not np.array_equal(
+        np.asarray(jax.tree.leaves(state["params"][0])[0][0]),
+        np.asarray(jax.tree.leaves(snap[0])[0]),
+    )
+    # weight std / eval aggregate over actives only (no crash, finite)
+    assert np.isfinite(tr.weight_std(state))
+    assert np.isfinite(float(tr.eval_loss(state["params"], batches[0])))

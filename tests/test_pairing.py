@@ -80,3 +80,72 @@ def test_hypercube_rejects_non_power_of_two():
     import pytest as _pt
     with _pt.raises(ValueError):
         pairing.hypercube_partner_table(0, 12)
+
+
+# ---------------------------------------------------------------------------
+# Elastic hypercube schedule (the bounded-compile pool option, ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("world", [4, 8, 16])
+def test_elastic_hypercube_full_membership_matches_static(world):
+    mem = pairing.Membership.full(world)
+    for s in range(10):
+        np.testing.assert_array_equal(
+            pairing.elastic_hypercube_partner_table(s, mem),
+            pairing.hypercube_partner_table(s, world),
+        )
+
+
+def test_elastic_hypercube_degrades_pairs_touching_inactive():
+    """Dropping one endpoint of an XOR pair self-loops BOTH (the involution
+    survives any mask), and the surviving pairs are untouched."""
+    mem = pairing.Membership.full(8).drop([3])
+    for s in range(12):
+        full = pairing.hypercube_partner_table(s, 8)
+        pt = pairing.elastic_hypercube_partner_table(s, mem)
+        assert (pt[pt] == np.arange(8)).all()
+        assert pt[3] == 3
+        mate = int(full[3])
+        assert pt[mate] == mate  # the orphaned partner self-loops
+        for i in range(8):
+            if i != 3 and i != mate:
+                assert pt[i] == full[i]  # everyone else unchanged
+
+
+def test_elastic_hypercube_respects_partition():
+    mem = pairing.Membership.full(8)
+    groups = [(0, 1, 2, 3), (4, 5, 6, 7)]
+    for s in range(12):
+        pt = pairing.elastic_hypercube_partner_table(s, mem, groups=groups)
+        assert (pt[pt] == np.arange(8)).all()
+        for i in range(8):
+            assert (i < 4) == (int(pt[i]) < 4)
+
+
+def test_hypercube_dim_is_the_pool_key():
+    """hypercube_dim is bounded by log2(world) and fully determines the
+    table — the program-pool key contract."""
+    world = 16
+    for s in range(64):
+        j = pairing.hypercube_dim(s, world)
+        assert 0 <= j < 4
+        np.testing.assert_array_equal(
+            pairing.hypercube_partner_table(s, world),
+            np.arange(world) ^ (1 << j),
+        )
+
+
+def test_elastic_route_permutation_basics():
+    mem = pairing.Membership.full(6).drop([1, 4])
+    for s in range(8):
+        route = pairing.elastic_route_permutation(s, mem)
+        assert route[1] == 1 and route[4] == 4
+        act = [0, 2, 3, 5]
+        assert sorted(int(route[i]) for i in act) == act
+    full = pairing.Membership.full(6)
+    for s in range(8):
+        np.testing.assert_array_equal(
+            pairing.elastic_route_permutation(s, full),
+            np.asarray(pairing.pairing_permutation(s, 6)),
+        )

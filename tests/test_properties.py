@@ -199,3 +199,137 @@ def test_elastic_partition_never_pairs_across_components(step, seed, world, cut)
     assert (pt[pt] == np.arange(world)).all()
     for i in range(world):
         assert (i < cut) == (int(pt[i]) < cut)
+
+
+# ---------------------------------------------------------------------------
+# Elastic shard_map program pool (ISSUE 5): pure key/pairing invariants
+# ---------------------------------------------------------------------------
+
+
+def _pure_pool(world, schedule, pool=16, seed=0):
+    """OuterProgramPool with mesh-free stand-ins: the key/pairing derivation
+    under test is pure (compilation paths are covered by the multidevice
+    tests)."""
+    import types
+
+    from repro.core.outer import OuterConfig
+    from repro.parallel.steps import OuterProgramPool
+
+    return OuterProgramPool(
+        types.SimpleNamespace(replicas=world), None, None,
+        OuterConfig(method="noloco"), schedule=schedule, pairing_pool=pool,
+        seed=seed,
+    )
+
+
+@given(mem=memberships(), step=st.integers(0, 500), seed=st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_membership_epoch_is_schedule_irrelevant(mem, step, seed):
+    """Epoch determinism: the pairing is a pure function of (seed, step,
+    MASK) — two epochs with identical masks schedule identically, so a node
+    that left and came right back changes nothing."""
+    bumped = pairing.Membership(world=mem.world, mask=mem.mask, epoch=mem.epoch + 7)
+    np.testing.assert_array_equal(
+        pairing.elastic_partner_table(step, mem, seed=seed),
+        pairing.elastic_partner_table(step, bumped, seed=seed),
+    )
+    pool = _pure_pool(mem.world, "random", seed=seed)
+    assert pool.view_key(mem) == pool.view_key(bumped)
+    assert pool.pairs_for(step, mem) == pool.pairs_for(step, bumped)
+
+
+@st.composite
+def pow2_memberships(draw):
+    world = draw(st.sampled_from([2, 4, 8, 16]))
+    mask = list(draw(st.lists(st.booleans(), min_size=world, max_size=world)))
+    if not any(mask):
+        mask[draw(st.integers(0, world - 1))] = True
+    return pairing.Membership(world=world, mask=tuple(mask))
+
+
+@given(mem=pow2_memberships(), step=st.integers(0, 500), seed=st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_elastic_hypercube_involution_and_membership(mem, step, seed):
+    """The hypercube-pool table is an involution for ANY membership mask;
+    actives only pair with actives, inactives self-loop unreferenced, and
+    full membership is bit-identical to the static hypercube schedule."""
+    world = mem.world
+    pt = pairing.elastic_hypercube_partner_table(step, mem, seed=seed)
+    assert (pt[pt] == np.arange(world)).all()
+    active = set(mem.active_ids)
+    for i in range(world):
+        if i in active:
+            assert int(pt[i]) in active
+        else:
+            assert pt[i] == i
+            assert not ((pt == i) & (np.arange(world) != i)).any()
+    if mem.is_full and world >= 2:
+        np.testing.assert_array_equal(
+            pt, pairing.hypercube_partner_table(step, world, seed=seed)
+        )
+
+
+@given(
+    world=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 5),
+    pool=st.sampled_from([4, 16]),
+    horizon=st.integers(1, 300),
+)
+@settings(max_examples=30, deadline=None)
+def test_pool_slots_bounded(world, seed, pool, horizon):
+    """Pool hit/miss bound: over ANY run horizon the set of pool slots —
+    the bounded half of the program key — never exceeds ``pairing_pool``
+    (random) / log2(world) (hypercube), so compiles per membership view are
+    bounded by ``max_programs_per_view``."""
+    for schedule in ("random", "hypercube"):
+        p = _pure_pool(world, schedule, pool=pool, seed=seed)
+        slots = {p.pool_slot(k) for k in range(horizon)}
+        assert len(slots) <= p.max_programs_per_view
+        # and the same slot always yields the same pairs for the same view
+        mem = pairing.Membership.full(world).drop([0])
+        for k in range(min(horizon, 40)):
+            s1, pairs1 = p.pairs_for(k, mem)
+            for j in range(k + 1, min(horizon, 40)):
+                if p.pool_slot(j) == s1 and schedule == "random":
+                    assert p.pairs_for(j, mem)[1] == pairs1
+
+
+@given(mem=memberships(), step=st.integers(0, 300), seed=st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_elastic_route_restricts_to_active_bijection(mem, step, seed):
+    """Pipeline routing under churn: the route permutation is the identity on
+    inactives and a bijection on actives; full membership reproduces the
+    static routing draw bit for bit."""
+    route = pairing.elastic_route_permutation(step, mem, seed=seed)
+    active = sorted(mem.active_ids)
+    assert sorted(int(route[i]) for i in active) == active
+    for i in range(mem.world):
+        if i not in set(active):
+            assert route[i] == i
+    if mem.is_full:
+        np.testing.assert_array_equal(
+            route, np.asarray(pairing.pairing_permutation(step, mem.world, seed=seed))
+        )
+
+
+@given(mem=memberships(min_world=2, max_world=16), horizon=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_stream_assignment_covers_all_streams(mem, horizon):
+    """Elastic data reassignment: at every step each survivor reads exactly
+    one stream, no stream is read twice in a step, and over a full cycle the
+    survivors' reads cover EVERY stream (dropped data is consumed, not
+    lost)."""
+    from repro.core.elastic import stream_assignment
+
+    world = mem.world
+    actives = list(mem.active_ids)
+    seen = set()
+    # world steps always exceed the longest per-survivor pool cycle
+    for t in range(max(horizon, world)):
+        table = stream_assignment(mem, t)
+        picks = [int(table[a]) for a in actives]
+        assert len(picks) == len(set(picks))  # no stream read twice
+        seen.update(picks)
+    assert seen == set(range(world))
+    if mem.is_full:
+        np.testing.assert_array_equal(stream_assignment(mem, 3), np.arange(world))
