@@ -2,6 +2,13 @@
 blocking fraction from the unified TrainLoop's own accounting, on
 paper-small-125m (reduced), written to BENCH_engine.json so the perf
 trajectory is tracked from PR 2 onward.
+
+Since the streaming-outer-steps PR the benchmarked engine config is
+``streams=STREAMS`` with the §3.2 φ-prefetch: each sync event exchanges one
+payload stream and only its Δ half blocks, so ``blocking_bytes_per_outer_step``
+is the event-averaged blocking bytes per STREAM SYNC (the new wall), while
+``baseline_blocking_bytes_per_outer_step`` keeps the pre-streaming whole-payload
+wall for the cut-factor trajectory.
 """
 import json
 import os
@@ -13,6 +20,7 @@ from repro.launch.train import run_training
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
 STEPS = 30
+STREAMS = 4
 
 
 def main() -> None:
@@ -23,18 +31,28 @@ def main() -> None:
     res = run_training(
         cfg, method="noloco", replicas=4, per_replica_batch=2, seq_len=64,
         steps=STEPS, inner_lr=2e-3, inner_steps=10, eval_every=0, seed=0,
+        streams=STREAMS, overlap=True,
     )
     us = (time.perf_counter() - t0) * 1e6 / STEPS
     comm = res["comm"] or {}
+    # pre-streaming wall: the whole fused payload blocked at every sync
+    baseline_blocking = comm.get("payload_bytes", 0)
+    syncs = max(res["outer_syncs"], 1)
+    blocking = round(res["blocking_bytes"] / syncs)
+    overlapped = round((res["comm_bytes"] - res["blocking_bytes"]) / syncs)
     bench = {
         "arch": cfg.name,
         "steps": STEPS,
+        "stream_count": res.get("stream_count", 1),
         "tokens_per_s": round(res["tokens_per_s"], 2),
         "wall_s": round(res["wall_s"], 3),
         "outer_syncs": res["outer_syncs"],
         "comm_bytes_per_outer_step": comm.get("payload_bytes", 0),
-        "blocking_bytes_per_outer_step": comm.get("blocking_bytes", 0),
+        "blocking_bytes_per_outer_step": blocking,
+        "overlapped_bytes_per_outer_step": overlapped,
         "blocking_fraction": round(res["blocking_fraction"], 4),
+        "baseline_blocking_bytes_per_outer_step": baseline_blocking,
+        "blocking_cut_factor": round(baseline_blocking / max(blocking, 1), 2),
         "final_train_loss": round(res["losses"][-1], 4),
         "final_weight_std": res["final_weight_std"],
     }
@@ -42,7 +60,8 @@ def main() -> None:
         json.dump(bench, f, indent=2)
     emit("engine_tokens_per_s", us, f"tok_s={bench['tokens_per_s']}")
     emit("engine_comm", 0.0,
-         f"bytes_per_outer={bench['comm_bytes_per_outer_step']};"
+         f"blocking_per_sync={bench['blocking_bytes_per_outer_step']};"
+         f"cut={bench['blocking_cut_factor']}x;"
          f"blocking_frac={bench['blocking_fraction']}")
 
 

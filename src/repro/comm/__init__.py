@@ -51,7 +51,17 @@ from repro.comm.exchange import (
     presend,
     wire_roundtrip,
 )
-from repro.comm.payload import BufferSpec, LeafSlot, PayloadSpec, make_spec, pack, unpack
+from repro.comm.payload import (
+    BufferSpec,
+    LeafSlot,
+    PayloadSpec,
+    StreamPartition,
+    make_spec,
+    pack,
+    stream_partition,
+    unpack,
+    unpack_onto,
+)
 from repro.comm import bytes_model, compress, exchange, payload
 
 __all__ = [
@@ -69,9 +79,12 @@ __all__ = [
     "BufferSpec",
     "LeafSlot",
     "PayloadSpec",
+    "StreamPartition",
     "make_spec",
     "pack",
+    "stream_partition",
     "unpack",
+    "unpack_onto",
     "bytes_model",
     "compress",
     "exchange",

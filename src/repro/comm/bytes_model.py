@@ -20,18 +20,35 @@ from repro.comm.compress import CommConfig, get_codec
 
 PyTree = Any
 
-__all__ = ["CommCost", "spec_cost", "outer_step_cost", "abstract_params"]
+__all__ = ["CommCost", "StreamCost", "spec_cost", "outer_step_cost", "abstract_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamCost:
+    """One stream's share of the outer-cycle exchange (one sync event)."""
+
+    stream: int
+    payload_bytes: int       # everything this stream's sync moves (Δ + φ)
+    blocking_bytes: int      # the part its sync point must WAIT for
+    overlapped_bytes: int    # the part moved during inner compute (pre-send)
+    messages: int
+    blocking_messages: int
 
 
 @dataclasses.dataclass(frozen=True)
 class CommCost:
-    """Per-replica, per-outer-step communication cost (one direction).
+    """Per-replica communication cost of one FULL outer cycle (one direction).
 
-    ``payload_bytes``/``messages`` count everything a replica sends for one
-    outer round (including any overlapped φ′ pre-send); ``blocking_bytes``/
-    ``blocking_messages`` count only the part the outer step must WAIT for —
-    with ``overlap=True`` the φ half moved during the inner phase, so only Δ
-    blocks.  ``raw_bytes`` is the uncompressed fused baseline, making
+    A "cycle" is every stream synced once — with ``streams=1`` (the default)
+    that is exactly one outer step, so the historical reading of these fields
+    is unchanged.  ``payload_bytes``/``messages`` count everything a replica
+    sends per cycle (including any overlapped φ′ pre-send); ``blocking_bytes``
+    / ``blocking_messages`` count only what the sync points must WAIT for —
+    with ``overlap=True`` each stream's φ half moved during the inner phase,
+    so only its Δ blocks.  ``overlapped_bytes`` is the complement
+    (``payload_bytes − blocking_bytes``).  ``per_stream`` is the actual
+    message schedule, one :class:`StreamCost` per stream sync event.
+    ``raw_bytes`` is the uncompressed fused baseline, making
     ``compression_ratio = raw_bytes / payload_bytes``.
     """
 
@@ -44,13 +61,17 @@ class CommCost:
     blocking_bytes: int
     blocking_messages: int
     raw_bytes: int
+    stream_count: int = 1
+    overlapped_bytes: int = 0
+    per_stream: tuple[StreamCost, ...] = ()
 
     @property
     def compression_ratio(self) -> float:
         return self.raw_bytes / max(self.payload_bytes, 1)
 
     def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
+        d = dataclasses.asdict(self)  # recurses into per_stream StreamCosts
+        d["per_stream"] = list(d["per_stream"])
         d["compression_ratio"] = self.compression_ratio
         return d
 
@@ -69,22 +90,28 @@ def spec_cost(spec: payload_lib.PayloadSpec, cfg: CommConfig) -> tuple[int, int]
 def outer_step_cost(
     param_tree: PyTree, cfg: CommConfig, *, method: str = "noloco", world: int = 2
 ) -> CommCost:
-    """Cost of one outer step for a replica holding ``param_tree`` shards.
+    """Cost of one outer cycle for a replica holding ``param_tree`` shards.
 
-    NoLoCo exchanges the fused (Δ, φ) payload with ONE partner; with
-    ``overlap`` only Δ blocks (φ′ pre-sent along the next pairing).  DiLoCo
-    ring-all-reduces Δ over all ``world`` replicas: each replica sends
-    ``2·(world−1)/world`` of the payload in ``2·(world−1)`` messages per
-    buffer.  ``method="none"`` costs nothing.
+    NoLoCo exchanges the (Δ, φ) payload with ONE partner per sync; with
+    ``streams=S`` the payload is sharded into S streams each synced at its own
+    round offset, and with ``overlap`` each stream's φ′ is pre-sent during the
+    inner phase so only its Δ blocks.  The per-stream message schedule is
+    modelled explicitly (``per_stream``): a non-overlapped stream blocks on
+    its whole (Δ_k, φ_k) pair; an overlapped stream blocks on Δ_k and moves
+    φ′_k concurrently with compute.  DiLoCo ring-all-reduces Δ over all
+    ``world`` replicas: each replica sends ``2·(world−1)/world`` of the
+    payload in ``2·(world−1)`` messages per buffer (streams don't apply).
+    ``method="none"`` costs nothing.
     """
     cfg.validate()
     if method == "none":
         return CommCost(method, cfg.codec, cfg.fuse, cfg.overlap, 0, 0, 0, 0, 0)
 
     delta_spec = payload_lib.make_spec(param_tree, fuse=cfg.fuse)
-    delta_bytes, delta_msgs = spec_cost(delta_spec, cfg)
 
     if method == "diloco":
+        if cfg.streams > 1:
+            raise ValueError("streams > 1 is a noloco-only feature (gossip pairing)")
         # The DiLoCo baseline all-reduce is UNCOMPRESSED: no implementation
         # applies a codec to pmean, and affine-quantized payloads cannot be
         # summed hop-to-hop in a ring anyway — so cost it at raw bytes
@@ -97,18 +124,50 @@ def outer_step_cost(
     if method != "noloco":
         raise ValueError(f"unknown outer method: {method}")
 
-    pair_spec = payload_lib.make_spec((param_tree, param_tree), fuse=cfg.fuse)
-    pair_bytes, pair_msgs = spec_cost(pair_spec, cfg)
-    if cfg.overlap:
-        # total traffic unchanged (Δ now + φ′ pre-send), but only Δ blocks
-        return CommCost(
-            method, cfg.codec, cfg.fuse, cfg.overlap,
-            pair_bytes, delta_msgs + delta_msgs, delta_bytes, delta_msgs,
-            pair_spec.nbytes,
-        )
+    # actual message schedule: one (Δ_k, φ_k) exchange per stream sync event
+    import jax  # payload_lib already loaded it; keep top-of-module jax-free
+
+    leaves = jax.tree.flatten(param_tree)[0]
+    part = payload_lib.stream_partition(param_tree, cfg.streams, fuse=cfg.fuse)
+    per_stream: list[StreamCost] = []
+    for k in range(cfg.streams):
+        sub = [leaves[i] for i in part.leaf_indices(k)]
+        pair_k = payload_lib.make_spec((sub, sub), fuse=cfg.fuse)
+        pair_bytes_k, pair_msgs_k = spec_cost(pair_k, cfg)
+        delta_k = payload_lib.make_spec(sub, fuse=cfg.fuse)
+        delta_bytes_k, delta_msgs_k = spec_cost(delta_k, cfg)
+        if cfg.overlap:
+            # Δ_k blocks at the sync point; φ′_k is pre-sent during the inner
+            # steps — a SEPARATE wire at a different time, so it is costed as
+            # its own spec (== Δ_k's: same leaves), never fused into the pair.
+            # Linear codecs can't tell the difference; int8's per-buffer chunk
+            # rounding can, and the two-message schedule is the real one.
+            per_stream.append(StreamCost(
+                stream=k, payload_bytes=2 * delta_bytes_k,
+                blocking_bytes=delta_bytes_k,
+                overlapped_bytes=delta_bytes_k,
+                messages=delta_msgs_k + delta_msgs_k,
+                blocking_messages=delta_msgs_k,
+            ))
+        else:
+            per_stream.append(StreamCost(
+                stream=k, payload_bytes=pair_bytes_k,
+                blocking_bytes=pair_bytes_k, overlapped_bytes=0,
+                messages=pair_msgs_k, blocking_messages=pair_msgs_k,
+            ))
+    payload_bytes = sum(s.payload_bytes for s in per_stream)
+    blocking_bytes = sum(s.blocking_bytes for s in per_stream)
+    raw = payload_lib.make_spec((param_tree, param_tree), fuse=cfg.fuse).nbytes
     return CommCost(
         method, cfg.codec, cfg.fuse, cfg.overlap,
-        pair_bytes, pair_msgs, pair_bytes, pair_msgs, pair_spec.nbytes,
+        payload_bytes,
+        sum(s.messages for s in per_stream),
+        blocking_bytes,
+        sum(s.blocking_messages for s in per_stream),
+        raw,
+        stream_count=cfg.streams,
+        overlapped_bytes=payload_bytes - blocking_bytes,
+        per_stream=tuple(per_stream),
     )
 
 

@@ -50,6 +50,10 @@ class CommConfig:
                  instead of one message per leaf.
     ``overlap``: pre-send φ′ for the NEXT pairing during the inner phase
                  (paper §3.2) so only Δ blocks the outer step.
+    ``streams``: shard the outer payload into this many contiguous
+                 parameter-group streams synced on staggered round offsets
+                 (Streaming DiLoCo composed with gossip pairing); 1 keeps the
+                 whole payload on one sync point.
     ``chunk``:   int8 quantization group size (fp32 scale+min per chunk).
     ``error_feedback``: reserved for LoCo-style residual accumulation; only
                  meaningful for lossy codecs.
@@ -58,6 +62,7 @@ class CommConfig:
     codec: str = "none"
     fuse: bool = True
     overlap: bool = False
+    streams: int = 1
     chunk: int = 1024
     error_feedback: bool = False
 
@@ -66,6 +71,8 @@ class CommConfig:
             raise ValueError(f"unknown codec {self.codec!r}; options: {sorted(CODECS)}")
         if self.codec == "int8" and self.chunk < 2:
             raise ValueError("int8 chunk size must be >= 2")
+        if self.streams < 1:
+            raise ValueError(f"streams must be >= 1, got {self.streams}")
         if self.error_feedback and self.codec in ("none",):
             raise ValueError("error feedback only applies to lossy codecs")
 

@@ -17,6 +17,17 @@ without allocating anything.  ``pack``/``unpack`` are exact inverses:
 With ``fuse=False`` every leaf becomes its own single-leaf buffer (the
 unfused, message-per-leaf wire layout) — the same spec/codec machinery then
 costs and compresses both layouts uniformly.
+
+``stream_partition`` shards the payload into ``stream_count`` contiguous
+parameter-group streams (Streaming DiLoCo, arxiv 2501.18512): leaves are
+assigned to streams in flatten order by an element-balanced midpoint rule, so
+each stream's sub-payload can be exchanged on its own round offset while inner
+steps continue.  Every per-stream :class:`PayloadSpec` is built over the FULL
+treedef with slots referencing GLOBAL leaf indices — ``pack(tree, spec=
+part.specs[k])`` packs just that stream's leaves, and :func:`unpack_onto`
+writes them back into a base tree, leaving the other streams' leaves
+untouched.  At ``stream_count=1`` the single stream spec is exactly
+``make_spec(tree)``: stream 0 is bit-identical to today's fused payload.
 """
 
 from __future__ import annotations
@@ -30,7 +41,17 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["LeafSlot", "BufferSpec", "PayloadSpec", "make_spec", "pack", "unpack"]
+__all__ = [
+    "LeafSlot",
+    "BufferSpec",
+    "PayloadSpec",
+    "StreamPartition",
+    "make_spec",
+    "stream_partition",
+    "pack",
+    "unpack",
+    "unpack_onto",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,8 +95,67 @@ class PayloadSpec:
         return sum(b.size for b in self.buffers)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamPartition:
+    """Deterministic shard of one payload into contiguous leaf streams.
+
+    ``leaf_stream[i]`` is the stream owning global leaf ``i`` (non-decreasing
+    in flatten order); ``specs[k]`` is the :class:`PayloadSpec` packing
+    stream ``k``'s leaves — built over the FULL treedef, so global leaf
+    indices flow straight into :func:`pack`/:func:`unpack_onto`.  Streams may
+    be empty (fewer leaves than streams).
+    """
+
+    treedef: Any
+    num_leaves: int
+    stream_count: int
+    leaf_stream: tuple[int, ...]
+    specs: tuple[PayloadSpec, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self.specs)
+
+    def leaf_indices(self, stream: int) -> tuple[int, ...]:
+        """Global leaf indices owned by ``stream`` (flatten order)."""
+        return tuple(
+            i for i, k in enumerate(self.leaf_stream) if k == stream
+        )
+
+
 def _dtype_name(x) -> str:
     return jnp.dtype(x.dtype).name
+
+
+def _leaf_size(leaf) -> int:
+    return int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+
+
+def _spec_for_indices(leaves, treedef, idxs, *, fuse: bool) -> PayloadSpec:
+    """Packing layout covering exactly ``idxs`` (global leaf indices)."""
+    buffers: list[BufferSpec] = []
+    if fuse:
+        groups: dict[str, list[int]] = {}
+        for i in idxs:
+            groups.setdefault(_dtype_name(leaves[i]), []).append(i)
+        for dt, gidxs in groups.items():
+            slots, off = [], 0
+            for i in gidxs:
+                size = _leaf_size(leaves[i])
+                slots.append(LeafSlot(index=i, shape=tuple(leaves[i].shape), offset=off, size=size))
+                off += size
+            buffers.append(BufferSpec(dtype=dt, size=off, slots=tuple(slots)))
+    else:
+        for i in idxs:
+            size = _leaf_size(leaves[i])
+            buffers.append(
+                BufferSpec(
+                    dtype=_dtype_name(leaves[i]),
+                    size=size,
+                    slots=(LeafSlot(index=i, shape=tuple(leaves[i].shape), offset=0, size=size),),
+                )
+            )
+    return PayloadSpec(treedef=treedef, buffers=tuple(buffers), num_leaves=len(leaves))
 
 
 def make_spec(tree: PyTree, *, fuse: bool = True) -> PayloadSpec:
@@ -87,29 +167,47 @@ def make_spec(tree: PyTree, *, fuse: bool = True) -> PayloadSpec:
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
         return PayloadSpec(treedef=treedef, buffers=(), num_leaves=0)
-    buffers: list[BufferSpec] = []
-    if fuse:
-        groups: dict[str, list[int]] = {}
-        for i, leaf in enumerate(leaves):
-            groups.setdefault(_dtype_name(leaf), []).append(i)
-        for dt, idxs in groups.items():
-            slots, off = [], 0
-            for i in idxs:
-                size = int(np.prod(leaves[i].shape, dtype=np.int64)) if leaves[i].shape else 1
-                slots.append(LeafSlot(index=i, shape=tuple(leaves[i].shape), offset=off, size=size))
-                off += size
-            buffers.append(BufferSpec(dtype=dt, size=off, slots=tuple(slots)))
-    else:
-        for i, leaf in enumerate(leaves):
-            size = int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
-            buffers.append(
-                BufferSpec(
-                    dtype=_dtype_name(leaf),
-                    size=size,
-                    slots=(LeafSlot(index=i, shape=tuple(leaf.shape), offset=0, size=size),),
-                )
-            )
-    return PayloadSpec(treedef=treedef, buffers=tuple(buffers), num_leaves=len(leaves))
+    return _spec_for_indices(leaves, treedef, range(len(leaves)), fuse=fuse)
+
+
+def stream_partition(
+    tree: PyTree, stream_count: int, *, fuse: bool = True
+) -> StreamPartition:
+    """Shard ``tree``'s payload into ``stream_count`` contiguous leaf streams.
+
+    Deterministic in (tree structure, leaf shapes/dtypes, stream_count): leaf
+    ``i`` spanning elements ``[a, a+n)`` of the flattened payload goes to
+    stream ``⌊midpoint · S / total⌋`` — contiguous in flatten order,
+    element-balanced, and stable under jit (pure host arithmetic).  With
+    ``stream_count=1`` the single spec equals ``make_spec(tree, fuse=fuse)``.
+    """
+    if stream_count < 1:
+        raise ValueError(f"stream_count must be >= 1, got {stream_count}")
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [_leaf_size(leaf) for leaf in leaves]
+    total = sum(sizes)
+    leaf_stream: list[int] = []
+    acc = 0
+    for sz in sizes:
+        # integer midpoint rule: stream = floor((acc + sz/2) * S / total)
+        k = ((2 * acc + sz) * stream_count) // (2 * total) if total else 0
+        leaf_stream.append(min(k, stream_count - 1))
+        acc += sz
+    specs = tuple(
+        _spec_for_indices(
+            leaves, treedef,
+            [i for i, k in enumerate(leaf_stream) if k == s],
+            fuse=fuse,
+        )
+        for s in range(stream_count)
+    )
+    return StreamPartition(
+        treedef=treedef,
+        num_leaves=len(leaves),
+        stream_count=stream_count,
+        leaf_stream=tuple(leaf_stream),
+        specs=specs,
+    )
 
 
 def pack(
@@ -133,6 +231,25 @@ def pack(
 def unpack(buffers: Sequence[jax.Array], spec: PayloadSpec) -> PyTree:
     """Inverse of :func:`pack`: rebuild the original pytree."""
     leaves: list = [None] * spec.num_leaves
+    for buf, bspec in zip(buffers, spec.buffers):
+        for s in bspec.slots:
+            leaves[s.index] = jax.lax.slice(buf, (s.offset,), (s.offset + s.size,)).reshape(s.shape)
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def unpack_onto(buffers: Sequence[jax.Array], spec: PayloadSpec, base: PyTree) -> PyTree:
+    """Partial unpack: write the leaves covered by ``spec`` into ``base``.
+
+    ``base`` must share ``spec.treedef``; leaves not covered by any slot pass
+    through from ``base`` unchanged.  This is the per-stream inverse of
+    ``pack(tree, spec=partition.specs[k])``.
+    """
+    leaves = list(jax.tree.flatten(base)[0])
+    if len(leaves) != spec.num_leaves:
+        raise ValueError(
+            f"base has {len(leaves)} leaves but spec covers a tree of "
+            f"{spec.num_leaves}"
+        )
     for buf, bspec in zip(buffers, spec.buffers):
         for s in bspec.slots:
             leaves[s.index] = jax.lax.slice(buf, (s.offset,), (s.offset + s.size,)).reshape(s.shape)

@@ -4,14 +4,17 @@
 from repro.core.outer import (
     OuterConfig,
     OuterState,
+    StreamSchedule,
     default_gamma,
     gamma_band,
     init_outer_state,
     outer_gradient,
     outer_step,
     outer_step_sharded,
-    outer_step_sharded_overlapped,
+    outer_step_sharded_overlapped,  # removed-API stub (clear deprecation error)
+    outer_step_sharded_stream,
     outer_step_stacked,
+    outer_step_stacked_stream,
 )
 from repro.core.elastic import ElasticContext, RoundPlan, stream_assignment
 from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
@@ -24,6 +27,7 @@ __all__ = [
     "stream_assignment",
     "OuterConfig",
     "OuterState",
+    "StreamSchedule",
     "default_gamma",
     "gamma_band",
     "init_outer_state",
@@ -31,7 +35,9 @@ __all__ = [
     "outer_step",
     "outer_step_sharded",
     "outer_step_sharded_overlapped",
+    "outer_step_sharded_stream",
     "outer_step_stacked",
+    "outer_step_stacked_stream",
     "GossipTrainer",
     "Membership",
     "TrainState",

@@ -144,6 +144,40 @@ class GossipTrainer:
             theta=new_theta, opt=state.opt, outer=new_outer, inner_step=state.inner_step
         )
 
+    def outer_step_stream(
+        self,
+        state: TrainState,
+        *,
+        stream: int,
+        partition,
+        partner: jax.Array,
+        active: jax.Array | None = None,
+        phi_pre: PyTree | None = None,
+        consume_prefetch: bool = False,
+        partner_next: jax.Array | None = None,
+    ) -> tuple[TrainState, PyTree | None]:
+        """One STREAM's gossip sync (NoLoCo streaming outer steps).
+
+        Exchanges and updates only the leaves ``partition`` (a
+        :class:`repro.comm.StreamPartition` over the stacked parameter tree)
+        assigns to ``stream``; see
+        :func:`repro.core.outer.outer_step_stacked_stream` for the prefetch /
+        pre-send semantics.  Returns ``(new_state, phi_pre_out)`` where
+        ``phi_pre_out`` is the updated full-tree prefetch buffer (None when no
+        pre-send was requested)."""
+        new_outer, new_theta, phi_pre_out = outer_lib.outer_step_stacked_stream(
+            state.outer, state.theta, self.cfg.outer,
+            stream=stream, partition=partition, partner=partner, active=active,
+            phi_pre=phi_pre, consume_prefetch=consume_prefetch,
+            partner_next=partner_next,
+            comm_cfg=self.cfg.comm, kernel_cfg=self.cfg.kernels,
+        )
+        new_state = TrainState(
+            theta=new_theta, opt=state.opt, outer=new_outer,
+            inner_step=state.inner_step,
+        )
+        return new_state, phi_pre_out
+
     def eval_loss(
         self, theta: PyTree, batch: PyTree, rng: jax.Array
     ) -> jax.Array:

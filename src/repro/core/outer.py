@@ -21,9 +21,15 @@ The §3.2 φ-prefetch overlap is a property of the EXCHANGE, not a separate
 algorithm: :func:`repro.comm.exchange_gossip` sends only Δ on the blocking
 path when the partner's φ was pre-sent during the previous inner phase, and
 :func:`repro.comm.presend` issues the φ′ transfer along the next pairing.
-:func:`outer_step_sharded_overlapped` is a thin wrapper wiring those two calls
-to the shared update — every NoLoCo caller can opt in via
-``CommConfig(overlap=True)``; there is no duplicated ppermute/mean logic here.
+Streaming (Streaming DiLoCo composed with gossip pairing) generalizes this:
+:class:`StreamSchedule` staggers the payload's parameter-group streams
+(:func:`repro.comm.stream_partition`) across the round, and
+:func:`outer_step_stacked_stream` / :func:`outer_step_sharded_stream` run one
+stream's exchange + momentum update while every other leaf passes through
+untouched.  Every NoLoCo caller opts in via ``CommConfig(streams=S,
+overlap=True)``; ``streams=1, overlap=True`` reproduces the retired
+``outer_step_sharded_overlapped`` pre-send path; there is no duplicated
+ppermute/mean logic anywhere.
 
 Equations (paper §3.2)::
 
@@ -47,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.comm import CommConfig
 from repro.comm import exchange as exchange_lib
+from repro.comm import payload as payload_lib
 from repro.core import pairing
 from repro.kernels import ops as kernel_ops
 from repro.kernels.dispatch import KernelConfig
@@ -56,6 +63,7 @@ PyTree = Any
 __all__ = [
     "OuterConfig",
     "OuterState",
+    "StreamSchedule",
     "gamma_band",
     "default_gamma",
     "init_outer_state",
@@ -64,8 +72,9 @@ __all__ = [
     "diloco_momentum_update",
     "outer_step",
     "outer_step_stacked",
+    "outer_step_stacked_stream",
     "outer_step_sharded",
-    "outer_step_sharded_overlapped",
+    "outer_step_sharded_stream",
 ]
 
 
@@ -147,6 +156,63 @@ def init_outer_state(params: PyTree) -> OuterState:
         delta=jax.tree.map(jnp.zeros_like, params),
         step=jnp.zeros((), jnp.int32),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSchedule:
+    """When each payload stream syncs (Streaming DiLoCo round offsets).
+
+    Stream ``k`` of ``stream_count`` gets the round offset ``o_k = ⌊k·m/S⌋``
+    and syncs at inner steps ``t = r·m + o_k`` for rounds ``r ≥ 1`` — the
+    offsets are distinct (requires ``S ≤ m``), so at most ONE stream syncs at
+    any inner step, staggering the exchanges across the round instead of
+    stacking them all on the ``t % m == 0`` wall.  Stream 0 keeps offset 0:
+    with ``stream_count=1`` the schedule is exactly today's single sync point.
+
+    The GLOBAL sync index of stream ``k``'s round-``r`` sync is
+    ``(r−1)·S + k`` — a strictly increasing sequence position that doubles as
+    the gossip pairing key (``OuterState.step`` advances once per stream
+    sync), and stream ``k``'s next sync after index ``i`` is ``i + S`` (the
+    φ′ pre-send pairing key).
+    """
+
+    inner_steps: int
+    stream_count: int = 1
+
+    def __post_init__(self):
+        if self.stream_count < 1:
+            raise ValueError(f"stream_count must be >= 1, got {self.stream_count}")
+        if self.stream_count > self.inner_steps:
+            raise ValueError(
+                f"stream_count ({self.stream_count}) must not exceed "
+                f"inner_steps ({self.inner_steps}): round offsets ⌊k·m/S⌋ "
+                "must be distinct for the staggered schedule to exist"
+            )
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        m, s = self.inner_steps, self.stream_count
+        return tuple((k * m) // s for k in range(s))
+
+    def due(self, inner_step: int) -> int | None:
+        """Stream syncing at ``inner_step`` (None if no stream is due)."""
+        m = self.inner_steps
+        off = inner_step % m
+        for k, o in enumerate(self.offsets):
+            if off == o and inner_step - o >= m:
+                return k
+        return None
+
+    def sync_index(self, stream: int, inner_step: int) -> int:
+        """Global sync index (= pairing key) of ``stream``'s sync at
+        ``inner_step``; the stream must be due there."""
+        o = self.offsets[stream]
+        r = (inner_step - o) // self.inner_steps
+        if inner_step != r * self.inner_steps + o or r < 1:
+            raise ValueError(
+                f"stream {stream} is not due at inner step {inner_step}"
+            )
+        return (r - 1) * self.stream_count + stream
 
 
 # ---------------------------------------------------------------------------
@@ -361,6 +427,104 @@ def outer_step_stacked(
     return new_state, new_theta
 
 
+def outer_step_stacked_stream(
+    state: OuterState,
+    theta: PyTree,
+    cfg: OuterConfig,
+    *,
+    stream: int,
+    partition: payload_lib.StreamPartition,
+    partner: jax.Array,
+    active: jax.Array | None = None,
+    phi_pre: PyTree | None = None,
+    consume_prefetch: bool = False,
+    partner_next: jax.Array | None = None,
+    comm_cfg: CommConfig | None = None,
+    kernel_cfg: KernelConfig | None = None,
+) -> tuple[OuterState, PyTree, PyTree | None]:
+    """One STREAM's outer sync in stacked mode (NoLoCo only).
+
+    Exchanges and momentum-updates only the leaves ``partition`` assigns to
+    ``stream``; every other leaf of (φ, δ, θ) passes through bit-untouched.
+    The per-leaf math is exactly :func:`outer_step` restricted to the stream's
+    leaf list, so a single stream covering the whole payload reproduces
+    :func:`outer_step_stacked` bitwise (tested).
+
+    ``consume_prefetch``: partner's φ for this stream was pre-sent at the
+    previous sync of the same stream — read it from ``phi_pre`` (a FULL
+    parameter-shaped tree; only the stream's leaves are consulted) and block
+    only on the Δ exchange.  ``partner_next``: issue the φ′ pre-send for this
+    stream's NEXT sync along that pairing; the updated ``phi_pre`` (stream
+    leaves overwritten with the partner's incoming φ′) is returned as the
+    third element, or None when no pre-send was requested.
+
+    ``active`` freezes non-participants exactly like
+    :func:`outer_step_stacked` — but only over this stream's leaves.
+    """
+    cfg.validate()
+    if cfg.method != "noloco":
+        raise ValueError("streamed outer sync is NoLoCo-only (gossip pairing)")
+    theta_leaves, treedef = jax.tree.flatten(theta)
+    phi_leaves = jax.tree.leaves(state.phi)
+    mom_leaves = jax.tree.leaves(state.delta)
+    idxs = partition.leaf_indices(stream)
+
+    theta_k = [theta_leaves[i] for i in idxs]
+    phi_k = [phi_leaves[i] for i in idxs]
+    mom_k = [mom_leaves[i] for i in idxs]
+    delta_k = outer_gradient(theta_k, phi_k)
+
+    comm = exchange_lib.StackedGather(jnp.asarray(partner), comm_cfg)
+    prefetched = None
+    if consume_prefetch:
+        if phi_pre is None:
+            raise ValueError("consume_prefetch=True requires phi_pre")
+        pre_leaves = jax.tree.leaves(phi_pre)
+        prefetched = [pre_leaves[i] for i in idxs]
+    delta_p, phi_p = exchange_lib.exchange_gossip(
+        comm, delta_k, phi_k, phi_prefetched=prefetched
+    )
+    mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta_k, delta_p)
+    mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), phi_k, phi_p)
+    phi_next_k, mom_next_k = noloco_momentum_update(
+        phi_k, mom_k, mean_delta, mean_phi,
+        alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.resolved_gamma(),
+        kernel_cfg=kernel_cfg,
+    )
+    theta_next_k = phi_next_k
+    if active is not None:
+        act = jnp.asarray(active, bool)
+
+        def _sel(new, old):
+            return jnp.where(act.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+
+        phi_next_k = jax.tree.map(_sel, phi_next_k, phi_k)
+        mom_next_k = jax.tree.map(_sel, mom_next_k, mom_k)
+        theta_next_k = jax.tree.map(_sel, theta_next_k, theta_k)
+
+    phi_pre_out = None
+    if partner_next is not None:
+        comm_next = exchange_lib.StackedGather(jnp.asarray(partner_next), comm_cfg)
+        pre_k = exchange_lib.presend(comm_next, phi_next_k)
+        base = phi_pre if phi_pre is not None else state.phi
+        pre_leaves = list(jax.tree.leaves(base))
+        for i, leaf in zip(idxs, pre_k):
+            pre_leaves[i] = leaf
+        phi_pre_out = jax.tree.unflatten(treedef, pre_leaves)
+
+    new_phi = list(phi_leaves)
+    new_mom = list(mom_leaves)
+    new_theta = list(theta_leaves)
+    for i, p, d, t in zip(idxs, phi_next_k, mom_next_k, theta_next_k):
+        new_phi[i], new_mom[i], new_theta[i] = p, d, t
+    new_state = OuterState(
+        phi=jax.tree.unflatten(treedef, new_phi),
+        delta=jax.tree.unflatten(treedef, new_mom),
+        step=state.step + 1,
+    )
+    return new_state, jax.tree.unflatten(treedef, new_theta), phi_pre_out
+
+
 # ---------------------------------------------------------------------------
 # Sharded backend (inside shard_map; axis-name collectives)
 # ---------------------------------------------------------------------------
@@ -423,41 +587,125 @@ def outer_step_sharded(
     return new_state, new_theta
 
 
-def outer_step_sharded_overlapped(
+def outer_step_sharded_stream(
     state: OuterState,
     theta: PyTree,
-    phi_prefetched: PyTree,
     cfg: OuterConfig,
     *,
+    stream: int,
+    partition: payload_lib.StreamPartition,
     axis_names: Sequence[str],
     perm: Sequence[tuple[int, int]],
-    perm_next: Sequence[tuple[int, int]],
+    phi_pre: PyTree | None = None,
+    consume_prefetch: bool = False,
+    perm_next: Sequence[tuple[int, int]] | None = None,
     comm_cfg: CommConfig | None = None,
     kernel_cfg: KernelConfig | None = None,
-) -> tuple[OuterState, PyTree, PyTree]:
-    """NoLoCo outer step with the φ-exchange OVERLAP of §3.2.
+    active_flag: jax.Array | None = None,
+) -> tuple[OuterState, PyTree, PyTree | None]:
+    """One STREAM's outer sync inside ``shard_map`` (NoLoCo only).
 
-    The partner's slow weights φ_j were already exchanged at the END of the
-    previous outer step (they do not change during inner steps), so the only
-    BLOCKING collective here is the Δ ppermute — half the payload of the
-    baseline gossip step.  The φ′ pre-send for the NEXT pairing is issued in
-    the same program; on hardware it overlaps the next m inner steps.
+    The shard_map twin of :func:`outer_step_stacked_stream`: only the leaves
+    ``partition`` assigns to ``stream`` are exchanged (ShardedPermute over
+    ``perm``) and momentum-updated; every other leaf of (φ, δ, θ) passes
+    through bit-untouched, so a single stream covering the whole payload
+    reproduces :func:`outer_step_sharded` bitwise.
 
-    Returns (new_state, new_theta, phi_prefetched_for_next_step).  This is a
-    thin wrapper: both the exchange and the update live in :mod:`repro.comm` /
-    :func:`outer_step`.
+    ``consume_prefetch`` reads the partner's φ for this stream from
+    ``phi_pre`` (full parameter-shaped tree, pre-sent at the stream's
+    previous sync — §3.2: φ does not change during inner steps) and blocks
+    only on the Δ ppermute; ``perm_next`` issues the φ′ pre-send for the
+    stream's NEXT sync, returned as an updated ``phi_pre`` (third element —
+    on hardware that transfer overlaps the next inner steps).  This subsumes
+    the retired ``outer_step_sharded_overlapped``: a single stream with
+    ``consume_prefetch=True`` and a ``perm_next`` is exactly the legacy
+    pre-send path.
+
+    ``active_flag`` (optional scalar: does THIS shard's replica participate
+    in the round?) freezes a non-participant's stream leaves — the select
+    runs BEFORE the pre-send so a frozen replica pre-sends its TRUE
+    (unchanged) φ, exactly like the stacked twin.  Unlike
+    :func:`outer_step_sharded` the select lives here, not in the caller,
+    because the pre-send ordering depends on it.
     """
     cfg.validate()
     if cfg.method != "noloco":
-        raise ValueError("overlap variant is NoLoCo-only")
+        raise ValueError("streamed outer sync is NoLoCo-only (gossip pairing)")
     axis_names = tuple(axis_names)
-    # same default wire layout as outer_step_sharded (per-leaf, no fusing) so
-    # overlapped-vs-plain comparisons measure the overlap, not the payload
-    comm_cfg = comm_cfg or CommConfig(fuse=False)
+    comm_cfg = comm_cfg or CommConfig(fuse=True)
+    theta_leaves, treedef = jax.tree.flatten(theta)
+    phi_leaves = jax.tree.leaves(state.phi)
+    mom_leaves = jax.tree.leaves(state.delta)
+    idxs = partition.leaf_indices(stream)
+
+    theta_k = [theta_leaves[i] for i in idxs]
+    phi_k = [phi_leaves[i] for i in idxs]
+    mom_k = [mom_leaves[i] for i in idxs]
+    delta_k = outer_gradient(theta_k, phi_k)
+
     comm = exchange_lib.ShardedPermute(axis_names, perm, comm_cfg)
-    comm_next = exchange_lib.ShardedPermute(axis_names, perm_next, comm_cfg)
-    new_state, new_theta, phi_pre = outer_step(
-        state, theta, cfg, comm, phi_prefetched=phi_prefetched,
-        comm_next=comm_next, kernel_cfg=kernel_cfg,
+    prefetched = None
+    if consume_prefetch:
+        if phi_pre is None:
+            raise ValueError("consume_prefetch=True requires phi_pre")
+        pre_leaves = jax.tree.leaves(phi_pre)
+        prefetched = [pre_leaves[i] for i in idxs]
+    delta_p, phi_p = exchange_lib.exchange_gossip(
+        comm, delta_k, phi_k, phi_prefetched=prefetched
     )
-    return new_state, new_theta, phi_pre
+    mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta_k, delta_p)
+    mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), phi_k, phi_p)
+    phi_next_k, mom_next_k = noloco_momentum_update(
+        phi_k, mom_k, mean_delta, mean_phi,
+        alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.resolved_gamma(),
+        kernel_cfg=kernel_cfg,
+    )
+    theta_next_k = phi_next_k
+    if active_flag is not None:
+        flag = jnp.asarray(active_flag, bool).reshape(())
+        _sel = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(flag, a, b), new, old
+        )
+        phi_next_k = _sel(phi_next_k, phi_k)
+        mom_next_k = _sel(mom_next_k, mom_k)
+        theta_next_k = _sel(theta_next_k, theta_k)
+
+    phi_pre_out = None
+    if perm_next is not None:
+        comm_next = exchange_lib.ShardedPermute(axis_names, perm_next, comm_cfg)
+        pre_k = exchange_lib.presend(comm_next, phi_next_k)
+        base = phi_pre if phi_pre is not None else state.phi
+        pre_leaves = list(jax.tree.leaves(base))
+        for i, leaf in zip(idxs, pre_k):
+            pre_leaves[i] = leaf
+        phi_pre_out = jax.tree.unflatten(treedef, pre_leaves)
+
+    new_phi = list(phi_leaves)
+    new_mom = list(mom_leaves)
+    new_theta = list(theta_leaves)
+    for i, p, d, t in zip(idxs, phi_next_k, mom_next_k, theta_next_k):
+        new_phi[i], new_mom[i], new_theta[i] = p, d, t
+    new_state = OuterState(
+        phi=jax.tree.unflatten(treedef, new_phi),
+        delta=jax.tree.unflatten(treedef, new_mom),
+        step=state.step + 1,
+    )
+    return new_state, jax.tree.unflatten(treedef, new_theta), phi_pre_out
+
+
+def outer_step_sharded_overlapped(*args, **kwargs):
+    """Removed: the legacy φ pre-send path is subsumed by the stream machinery.
+
+    ``CommConfig(streams=1, overlap=True)`` through
+    :func:`outer_step_sharded_stream` / ``parallel.steps.build_outer_step``
+    reproduces it (single stream, ``consume_prefetch=True`` + a pre-send
+    pairing) — and unlike the legacy spelling it composes with elasticity via
+    the membership-epoch fallback.
+    """
+    raise NotImplementedError(
+        "outer_step_sharded_overlapped was removed: use "
+        "outer_step_sharded_stream(..., consume_prefetch=True, perm_next=...) "
+        "or CommConfig(streams=1, overlap=True) through "
+        "parallel.steps.build_outer_step — the stream machinery reproduces "
+        "the legacy pre-send path and additionally composes with elasticity."
+    )

@@ -63,10 +63,15 @@ def outer_variant(arch: str, overlapped: bool, mesh) -> dict:
             fn = steps_lib.build_outer_step(plan, mesh, pspecs, ocfg, perm)
             compiled = fn.lower(theta_abs, theta_abs, theta_abs, rep_sh).compile()
         else:
-            # the §3.2 overlap is now a first-class build_outer_step variant
-            # (extra phi_prefetched input / φ′ pre-send output)
+            # the §3.2 overlap is the single-stream streamed program: consume
+            # the prefetched φ (block on Δ only) and pre-send φ′ along the
+            # next pairing (extra phi_pre input and output)
+            from repro.comm import stream_partition
+
+            part = stream_partition(theta_abs, 1)
             fn = steps_lib.build_outer_step(
-                plan, mesh, pspecs, ocfg, perm, perm_next=perm_next
+                plan, mesh, pspecs, ocfg, perm, stream=0, partition=part,
+                consume_prefetch=True, perm_presend=perm_next,
             )
             compiled = fn.lower(
                 theta_abs, theta_abs, theta_abs, theta_abs, rep_sh

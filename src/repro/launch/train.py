@@ -89,6 +89,8 @@ def run_training(
     log_jsonl: str | None = None,
     codec: str = "none",
     fuse: bool = True,
+    streams: int = 1,
+    overlap: bool = False,
     impl: str = "auto",
     interpret: bool | None = None,
 ) -> dict[str, Any]:
@@ -96,7 +98,10 @@ def run_training(
 
     ``codec``/``fuse`` configure the gossip wire (repro.comm.CommConfig): the
     stacked simulation applies lossy codecs to the partner's exchanged values
-    exactly as the distributed ppermute path would.  ``resume`` restores the
+    exactly as the distributed ppermute path would.  ``streams`` partitions
+    the outer payload into that many streams synced on staggered round
+    offsets (streaming outer steps, DESIGN.md §2); ``overlap`` adds the §3.2
+    φ-prefetch so only each stream's Δ exchange blocks.  ``resume`` restores the
     latest checkpoint under ``ckpt_dir`` (θ/φ/δ/opt/step counters + loader
     fast-forward + PRNG keys) and continues the exact trajectory.
 
@@ -115,7 +120,9 @@ def run_training(
         method, inner_lr=inner_lr, total_steps=total_steps or steps,
         warmup=warmup if warmup is not None else max((total_steps or steps) // 10, 1),
         inner_steps=inner_steps, seed=seed,
-        comm=CommConfig(codec=codec, fuse=fuse), kernels=kcfg,
+        comm=CommConfig(codec=codec, fuse=fuse, streams=streams,
+                        overlap=overlap),
+        kernels=kcfg,
     )
     program = GossipProgram(cfg, tcfg, replicas=replicas, seed=seed)
     loop = make_loop(
@@ -177,6 +184,12 @@ def main() -> None:
                     help="gossip wire codec (repro.comm)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="per-leaf exchange instead of one fused buffer per dtype")
+    ap.add_argument("--stream-count", type=int, default=1,
+                    help="streaming outer steps: partition the payload into N "
+                         "streams synced on staggered round offsets")
+    ap.add_argument("--overlap", action="store_true",
+                    help="§3.2 φ-prefetch overlap (auto-enabled by "
+                         "--stream-count > 1)")
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
@@ -195,10 +208,14 @@ def main() -> None:
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, resume=args.resume,
         log=True, log_jsonl=args.log_jsonl,
         codec=args.codec, fuse=not args.no_fuse,
+        streams=args.stream_count,
+        overlap=args.overlap or args.stream_count > 1,
         impl=args.impl, interpret=args.interpret,
     )
     summary = {
         "arch": cfg.name, "method": args.method, "codec": args.codec,
+        "stream_count": res.get("stream_count", 1),
+        "blocking_fraction": round(res["blocking_fraction"], 4),
         "final_train_loss": res["losses"][-1] if res["losses"] else None,
         "final_eval": res["evals"][-1][1] if res["evals"] else None,
         "final_weight_std": res["final_weight_std"],

@@ -39,10 +39,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.comm import CommConfig
+from repro.comm import CommConfig, bytes_model, stream_partition
 from repro.configs import registry
 from repro.core.elastic import ElasticContext
-from repro.core.outer import OuterConfig
+from repro.core.outer import OuterConfig, StreamSchedule
 from repro.kernels.dispatch import KernelConfig
 from repro.data import LoaderConfig
 from repro.models import model as model_api
@@ -73,18 +73,35 @@ class DistributedTrainer:
     elastic: ElasticContext | None = None  # None: fixed-world (no churn support)
 
     def __post_init__(self):
-        if self.elastic is not None:
-            if self.elastic.world != self.plan.replicas:
-                raise ValueError(
-                    f"elastic world {self.elastic.world} != plan replicas "
-                    f"{self.plan.replicas}"
-                )
-            if self.comm_cfg.overlap:
-                raise ValueError(
-                    "elastic membership does not support the φ-prefetch overlap "
-                    "(the pre-send pairing would be invalidated by churn)"
-                )
+        if self.elastic is not None and self.elastic.world != self.plan.replicas:
+            raise ValueError(
+                f"elastic world {self.elastic.world} != plan replicas "
+                f"{self.plan.replicas}"
+            )
+        self.comm_cfg.validate()
+        if self.comm_cfg.streams > 1 and self.outer_cfg.method != "noloco":
+            raise ValueError(
+                "streams > 1 is a noloco-only feature (gossip pairing)"
+            )
+        # streaming outer steps (DESIGN.md §2): staggered per-stream syncs,
+        # engaged for streams > 1 OR the φ-prefetch overlap (streams=1 +
+        # overlap is the legacy §3.2 pre-send expressed as one stream, and —
+        # unlike the retired spelling — it composes with elasticity via the
+        # membership-epoch fallback)
+        self._streaming = self.outer_cfg.method == "noloco" and (
+            self.comm_cfg.streams > 1 or self.comm_cfg.overlap
+        )
+        self._schedule = None
+        self._pre_partner = None
+        self._pre_epoch = None
+        self._stream_cost = None
+        if self._streaming:
+            s = self.comm_cfg.streams
+            self._schedule = StreamSchedule(self.outer_cfg.inner_steps, s)
+            self._pre_partner = np.full((s, self.plan.replicas), -1, np.int64)
+            self._pre_epoch = np.full((s,), -1, np.int64)
         self.recompile_events: list[dict] = []
+        self.stream_events: list[dict] = []
 
     # -- setup -------------------------------------------------------------
 
@@ -107,16 +124,24 @@ class DistributedTrainer:
                 jnp.zeros((self.plan.replicas,), jnp.int32),
                 NamedSharding(self.mesh, P(self.plan.replica_entry)),
             )
+        self._theta_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), theta
+        )
+        partition = None
+        if self._streaming:
+            # the partitioner's midpoint rule is scale-invariant, so the
+            # STACKED struct yields the same leaf->stream assignment the
+            # squeezed per-replica view inside shard_map sees
+            partition = stream_partition(
+                self._theta_struct, self.comm_cfg.streams, fuse=self.comm_cfg.fuse
+            )
         self.pool = steps_lib.OuterProgramPool(
             self.plan, self.mesh, self.bundle.pspecs, self.outer_cfg,
             comm_cfg=self.comm_cfg, kernel_cfg=self.kernel_cfg,
             schedule=self.schedule, pairing_pool=self.pairing_pool,
-            seed=self.seed,
+            seed=self.seed, partition=partition,
         )
         self._bspecs = steps_lib.batch_pspecs(self.plan, batch_example)
-        self._theta_struct = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), theta
-        )
         state = {"theta": theta, "opt": opt, "phi": phi, "delta": delta,
                  "outer_step": step_c, "inner_step": 0}
         if self.comm_cfg.overlap:
@@ -201,25 +226,38 @@ class DistributedTrainer:
         state = dict(state, theta=theta, opt=opt, inner_step=state["inner_step"] + 1)
         return state, metrics
 
+    @staticmethod
+    def _table_of(pairs) -> np.ndarray:
+        """Partner table (dst indexed by src) of an ordered ppermute pair
+        list — the canonical form the consume-vs-fallback check compares."""
+        return np.asarray([d for _, d in pairs], dtype=np.int64)
+
+    def _drain_compiles(self, info, t0: float, outer_index: int) -> None:
+        if info["compiled"]:
+            # first invocation of a fresh program: its wall-clock includes the
+            # lazy XLA compile — the churn-induced stall telemetry measures
+            for ev in self.pool.drain_events():
+                self.recompile_events.append(dict(
+                    ev, wall_s=round(time.time() - t0, 4),
+                    outer_index=outer_index,
+                ))
+
     def maybe_outer_step(self, state):
+        if self._streaming:
+            return self._maybe_stream_sync(state)
         if state["inner_step"] % self.outer_cfg.inner_steps:
             return state, False
         outer_index = state["inner_step"] // self.outer_cfg.inner_steps - 1
         if self.elastic is None:
-            fn, info = self.pool.program(
-                outer_index, overlap_next=self.comm_cfg.overlap
-            )
+            fn, info = self.pool.program(outer_index)
         else:
             partner_fn = None
             if self.outer_cfg.method == "noloco":
                 # the ppermute pairs ARE the audit table: dst indexed by src
                 def partner_fn(parts):
-                    return np.asarray(
-                        [d for _, d in self.pool.pairs_for(
-                            outer_index, parts, self.elastic.partition
-                        )[1]],
-                        dtype=np.int64,
-                    )
+                    return self._table_of(self.pool.pairs_for(
+                        outer_index, parts, self.elastic.partition
+                    )[1])
 
             plan = self.elastic.plan_round(partner_fn)
             if plan.all_absent:
@@ -230,7 +268,85 @@ class DistributedTrainer:
                 )
         t0 = time.time()
         with compat.set_mesh(self.mesh):
-            if self.comm_cfg.overlap and self.outer_cfg.method == "noloco":
+            theta, phi, delta, step_c = fn(
+                state["theta"], state["phi"], state["delta"], state["outer_step"]
+            )
+            new = dict(state, theta=theta, phi=phi, delta=delta,
+                       outer_step=step_c)
+        self._drain_compiles(info, t0, outer_index)
+        return new, True
+
+    def _maybe_stream_sync(self, state):
+        """One stream's staggered sync on the compiled shard_map path.
+
+        Mirrors the stacked runtime's consume-vs-fallback rule exactly: a
+        prefetched φ is consumed only when the pairing it was pre-sent along
+        still holds (same membership epoch AND the recorded partner table
+        equals this round's actual table) — otherwise that stream alone runs
+        the blocking program variant (a pool LOOKUP, not a recompile of an
+        existing entry); churn never blocks the other streams."""
+        t = state["inner_step"]
+        k = self._schedule.due(t)
+        if k is None:
+            return state, False
+        i = self._schedule.sync_index(k, t)
+        streams = self._schedule.stream_count
+        overlap = self.comm_cfg.overlap
+        epoch = 0 if self.elastic is None else self.elastic.epoch
+        groups = None if self.elastic is None else self.elastic.partition
+
+        participants = None
+        if self.elastic is None:
+            partner_table = self._table_of(self.pool.pairs_for(i)[1])
+        else:
+            def partner_fn(parts):
+                return self._table_of(self.pool.pairs_for(i, parts, groups)[1])
+
+            plan = self.elastic.plan_round(partner_fn)
+            if plan.all_absent:
+                # every live replica timed out: freeze everything, advance the
+                # sync counter (the shared whole-payload all-absent program —
+                # no per-stream variant needed since nothing moves), and
+                # invalidate this stream's prefetch: its pre-send was planned
+                # for THIS sync and none was issued for the next one
+                fn, info = self._all_absent_program(i)
+                t0 = time.time()
+                with compat.set_mesh(self.mesh):
+                    theta, phi, delta, step_c = fn(
+                        state["theta"], state["phi"], state["delta"],
+                        state["outer_step"],
+                    )
+                new = dict(state, theta=theta, phi=phi, delta=delta,
+                           outer_step=step_c)
+                self._drain_compiles(info, t0, i)
+                self._pre_epoch[k] = -1
+                self._record_stream_event(k, i, consume=False,
+                                          had_prefetch=False)
+                return new, True
+            participants = plan.participants
+            partner_table = np.asarray(plan.partner, dtype=np.int64)
+
+        had_prefetch = bool(self._pre_epoch[k] >= 0)
+        consume = bool(
+            overlap and "phi_pre" in state
+            and self._pre_epoch[k] == epoch
+            and np.array_equal(self._pre_partner[k], partner_table)
+        )
+        presend_index = i + streams if overlap else None
+        presend_membership = None if self.elastic is None else self.elastic.membership
+        next_table = None
+        if overlap:
+            next_table = self._table_of(self.pool.pairs_for(
+                presend_index, presend_membership, groups
+            )[1])
+
+        fn, info = self.pool.program(
+            i, participants, groups, stream=k, consume=consume,
+            presend_index=presend_index, presend_membership=presend_membership,
+        )
+        t0 = time.time()
+        with compat.set_mesh(self.mesh):
+            if overlap:
                 theta, phi, delta, phi_pre, step_c = fn(
                     state["theta"], state["phi"], state["delta"],
                     state["phi_pre"], state["outer_step"],
@@ -239,19 +355,45 @@ class DistributedTrainer:
                            phi_pre=phi_pre, outer_step=step_c)
             else:
                 theta, phi, delta, step_c = fn(
-                    state["theta"], state["phi"], state["delta"], state["outer_step"]
+                    state["theta"], state["phi"], state["delta"],
+                    state["outer_step"],
                 )
                 new = dict(state, theta=theta, phi=phi, delta=delta,
                            outer_step=step_c)
-        if info["compiled"]:
-            # first invocation of a fresh program: its wall-clock includes the
-            # lazy XLA compile — the churn-induced stall telemetry measures
-            for ev in self.pool.drain_events():
-                self.recompile_events.append(dict(
-                    ev, wall_s=round(time.time() - t0, 4),
-                    outer_index=outer_index,
-                ))
+        self._drain_compiles(info, t0, i)
+        if overlap:
+            self._pre_partner[k] = next_table
+            self._pre_epoch[k] = epoch
+        self._record_stream_event(k, i, consume=consume,
+                                  had_prefetch=had_prefetch)
         return new, True
+
+    def _record_stream_event(self, k: int, i: int, *, consume: bool,
+                             had_prefetch: bool) -> None:
+        if self._stream_cost is None and self.outer_cfg.method == "noloco":
+            one = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                self._theta_struct,
+            )
+            self._stream_cost = bytes_model.outer_step_cost(
+                one, self.comm_cfg, method="noloco", world=self.plan.replicas
+            )
+        cost = self._stream_cost
+        sc = cost.per_stream[k] if cost and cost.per_stream else None
+        payload = sc.payload_bytes if sc else 0
+        blocking = sc.blocking_bytes if (sc and consume) else payload
+        self.stream_events.append({
+            "stream": k,
+            "offset": self._schedule.offsets[k],
+            "sync_index": i,
+            "payload_bytes": payload,
+            "blocking_bytes": blocking,
+            "overlapped_bytes": payload - blocking,
+            "blocked": not consume,
+            "epoch_fallback": bool(
+                self.comm_cfg.overlap and not consume and had_prefetch
+            ),
+        })
 
     def _all_absent_program(self, outer_index: int):
         """Every live replica timed out: identity pairing + all-frozen mask,
@@ -320,7 +462,11 @@ def main() -> None:
     ap.add_argument("--no-fuse", action="store_true",
                     help="one ppermute per leaf instead of one fused buffer per dtype")
     ap.add_argument("--overlap", action="store_true",
-                    help="§3.2 φ-prefetch: pre-send φ′ along the next pairing")
+                    help="§3.2 φ-prefetch: pre-send φ′ along the next pairing "
+                         "(auto-enabled by --stream-count > 1)")
+    ap.add_argument("--stream-count", type=int, default=1,
+                    help="partition the outer payload into N streams synced "
+                         "on staggered round offsets (streaming outer steps)")
     ap.add_argument("--fault-plan", default=None,
                     help="JSON FaultPlan (repro.sim.faults): run the shard_map "
                          "runtime elastically under churn")
@@ -335,9 +481,10 @@ def main() -> None:
             f"need {args.data * args.model} devices; set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=N"
         )
-    if args.fault_plan and args.overlap:
-        raise SystemExit("--fault-plan and --overlap are mutually exclusive "
-                         "(elastic membership invalidates the pre-send pairing)")
+    # --fault-plan + --overlap now compose: a stream whose pre-send pairing
+    # went stale (membership epoch advanced) falls back to blocking for that
+    # stream only — no hard error anymore
+    overlap = args.overlap or args.stream_count > 1
     mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
     kcfg = kernel_config_from_args(args)
     cfg = registry.get_config(args.arch).reduced(
@@ -362,7 +509,7 @@ def main() -> None:
         outer_cfg=OuterConfig(method="noloco", inner_steps=args.inner_steps),
         inner_cfg=AdamWConfig(lr=args.lr, weight_decay=0.0),
         comm_cfg=CommConfig(codec=args.codec, fuse=not args.no_fuse,
-                            overlap=args.overlap),
+                            overlap=overlap, streams=args.stream_count),
         kernel_cfg=kcfg,
         schedule=args.schedule, pairing_pool=args.pairing_pool, seed=args.seed,
         elastic=elastic,
@@ -395,7 +542,9 @@ def main() -> None:
     pool_stats = trainer.pool.stats()
     out = {
         "arch": cfg.name, "replicas": plan.replicas, "tp": plan.tp,
-        "codec": args.codec, "fuse": not args.no_fuse, "overlap": args.overlap,
+        "codec": args.codec, "fuse": not args.no_fuse, "overlap": overlap,
+        "stream_count": args.stream_count,
+        "blocking_fraction": round(res["blocking_fraction"], 4),
         "final_loss": res["losses"][-1] if res["losses"] else None,
         "final_eval": res["evals"][-1][1] if res["evals"] else None,
         "tokens_per_s": round(res["tokens_per_s"], 1),

@@ -55,6 +55,8 @@ def run_elastic_training(
     log: bool = False,
     log_jsonl: str | None = None,
     codec: str = "none",
+    stream_count: int = 1,
+    overlap: bool | None = None,
     impl: str = "auto",
     interpret: bool | None = None,
     reassign_data: bool = False,
@@ -65,13 +67,23 @@ def run_elastic_training(
 
     ``reassign_data`` redistributes dropped replicas' loader streams over
     survivors (:func:`repro.core.elastic.stream_assignment` — deterministic,
-    resume-safe); the default keeps the seed behavior of skipping them."""
+    resume-safe); the default keeps the seed behavior of skipping them.
+
+    ``stream_count`` partitions the outer payload into staggered streams
+    (streaming outer steps); ``overlap`` adds the §3.2 φ-prefetch — it
+    defaults ON when ``stream_count > 1`` and composes with churn through
+    the membership-epoch fallback (a stream whose pre-send pairing went
+    stale blocks once; the other streams stay overlapped)."""
+    if overlap is None:
+        overlap = stream_count > 1
     kcfg = KernelConfig(impl=impl, interpret=interpret)
     cfg = dataclasses.replace(cfg, kernels=kcfg)
     tcfg = method_config(
         method, inner_lr=inner_lr, total_steps=total_steps or steps,
         warmup=max((total_steps or steps) // 10, 1), inner_steps=inner_steps,
-        seed=seed, comm=CommConfig(codec=codec), kernels=kcfg,
+        seed=seed,
+        comm=CommConfig(codec=codec, streams=stream_count, overlap=overlap),
+        kernels=kcfg,
     )
     program = GossipProgram(cfg, tcfg, replicas=replicas, seed=seed)
     sim = SimCluster(program, plan, reassign_data=reassign_data)
@@ -110,10 +122,17 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--total-steps", type=int, default=None,
+                    help="LR-schedule horizon (pin it for interrupted runs "
+                         "that will resume; default: --steps)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--inner-steps", type=int, default=5)
     ap.add_argument("--codec", default="none",
                     choices=["none", "fp16", "bf16", "int8"])
+    ap.add_argument("--stream-count", type=int, default=1,
+                    help="streaming outer steps: partition the payload into N "
+                         "streams synced on staggered round offsets "
+                         "(implies the §3.2 overlap when > 1)")
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reassign-data", action="store_true",
@@ -132,10 +151,12 @@ def main() -> None:
     res = run_elastic_training(
         cfg, plan, method=args.method, replicas=args.replicas,
         per_replica_batch=args.batch, seq_len=args.seq, steps=args.steps,
+        total_steps=args.total_steps,
         inner_lr=args.lr, inner_steps=args.inner_steps,
         eval_every=args.eval_every, seed=args.seed,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, resume=args.resume,
         log=True, log_jsonl=args.log_jsonl, codec=args.codec,
+        stream_count=args.stream_count,
         impl=args.impl, interpret=args.interpret,
         reassign_data=args.reassign_data,
     )
@@ -143,6 +164,8 @@ def main() -> None:
         "arch": cfg.name, "method": args.method,
         "fault_events": len(plan.events),
         "outer_syncs": res["outer_syncs"],
+        "stream_count": res.get("stream_count", 1),
+        "blocking_fraction": round(res["blocking_fraction"], 4),
         "membership": res["membership"],
         "final_train_loss": res["losses"][-1] if res["losses"] else None,
         "final_eval": res["evals"][-1][1] if res["evals"] else None,

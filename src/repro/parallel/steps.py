@@ -228,9 +228,12 @@ def build_outer_step(
     *,
     fuse_payload: bool = False,
     comm_cfg: CommConfig | None = None,
-    perm_next: list[tuple[int, int]] | None = None,
     kernel_cfg: KernelConfig | None = None,
     active: Any | None = None,
+    stream: int | None = None,
+    partition: Any | None = None,
+    consume_prefetch: bool = False,
+    perm_presend: list[tuple[int, int]] | None = None,
 ):
     """One outer step over (theta, phi, delta) -> (theta', phi', delta').
 
@@ -241,10 +244,22 @@ def build_outer_step(
     matching statistics without per-step recompilation).
 
     ``comm_cfg`` selects the wire codec / payload fusing (``fuse_payload`` is
-    the legacy switch for ``comm_cfg.fuse``).  With ``perm_next`` the §3.2
-    φ-prefetch overlap is compiled in: the program takes an extra
-    ``phi_prefetched`` input and returns the φ′ pre-send for the NEXT pairing
-    as an extra output — (theta, phi, delta, phi_pre, step) in and out.
+    the legacy switch for ``comm_cfg.fuse``).
+
+    STREAMING (DESIGN.md §2, streaming outer steps): with ``stream`` set, the
+    program syncs ONE stream of ``partition`` (a
+    :class:`~repro.comm.StreamPartition`) via
+    :func:`~repro.core.outer.outer_step_sharded_stream` — only that stream's
+    leaves are exchanged over ``perm``; everything else passes through
+    bit-untouched.  ``consume_prefetch`` compiles the §3.2 φ-prefetch read
+    (block on the Δ permute only) and ``perm_presend`` the φ′ pre-send for
+    the stream's NEXT sync; either one switches the program to the
+    (theta, phi, delta, phi_pre, step)-in-and-out signature, otherwise the
+    legacy (theta, phi, delta, step) signature is kept.  The legacy
+    whole-payload overlap spelling (``perm_next``) was removed: a single
+    stream with ``consume_prefetch`` + ``perm_presend`` is exactly that
+    program, and it now composes with elastic membership (the host falls
+    back per stream when the pre-send pairing's epoch is stale).
 
     ``active`` (optional host-side (world,) bool array) bakes this round's
     PARTICIPANT set into the program (elastic runs; the pairing ``perm``
@@ -253,43 +268,58 @@ def build_outer_step(
     training toward a multi-m Δ — and elastic DiLoCo means over participants
     only.  ``active=None`` (the healthy path) compiles the EXACT program it
     always did, so full membership stays bit-identical to the static
-    schedule.  Programs are keyed per (membership view, pairing slot) by
-    :class:`OuterProgramPool`; this builder never decides who participates."""
+    schedule.  Programs are keyed per (membership view, pairing slot, stream
+    variant) by :class:`OuterProgramPool`; this builder never decides who
+    participates."""
     rep = plan.replica_axes
     rep_entry = plan.replica_entry
     if comm_cfg is None:
         comm_cfg = CommConfig(fuse=fuse_payload)
-    overlapped = perm_next is not None and outer_cfg.method == "noloco"
-    if active is not None and overlapped:
+    streamed = stream is not None
+    if streamed and outer_cfg.method != "noloco":
+        raise ValueError("streamed outer programs are NoLoCo-only")
+    if (consume_prefetch or perm_presend is not None) and not streamed:
         raise ValueError(
-            "elastic membership does not support the φ-prefetch overlap: the "
-            "pre-send pairing would be invalidated by a membership change"
+            "consume_prefetch/perm_presend require a streamed program: the "
+            "legacy whole-payload perm_next overlap was removed — build with "
+            "stream=0 and a single-stream partition instead"
         )
+    prefetching = streamed and (consume_prefetch or perm_presend is not None)
     active_host = None if active is None else np.asarray(active, dtype=bool)
 
     def body(theta_l, phi_l, delta_l, *rest):
         theta = _squeeze_replica(theta_l)
         phi = _squeeze_replica(phi_l)
         delta = _squeeze_replica(delta_l)
-        if overlapped:
-            phi_pre_l, step_l = rest
-            state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
-            new_state, new_theta, phi_pre = outer_lib.outer_step_sharded_overlapped(
-                state, theta, _squeeze_replica(phi_pre_l), outer_cfg,
-                axis_names=rep, perm=perm, perm_next=perm_next, comm_cfg=comm_cfg,
-                kernel_cfg=kernel_cfg,
-            )
-            return (
-                _unsqueeze_replica(new_theta),
-                _unsqueeze_replica(new_state.phi),
-                _unsqueeze_replica(new_state.delta),
-                _unsqueeze_replica(phi_pre),
-                new_state.step.reshape((1,)),
-            )
-        (step_l,) = rest
         flag = None
         if active_host is not None:
             flag = jnp.asarray(active_host)[_local_replica_index(plan, mesh)]
+        if streamed:
+            if prefetching:
+                phi_pre_l, step_l = rest
+                phi_pre = _squeeze_replica(phi_pre_l)
+            else:
+                (step_l,) = rest
+                phi_pre = None
+            state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
+            new_state, new_theta, phi_pre_out = outer_lib.outer_step_sharded_stream(
+                state, theta, outer_cfg, stream=stream, partition=partition,
+                axis_names=rep, perm=perm, phi_pre=phi_pre,
+                consume_prefetch=consume_prefetch, perm_next=perm_presend,
+                comm_cfg=comm_cfg, kernel_cfg=kernel_cfg, active_flag=flag,
+            )
+            out = (
+                _unsqueeze_replica(new_theta),
+                _unsqueeze_replica(new_state.phi),
+                _unsqueeze_replica(new_state.delta),
+            )
+            if prefetching:
+                # no pre-send requested but prefetch consumed: the buffer
+                # passes through so the program signature stays fixed
+                pre = phi_pre_out if phi_pre_out is not None else phi_pre
+                out = out + (_unsqueeze_replica(pre),)
+            return out + (new_state.step.reshape((1,)),)
+        (step_l,) = rest
         state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
         new_state, new_theta = outer_lib.outer_step_sharded(
             state, theta, outer_cfg, axis_names=rep, perm=perm, comm_cfg=comm_cfg,
@@ -314,7 +344,7 @@ def build_outer_step(
             new_state.step.reshape((1,)),
         )
 
-    n_params = 4 if overlapped else 3
+    n_params = 4 if prefetching else 3
     in_specs = (param_specs,) * n_params + (P(rep_entry),)
     out_specs = (param_specs,) * n_params + (P(rep_entry),)
     fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
@@ -355,6 +385,13 @@ class OuterProgramPool:
     Recompiles therefore happen ONLY at membership-view boundaries, at most
     ``max_programs_per_view`` per view, and each one is recorded for the
     engine's ``recompile`` telemetry (:mod:`repro.train.loop`).
+
+    STREAMED pools (constructed with a ``partition``) additionally key each
+    program by (stream, consume-vs-blocking, pre-send pairing): one stream's
+    leaves sync per program call on its staggered round offset, and the
+    elastic epoch-fallback from a consuming program to the blocking variant
+    of the SAME pairing is a pool lookup, not a recompile of an existing
+    entry.
     """
 
     def __init__(
@@ -369,6 +406,7 @@ class OuterProgramPool:
         schedule: str = "random",
         pairing_pool: int = 16,
         seed: int = 0,
+        partition: Any | None = None,  # StreamPartition for streamed programs
     ):
         if schedule not in ("random", "hypercube"):
             raise ValueError(f"unknown pairing schedule: {schedule!r}")
@@ -381,6 +419,7 @@ class OuterProgramPool:
         self.schedule = schedule
         self.pairing_pool = pairing_pool
         self.seed = seed
+        self.partition = partition
         self._programs: dict[Any, Any] = {}
         self.hits = 0
         self.misses = 0
@@ -392,18 +431,24 @@ class OuterProgramPool:
     def max_programs_per_view(self) -> int:
         """Upper bound on compiled programs per membership view.
 
-        With the §3.2 overlap each program is keyed by the (slot, next-slot)
-        PAIR: the random schedule's cycling slots still yield ``pairing_pool``
-        distinct pairs, but the hypercube schedule redraws its dimension
-        order every log2(world) rounds, so pairs range over dims² — the
-        bound must say so (overlap is full-membership-only, so this is the
-        TOTAL program bound there)."""
+        With the §3.2 overlap each program is keyed by the (slot, pre-send
+        slot) PAIR: the random schedule's cycling slots still yield
+        ``pairing_pool`` distinct pairs, but the hypercube schedule redraws
+        its dimension order every log2(world) rounds, so pairs range over
+        dims².  Streamed pools additionally key per stream and per
+        consume-vs-blocking variant (a stream's first sync has no prefetch
+        to consume), scaling the bound by ``streams`` and — under overlap —
+        by 2."""
         world = self.plan.replicas
-        overlap = self.comm_cfg.overlap and self.outer_cfg.method == "noloco"
+        noloco = self.outer_cfg.method == "noloco"
+        overlap = self.comm_cfg.overlap and noloco
+        streams = self.comm_cfg.streams if noloco else 1
         if self.schedule == "hypercube":
             dims = max(int(np.log2(world)), 1)
-            return dims * dims if overlap else dims
-        return self.pairing_pool
+            base = dims * dims if overlap else dims
+        else:
+            base = self.pairing_pool
+        return base * streams * (2 if overlap else 1)
 
     def pool_slot(self, outer_index: int) -> int:
         """The pairing slot of outer round ``outer_index`` — the bounded part
@@ -461,9 +506,23 @@ class OuterProgramPool:
         membership: Membership | None = None,
         groups: Any | None = None,
         *,
-        overlap_next: bool = False,
+        stream: int | None = None,
+        consume: bool = False,
+        presend_index: int | None = None,
+        presend_membership: Membership | None = None,
     ) -> tuple[Any, dict]:
         """Compiled program for round ``outer_index`` under the given view.
+
+        ``stream`` selects the STREAMED program variant (one stream of the
+        pool's :class:`~repro.comm.StreamPartition` synced per call;
+        ``outer_index`` is then the global stream-sync index).  ``consume``
+        compiles the φ-prefetch read; ``presend_index`` adds the φ′ pre-send
+        along the pairing of that FUTURE sync index (drawn against
+        ``presend_membership`` — the full current membership, which may
+        differ from this round's participant view when stragglers sit out).
+        Both signature variants are part of the program key, so the elastic
+        epoch-fallback (consume → blocking for one stream) is a pool lookup,
+        never a rebuild of an existing entry.
 
         Returns ``(fn, info)`` with ``info = {key, slot, view, compiled,
         build_s, pool_size}`` — ``compiled`` marks a pool miss (the caller
@@ -471,15 +530,25 @@ class OuterProgramPool:
         wall-clock; XLA compiles lazily)."""
         slot, perm = self.pairs_for(outer_index, membership, groups)
         view = self.view_key(membership, groups)
-        perm_next = None
         key: Any = (view, slot)
-        if overlap_next and self.outer_cfg.method == "noloco":
-            if view is not None:
+        perm_presend = None
+        presend_key = None
+        if stream is None and (consume or presend_index is not None):
+            raise ValueError(
+                "consume/presend are stream-program options; pass stream="
+            )
+        if presend_index is not None:
+            slot_p, perm_presend = self.pairs_for(
+                presend_index, presend_membership, groups
+            )
+            presend_key = (slot_p, self.view_key(presend_membership, groups))
+        if stream is not None:
+            if self.partition is None:
                 raise ValueError(
-                    "elastic membership does not support the φ-prefetch overlap"
+                    "streamed programs need the pool constructed with a "
+                    "StreamPartition (partition=...)"
                 )
-            slot_next, perm_next = self.pairs_for(outer_index + 1)
-            key = (view, (slot, slot_next))
+            key = (view, slot, "stream", stream, bool(consume), presend_key)
         active = None
         if view is not None:
             # the PARTICIPANT mask is the membership mask alone: an active
@@ -495,13 +564,15 @@ class OuterProgramPool:
             with compat.set_mesh(self.mesh):
                 self._programs[key] = build_outer_step(
                     self.plan, self.mesh, self.param_specs, self.outer_cfg, perm,
-                    comm_cfg=self.comm_cfg, perm_next=perm_next,
-                    kernel_cfg=self.kernel_cfg, active=active,
+                    comm_cfg=self.comm_cfg, kernel_cfg=self.kernel_cfg,
+                    active=active, stream=stream, partition=self.partition,
+                    consume_prefetch=consume, perm_presend=perm_presend,
                 )
             build_s = time.time() - t0
             self.events.append({
                 "slot": str(slot), "view": "full" if view is None else "elastic",
                 "epoch": None if membership is None else membership.epoch,
+                "stream": stream,
                 "build_s": round(build_s, 4), "pool_size": len(self._programs),
             })
         else:

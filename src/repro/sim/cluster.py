@@ -204,6 +204,14 @@ class SimCluster:
         drain = getattr(self.program, "drain_recompile_events", None)
         return [] if drain is None else drain()
 
+    def drain_stream_events(self) -> list[dict]:
+        # NB: with streaming the program syncs ONE stream per due step, so
+        # straggler debts (decremented above per sync) are spent per STREAM
+        # sync, not per full outer cycle — a 1-round straggle misses one
+        # stream's exchange (see DESIGN.md, streaming outer steps)
+        drain = getattr(self.program, "drain_stream_events", None)
+        return [] if drain is None else drain()
+
     def pool_stats(self) -> dict | None:
         stats = getattr(self.program, "pool_stats", None)
         return None if stats is None else stats()

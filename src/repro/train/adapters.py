@@ -34,11 +34,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import CommConfig, bytes_model
+from repro.comm import payload as payload_lib
 from repro.core import metrics as metrics_lib
 from repro.core import pairing as pairing_lib
 from repro.core.elastic import ElasticContext
 from repro.core.noloco import GossipTrainer, TrainState, TrainerConfig
-from repro.core.outer import OuterState
+from repro.core.outer import OuterState, StreamSchedule
 from repro.core.pairing import Membership
 from repro.models import model as model_api
 from repro.models.common import values_of
@@ -170,6 +171,40 @@ class GossipProgram(_ElasticSurface):
         self._inner_jit = jax.jit(self.trainer.inner_step)
         self._eval_jit = jax.jit(self.trainer.eval_loss)
 
+        # streaming outer steps (DESIGN.md §2): staggered per-stream syncs,
+        # engaged for streams > 1 OR the φ-prefetch overlap (streams=1 +
+        # overlap is the legacy §3.2 pre-send expressed as one stream)
+        tcfg.comm.validate()
+        self._streaming = tcfg.outer.method == "noloco" and (
+            tcfg.comm.streams > 1 or tcfg.comm.overlap
+        )
+        if tcfg.comm.streams > 1 and tcfg.outer.method != "noloco":
+            raise ValueError("streams > 1 is a noloco-only feature (gossip pairing)")
+        self._schedule = None
+        self._partition = None
+        self._stream_events: list[dict] = []
+        self._phi_pre = None
+        self._pre_partner = None
+        self._pre_epoch = None
+        self._stream_cost = None
+        if self._streaming:
+            s = tcfg.comm.streams
+            self._schedule = StreamSchedule(tcfg.outer.inner_steps, s)
+            one = jax.eval_shape(
+                lambda: values_of(
+                    model_api.init_params(jax.random.PRNGKey(seed), cfg)
+                )
+            )
+            stacked = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((replicas,) + x.shape, x.dtype),
+                one,
+            )
+            self._partition = payload_lib.stream_partition(
+                stacked, s, fuse=tcfg.comm.fuse
+            )
+            self._pre_partner = np.full((s, replicas), -1, dtype=np.int64)
+            self._pre_epoch = np.full((s,), -1, dtype=np.int64)
+
     # -- elastic runtime hooks (SimCluster drives these) ---------------------
 
     def inner_step_index(self, state: TrainState) -> int:
@@ -179,6 +214,8 @@ class GossipProgram(_ElasticSurface):
         return int(state.outer.step)
 
     def sync_due(self, state: TrainState) -> bool:
+        if self._streaming:
+            return self._schedule.due(int(state.inner_step)) is not None
         return self.trainer.should_sync(state)
 
     def warm_start(self, state: TrainState, replica: int, source: int) -> TrainState:
@@ -240,6 +277,8 @@ class GossipProgram(_ElasticSurface):
         return state, metrics
 
     def maybe_outer_step(self, state):
+        if self._streaming:
+            return self._maybe_stream_sync(state)
         if not self.trainer.should_sync(state):
             return state, False
         partner_fn = None
@@ -257,6 +296,86 @@ class GossipProgram(_ElasticSurface):
         active = None if plan.active is None else jnp.asarray(plan.active)
         return self.trainer.outer_step(state, partner=partner, active=active), True
 
+    def _maybe_stream_sync(self, state):
+        """One stream's staggered sync (DESIGN.md §2, streaming outer steps).
+
+        The global sync index ``i`` — the count of stream syncs so far, which
+        ``OuterState.step`` tracks — is the gossip pairing key; stream ``k``'s
+        next sync is ``i + streams``, the key its φ′ pre-send travels on.  A
+        prefetched φ is consumed only when the pairing it was sent along still
+        holds (same membership epoch AND the recorded partner table equals
+        this round's actual table); otherwise that stream alone falls back to
+        the blocking (Δ, φ) exchange — churn never blocks the other streams.
+        """
+        t = int(state.inner_step)
+        k = self._schedule.due(t)
+        if k is None:
+            return state, False
+        i = self._schedule.sync_index(k, t)
+        streams = self._schedule.stream_count
+        seed = self.tcfg.outer.seed
+        overlap = self.tcfg.comm.overlap
+
+        def partner_fn(parts):
+            return pairing_lib.elastic_partner_table(
+                i, parts, seed=seed, groups=self.elastic.partition
+            )
+
+        plan = self.elastic.plan_round(partner_fn)
+        partner = jnp.asarray(plan.partner)
+        active = None if plan.active is None else jnp.asarray(plan.active)
+
+        had_prefetch = self._pre_epoch[k] >= 0
+        consume = bool(
+            overlap
+            and self._phi_pre is not None
+            and self._pre_epoch[k] == self.elastic.epoch
+            and np.array_equal(self._pre_partner[k], np.asarray(plan.partner))
+        )
+        partner_next = None
+        next_table = None
+        if overlap:
+            next_table = pairing_lib.elastic_partner_table(
+                i + streams, self.elastic.membership, seed=seed,
+                groups=self.elastic.partition,
+            )
+            partner_next = jnp.asarray(next_table)
+
+        state, phi_pre_out = self.trainer.outer_step_stream(
+            state, stream=k, partition=self._partition, partner=partner,
+            active=active, phi_pre=self._phi_pre, consume_prefetch=consume,
+            partner_next=partner_next,
+        )
+        if phi_pre_out is not None:
+            self._phi_pre = phi_pre_out
+            self._pre_partner[k] = np.asarray(next_table)
+            self._pre_epoch[k] = self.elastic.epoch
+
+        cost = self._cost_for_streams()
+        sc = cost.per_stream[k] if cost else None
+        payload = sc.payload_bytes if sc else 0
+        blocking = sc.blocking_bytes if (sc and consume) else payload
+        self._stream_events.append({
+            "stream": k,
+            "offset": self._schedule.offsets[k],
+            "sync_index": i,
+            "payload_bytes": payload,
+            "blocking_bytes": blocking,
+            "overlapped_bytes": payload - blocking,
+            "blocked": not consume,
+            "epoch_fallback": bool(overlap and not consume and had_prefetch),
+        })
+        return state, True
+
+    def _cost_for_streams(self):
+        if self._stream_cost is None:
+            self._stream_cost = self.comm_cost()
+        return self._stream_cost
+
+    def drain_stream_events(self) -> list[dict]:
+        events, self._stream_events = self._stream_events, []
+        return events
+
     def eval_step(self, state, batch, rng) -> float:
         losses = self._eval_jit(state.theta, batch, rng)
         return float(jnp.mean(losses[jnp.asarray(self.elastic.active_ids())]))
@@ -271,7 +390,7 @@ class GossipProgram(_ElasticSurface):
         return float(metrics_lib.replica_weight_std(theta))
 
     def state_pytree(self, state: TrainState) -> dict:
-        return {
+        tree = {
             "theta": state.theta,
             "opt": {"mu": state.opt.mu, "nu": state.opt.nu, "count": state.opt.count},
             "outer": {
@@ -282,10 +401,34 @@ class GossipProgram(_ElasticSurface):
             "inner_step": state.inner_step,
             "membership": self.elastic.state_dict(),
         }
+        if self._streaming:
+            # in-flight stream state: the prefetched φ buffer plus the
+            # (pairing, epoch) it was pre-sent along, so a resumed run makes
+            # the same consume-vs-fallback decision at every stream sync
+            stream = {
+                "pre_partner": np.asarray(self._pre_partner),
+                "pre_epoch": np.asarray(self._pre_epoch),
+            }
+            if self._phi_pre is not None:
+                stream["phi_pre"] = self._phi_pre
+            tree["stream"] = stream
+        return tree
 
     def load_state_pytree(self, state: TrainState, tree: dict) -> TrainState:
         if "membership" in tree:
             self.elastic.load_state_dict(tree["membership"])
+        if self._streaming:
+            if "stream" in tree:
+                st = tree["stream"]
+                self._pre_partner = np.asarray(st["pre_partner"]).astype(np.int64)
+                self._pre_epoch = np.asarray(st["pre_epoch"]).astype(np.int64)
+                self._phi_pre = st.get("phi_pre")
+            else:
+                # checkpoint written without streaming: nothing was pre-sent,
+                # so every stream's first sync after resume is a blocking one
+                self._pre_partner = np.full_like(self._pre_partner, -1)
+                self._pre_epoch = np.full_like(self._pre_epoch, -1)
+                self._phi_pre = None
         return TrainState(
             theta=tree["theta"],
             opt=AdamWState(
@@ -344,11 +487,20 @@ class DistributedProgram(_ElasticSurface):
         return int(state["inner_step"])
 
     def outer_round_index(self, state) -> int:
+        if self.trainer._streaming:
+            # streaming: the global sync index of the stream due at this
+            # step (the pairing key the round will use)
+            t = int(state["inner_step"])
+            k = self.trainer._schedule.due(t)
+            if k is not None:
+                return self.trainer._schedule.sync_index(k, t)
         # the stacked runtime reads the outer counter BEFORE the exchange
         # (round labels are 0-indexed); mirror that from the inner counter
         return int(state["inner_step"]) // self.trainer.outer_cfg.inner_steps - 1
 
     def sync_due(self, state) -> bool:
+        if self.trainer._streaming:
+            return self.trainer._schedule.due(int(state["inner_step"])) is not None
         m = self.trainer.outer_cfg.inner_steps
         return state["inner_step"] > 0 and state["inner_step"] % m == 0
 
@@ -360,6 +512,10 @@ class DistributedProgram(_ElasticSurface):
 
     def drain_recompile_events(self) -> list[dict]:
         events, self.trainer.recompile_events = self.trainer.recompile_events, []
+        return events
+
+    def drain_stream_events(self) -> list[dict]:
+        events, self.trainer.stream_events = self.trainer.stream_events, []
         return events
 
     def pool_stats(self) -> dict:
@@ -415,6 +571,15 @@ class DistributedProgram(_ElasticSurface):
         }
         if "phi_pre" in state:
             tree["phi_pre"] = state["phi_pre"]
+        if self.trainer._streaming:
+            # in-flight stream state: the (pairing, epoch) each stream's φ′
+            # was pre-sent along, so a resumed run makes the same
+            # consume-vs-fallback decision at every stream sync (phi_pre
+            # itself rides above as device state)
+            tree["stream"] = {
+                "pre_partner": np.asarray(self.trainer._pre_partner),
+                "pre_epoch": np.asarray(self.trainer._pre_epoch),
+            }
         if self.elastic is not None:
             tree["membership"] = self.elastic.state_dict()
         return tree
@@ -439,6 +604,20 @@ class DistributedProgram(_ElasticSurface):
             ),
             inner_step=int(tree["inner_step"]),
         )
+        if self.trainer._streaming:
+            if "stream" in tree:
+                st = tree["stream"]
+                self.trainer._pre_partner = np.asarray(
+                    st["pre_partner"]).astype(np.int64)
+                self.trainer._pre_epoch = np.asarray(
+                    st["pre_epoch"]).astype(np.int64)
+            else:
+                # checkpoint written without streaming: nothing was pre-sent,
+                # so every stream's first sync after resume blocks once
+                self.trainer._pre_partner = np.full_like(
+                    self.trainer._pre_partner, -1)
+                self.trainer._pre_epoch = np.full_like(
+                    self.trainer._pre_epoch, -1)
         if "phi_pre" in tree:
             new["phi_pre"] = put(tree["phi_pre"], b.theta_shardings)
         elif "phi_pre" in state:

@@ -7,7 +7,9 @@ Owns the runtime-agnostic half of training:
   * comm-bytes accounting from :mod:`repro.comm.bytes_model` (per outer
     sync: payload bytes, blocking bytes, messages),
   * a JSONL telemetry event stream (``run_start`` / ``step`` / ``outer`` /
-    ``eval`` / ``ckpt`` / ``run_end`` events, one JSON object per line),
+    ``stream_sync`` / ``eval`` / ``ckpt`` / ``run_end`` events, one JSON
+    object per line; ``stream_sync`` records each staggered stream exchange —
+    stream id, round offset, bytes, blocked vs overlapped),
   * periodic checkpointing with FULL resume: program state (θ/φ/δ/opt/step
     counters via ``TrainProgram.state_pytree``) plus the loop's own PRNG keys
     and step cursor; the data loader is fast-forwarded deterministically
@@ -189,14 +191,32 @@ class TrainLoop:
             )
             if synced:
                 outer_syncs += 1
-                if cost is not None:
-                    comm_bytes += cost.payload_bytes
-                    blocking_bytes += cost.blocking_bytes
-                self._emit(
-                    "outer", step=t + 1, sync_index=outer_syncs,
-                    payload_bytes=cost.payload_bytes if cost else 0,
-                    blocking_bytes=cost.blocking_bytes if cost else 0,
-                )
+                # streaming programs report the ACTUAL per-stream schedule
+                # (which stream synced, whether its prefetch was consumed or
+                # it fell back to blocking); byte accounting then follows the
+                # events instead of the static whole-payload cost
+                sdrain = getattr(self.program, "drain_stream_events", None)
+                sevents = sdrain() if sdrain is not None else []
+                if sevents:
+                    payload = sum(ev["payload_bytes"] for ev in sevents)
+                    blocking = sum(ev["blocking_bytes"] for ev in sevents)
+                    comm_bytes += payload
+                    blocking_bytes += blocking
+                    for ev in sevents:
+                        self._emit("stream_sync", step=t + 1, **ev)
+                    self._emit(
+                        "outer", step=t + 1, sync_index=outer_syncs,
+                        payload_bytes=payload, blocking_bytes=blocking,
+                    )
+                else:
+                    if cost is not None:
+                        comm_bytes += cost.payload_bytes
+                        blocking_bytes += cost.blocking_bytes
+                    self._emit(
+                        "outer", step=t + 1, sync_index=outer_syncs,
+                        payload_bytes=cost.payload_bytes if cost else 0,
+                        blocking_bytes=cost.blocking_bytes if cost else 0,
+                    )
             if cfg.eval_every and (t + 1) % cfg.eval_every == 0 and self.eval_set:
                 ev = float(np.mean([
                     self.program.eval_step(
@@ -238,6 +258,7 @@ class TrainLoop:
             "final_weight_std": final_std,
             "membership_epoch": last_epoch,
             "recompiles": recompiles,
+            "stream_count": getattr(cost, "stream_count", 1) if cost else 1,
         }
         stats_fn = getattr(self.program, "pool_stats", None)
         pool_stats = stats_fn() if stats_fn is not None else None

@@ -1,0 +1,379 @@
+"""Streaming partial-sync outer steps (DESIGN.md §2).
+
+Covers the stream partitioner (hypothesis property suite), the staggered
+:class:`~repro.core.outer.StreamSchedule`, the bytes-model message schedule
+(blocking vs overlapped splits pinned per codec × fusing × stream count), the
+stacked runtime's parity / churn-fallback / mid-stream-resume behaviour, and —
+in XLA-forced-device subprocesses — the shard_map runtime's streamed program
+pool.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import CommConfig, bytes_model, make_spec, pack, stream_partition
+from repro.comm.payload import unpack_onto
+from repro.core import outer as outer_lib
+from repro.core.outer import StreamSchedule
+from repro.launch.train import run_training
+from repro.models.config import ModelConfig
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+TINY = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                   d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+KW = dict(method="noloco", replicas=4, per_replica_batch=2, seq_len=32,
+          inner_lr=3e-3, inner_steps=4, eval_every=0, total_steps=12)
+
+
+def _tree(sizes, dtypes=None):
+    """Deterministic mixed-shape pytree from a list of leaf sizes."""
+    dtypes = dtypes or ["float32"] * len(sizes)
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for i, (n, dt) in enumerate(zip(sizes, dtypes)):
+        k = jax.random.fold_in(key, i)
+        shape = (n,) if n else ()
+        if jnp.issubdtype(jnp.dtype(dt), jnp.floating):
+            out[f"l{i:02d}"] = jax.random.normal(k, shape).astype(dt)
+        else:
+            out[f"l{i:02d}"] = jnp.arange(max(n, 1), dtype=dt).reshape(shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# StreamSchedule
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_stream0_is_legacy_wall():
+    sched = StreamSchedule(10, 1)
+    fires = [t for t in range(31) if sched.due(t) is not None]
+    assert fires == [10, 20, 30]  # exactly today's t % m == 0, t >= m wall
+    assert sched.sync_index(0, 20) == 1
+
+
+# ---------------------------------------------------------------------------
+# bytes model — the actual message schedule (satellite: blocking accounting)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fuse", [True, False])
+@pytest.mark.parametrize("codec", ["none", "fp16", "int8"])
+@pytest.mark.parametrize("streams", [1, 2, 4])
+@pytest.mark.parametrize("overlap", [False, True])
+def test_bytes_model_stream_schedule_invariants(fuse, codec, streams, overlap):
+    tree = jax.eval_shape(lambda: _tree([64, 8, 256, 16, 32]))
+    cfg = CommConfig(codec=codec, fuse=fuse, streams=streams, overlap=overlap)
+    cost = bytes_model.outer_step_cost(tree, cfg, method="noloco", world=8)
+    assert cost.stream_count == streams
+    assert len(cost.per_stream) == streams
+    # the per-stream schedule sums to the cycle totals
+    assert sum(s.payload_bytes for s in cost.per_stream) == cost.payload_bytes
+    assert sum(s.blocking_bytes for s in cost.per_stream) == cost.blocking_bytes
+    assert cost.overlapped_bytes == cost.payload_bytes - cost.blocking_bytes
+    for s in cost.per_stream:
+        assert s.payload_bytes == s.blocking_bytes + s.overlapped_bytes
+        if overlap:
+            # φ′ pre-sent during inner compute: only Δ_k blocks
+            assert s.blocking_bytes * 2 == s.payload_bytes
+        else:
+            assert s.blocking_bytes == s.payload_bytes
+            assert s.overlapped_bytes == 0
+    # whole-cycle payload doesn't depend on the slicing — EXCEPT int8, whose
+    # wire rounds every buffer up to whole quantization chunks (more buffers
+    # → more chunk padding + per-chunk scales), so there slicing can only
+    # add bytes, never hide them
+    base = bytes_model.outer_step_cost(
+        tree, CommConfig(codec=codec, fuse=fuse), method="noloco", world=8
+    )
+    if codec == "int8":
+        assert cost.payload_bytes >= base.payload_bytes
+    else:
+        assert cost.payload_bytes == base.payload_bytes
+
+
+def test_bytes_model_pinned_values():
+    """Exact byte splits for a known tree: 2 fp32 leaves of 4096 + 64 elems
+    → (Δ, φ) pair payload 33280 B; overlap halves the blocking wall; 4
+    streams slice the wall to the largest stream's Δ."""
+    tree = {
+        "a": jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        "b": jax.ShapeDtypeStruct((64,), jnp.float32),
+    }
+    legacy = bytes_model.outer_step_cost(tree, CommConfig(), method="noloco")
+    assert legacy.payload_bytes == legacy.blocking_bytes == 33280
+    assert legacy.stream_count == 1 and legacy.overlapped_bytes == 0
+
+    ov = bytes_model.outer_step_cost(
+        tree, CommConfig(overlap=True), method="noloco"
+    )
+    assert ov.payload_bytes == 33280
+    assert ov.blocking_bytes == ov.overlapped_bytes == 16640
+
+    s4 = bytes_model.outer_step_cost(
+        tree, CommConfig(streams=4, overlap=True), method="noloco"
+    )
+    assert s4.payload_bytes == 33280 and s4.blocking_bytes == 16640
+    # the per-SYNC wall: the biggest stream blocks on its Δ only
+    assert max(s.blocking_bytes for s in s4.per_stream) == 16384
+    # fp16 halves the wire, int8 quarters it (plus bitcast fp32 scales)
+    fp16 = bytes_model.outer_step_cost(
+        tree, CommConfig(codec="fp16", streams=4, overlap=True), method="noloco"
+    )
+    assert fp16.payload_bytes == 16640 and fp16.blocking_bytes == 8320
+
+
+def test_bytes_model_streams_rejects_diloco_and_bad_config():
+    tree = {"a": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    with pytest.raises(ValueError, match="noloco-only"):
+        bytes_model.outer_step_cost(
+            tree, CommConfig(streams=2), method="diloco", world=4
+        )
+    with pytest.raises(ValueError, match="streams"):
+        CommConfig(streams=0).validate()
+
+
+# ---------------------------------------------------------------------------
+# stacked runtime: parity, telemetry, mid-stream resume, churn fallback
+# ---------------------------------------------------------------------------
+
+
+def test_stream1_overlap_bitwise_matches_legacy():
+    """streams=1 + overlap is the legacy trajectory BIT FOR BIT — the update
+    math is untouched; only when bytes move changes."""
+    base = run_training(TINY, steps=12, **KW)
+    ov = run_training(TINY, steps=12, streams=1, overlap=True, **KW)
+    np.testing.assert_array_equal(
+        np.asarray(base["losses"]), np.asarray(ov["losses"])
+    )
+    assert ov["stream_count"] == 1
+    assert 0.0 < ov["blocking_fraction"] < 1.0  # prefetch consumed after sync 1
+
+
+def test_streams4_staggers_syncs_and_cuts_blocking(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    res = run_training(TINY, steps=16, streams=4, overlap=True,
+                       log_jsonl=path, **KW)
+    assert res["stream_count"] == 4
+    assert res["blocking_fraction"] < 1.0
+    events = [json.loads(l) for l in open(path)]
+    ss = [e for e in events if e["event"] == "stream_sync"]
+    # m=4, S=4 → one stream due at EVERY inner step from t=m on
+    assert [e["stream"] for e in ss[:4]] == [0, 1, 2, 3]
+    assert [e["sync_index"] for e in ss] == list(range(len(ss)))
+    for e in ss:
+        assert e["payload_bytes"] == e["blocking_bytes"] + e["overlapped_bytes"]
+        assert e["blocked"] == (e["blocking_bytes"] == e["payload_bytes"])
+    # first sync of each stream has nothing prefetched → blocks; later ones
+    # consume the φ′ pre-send and block on Δ only
+    assert all(e["blocked"] for e in ss[:4])
+    assert not any(e["blocked"] for e in ss[4:])
+    assert not any(e.get("epoch_fallback") for e in ss)  # healthy run
+
+
+def test_resume_mid_stream_matches_uninterrupted(tmp_path):
+    """Interrupt BETWEEN two stream syncs of the same round (prefetched φ and
+    stream offsets in flight) — the checkpoint must carry them so the resumed
+    trajectory is exact."""
+    kw = dict(KW, streams=4, overlap=True)
+    full = run_training(TINY, steps=12, **kw)
+    d = str(tmp_path / "ckpt")
+    # step 6 with m=4, S=4: streams 0..1 of round 1 synced, 2..3 pending
+    run_training(TINY, steps=6, ckpt_dir=d, **kw)
+    cont = run_training(TINY, steps=12, ckpt_dir=d, resume=True, **kw)
+    assert cont["start_step"] == 6
+    np.testing.assert_array_equal(
+        np.asarray(full["losses"][6:]), np.asarray(cont["losses"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(full["state"].theta)[0]),
+        np.asarray(jax.tree.leaves(cont["state"].theta)[0]),
+    )
+
+
+def test_streamed_churn_converges_with_per_stream_fallback(tmp_path):
+    """Drop/rejoin under streams=4: only streams whose membership epoch
+    advanced mid-flight fall back to blocking (once each), and the final
+    loss stays within 5% of the healthy streamed run."""
+    from repro.launch.train_elastic import run_elastic_training
+    from repro.sim import FaultPlan
+
+    events = [
+        {"kind": "drop", "step": 9, "replicas": [3]},
+        {"kind": "rejoin", "step": 17, "replicas": [3]},
+    ]
+    kw = dict(method="noloco", replicas=8, per_replica_batch=2, seq_len=32,
+              steps=28, inner_steps=4, inner_lr=3e-3, eval_every=28,
+              stream_count=4)
+    path = str(tmp_path / "churn.jsonl")
+    res = run_elastic_training(TINY, FaultPlan.build(events),
+                               log_jsonl=path, **kw)
+    healthy = run_elastic_training(TINY, FaultPlan(), **kw)
+    assert np.isfinite(res["losses"]).all()
+    assert res["blocking_fraction"] < 1.0
+    assert abs(res["evals"][-1][1] - healthy["evals"][-1][1]) <= (
+        0.05 * healthy["evals"][-1][1]
+    )
+    ss = [json.loads(l) for l in open(path)]
+    ss = [e for e in ss if e["event"] == "stream_sync"]
+    fallbacks = [e for e in ss if e.get("epoch_fallback")]
+    # 2 membership changes × at most one fallback per stream each
+    assert 0 < len(fallbacks) <= 2 * 4
+    per_epoch: dict[int, list[int]] = {}
+    for e in fallbacks:
+        per_epoch.setdefault(e["step"] // 8, []).append(e["stream"])
+    for streams in per_epoch.values():
+        assert len(streams) == len(set(streams))  # once per stream at most
+
+
+def test_legacy_sharded_overlapped_is_retired():
+    with pytest.raises(NotImplementedError, match="streams=1, overlap=True"):
+        outer_lib.outer_step_sharded_overlapped()
+
+
+def test_streams_require_noloco():
+    with pytest.raises(ValueError, match="noloco-only"):
+        run_training(TINY, steps=4, method="diloco", replicas=4,
+                     per_replica_batch=2, seq_len=32, inner_steps=4,
+                     streams=2, overlap=True)
+
+
+# ---------------------------------------------------------------------------
+# shard_map runtime (subprocesses on 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+PRELUDE = """
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.comm import CommConfig
+from repro.core.elastic import ElasticContext
+from repro.core.outer import OuterConfig
+from repro.core.pairing import Membership
+from repro.data import LoaderConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train_distributed import DistributedTrainer
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.parallel import plans as PL
+from repro.sim import FaultPlan, SimCluster
+from repro.train import DistributedProgram, LoopConfig, make_loop
+
+CFG = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                  d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+def make_trainer(comm, elastic=None, inner_steps=4, seed=0):
+    mesh = make_test_mesh(8, 1)
+    plan = PL.make_plan("gossip_dp", mesh, shape_kind="train")
+    return DistributedTrainer(
+        cfg=CFG, mesh=mesh, plan=plan,
+        outer_cfg=OuterConfig(method="noloco", inner_steps=inner_steps),
+        inner_cfg=AdamWConfig(lr=3e-3, weight_decay=0.0),
+        comm_cfg=comm, seed=seed, elastic=elastic,
+    )
+
+def make_run(trainer, plan_events, steps, ckpt_dir=None, resume=False,
+             log_jsonl=None):
+    program = DistributedProgram(trainer)
+    sim = None
+    if plan_events is not None:
+        sim = SimCluster(program, FaultPlan.build(plan_events))
+    loop = make_loop(
+        sim or program,
+        LoaderConfig(vocab_size=CFG.vocab_size, seq_len=32,
+                     per_replica_batch=2, replicas=8, seed=0),
+        LoopConfig(steps=steps, eval_every=0, seed=0, ckpt_dir=ckpt_dir,
+                   resume=resume, log_jsonl=log_jsonl),
+    )
+    return loop, sim
+"""
+
+
+@pytest.mark.multidevice
+def test_distributed_stream1_overlap_bitwise_and_streams4_converge():
+    """shard_map runtime: streams=1+overlap reproduces the legacy compiled
+    trajectory bitwise; streams=4 staggers and cuts the blocking fraction."""
+    out = _run(PRELUDE + """
+loop, _ = make_run(make_trainer(CommConfig()), None, 16)
+base = loop.run()
+loop, _ = make_run(make_trainer(CommConfig(overlap=True, streams=1)), None, 16)
+ov1 = loop.run()
+np.testing.assert_array_equal(np.asarray(base["losses"]),
+                              np.asarray(ov1["losses"]))
+t4 = make_trainer(CommConfig(overlap=True, streams=4))
+loop, _ = make_run(t4, None, 16)
+ov4 = loop.run()
+assert np.isfinite(ov4["losses"]).all()
+print(json.dumps({
+    "bf1": ov1["blocking_fraction"], "bf4": ov4["blocking_fraction"],
+    "syncs4": ov4["outer_syncs"], "stream_count": ov4["stream_count"],
+}))
+""")
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert 0.0 < rec["bf1"] < 1.0
+    assert rec["bf4"] < 1.0
+    assert rec["stream_count"] == 4
+    # m=4, S=4, 16 steps → streams fire at t=4..16: far more sync events
+    # than the 3 whole-payload walls the legacy schedule would have hit
+    assert rec["syncs4"] >= 12
+
+
+@pytest.mark.multidevice
+def test_distributed_streamed_churn_fallback_and_mid_stream_resume(tmp_path):
+    """Elastic shard_map + streams=4: churn triggers at most one epoch
+    fallback per stream per membership change, programs come from the pool
+    (bounded misses), and a checkpoint taken BETWEEN stream syncs resumes the
+    exact trajectory (stream offsets + prefetched φ round-trip)."""
+    d = str(tmp_path / "ck")
+    jl = str(tmp_path / "stream_churn.jsonl")  # TrainLoop appends — keep it per-test
+    out = _run(PRELUDE + f"""
+EVENTS = [dict(kind="drop", step=9, replicas=[3]),
+          dict(kind="rejoin", step=21, replicas=[3])]
+def elastic(): return ElasticContext(Membership.full(8))
+t0 = make_trainer(CommConfig(overlap=True, streams=4), elastic=elastic())
+loop, _ = make_run(t0, EVENTS, 32, log_jsonl={jl!r})
+full = loop.run()
+assert np.isfinite(full["losses"]).all()
+evs = [json.loads(l) for l in open({jl!r})]
+ss = [e for e in evs if e["event"] == "stream_sync"]
+fb = [e for e in ss if e.get("epoch_fallback")]
+assert 0 < len(fb) <= 8, fb  # 2 changes x <= 1 per stream
+stats = t0.pool.stats()
+assert stats["misses"] <= stats["max_programs_per_view"] * 3
+
+# exact resume from a checkpoint taken mid-round (stream 1 of round 2 done,
+# streams 2..3 pending, prefetches in flight)
+t1 = make_trainer(CommConfig(overlap=True, streams=4), elastic=elastic())
+loop, _ = make_run(t1, EVENTS, 10, ckpt_dir={d!r})
+loop.run()
+t2 = make_trainer(CommConfig(overlap=True, streams=4), elastic=elastic())
+loop, _ = make_run(t2, EVENTS, 32, ckpt_dir={d!r}, resume=True)
+cont = loop.run()
+assert cont["start_step"] == 10
+np.testing.assert_allclose(np.asarray(full["losses"][10:]),
+                           np.asarray(cont["losses"]), rtol=0, atol=0)
+print("OK", full["blocking_fraction"])
+""")
+    assert "OK" in out

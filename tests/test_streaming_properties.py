@@ -1,0 +1,134 @@
+"""Hypothesis property suite for the stream partitioner and schedule
+(streaming outer steps, DESIGN.md §2).  Skipped when hypothesis is absent —
+same gating as tests/test_properties.py."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import make_spec, pack, stream_partition
+from repro.comm.payload import unpack_onto
+from repro.core.outer import StreamSchedule
+
+
+def _tree(sizes, dtypes=None):
+    """Deterministic mixed-shape pytree from a list of leaf sizes (same
+    helper as tests/test_streaming.py — duplicated, tests aren't a package)."""
+    dtypes = dtypes or ["float32"] * len(sizes)
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for i, (n, dt) in enumerate(zip(sizes, dtypes)):
+        k = jax.random.fold_in(key, i)
+        shape = (n,) if n else ()
+        if jnp.issubdtype(jnp.dtype(dt), jnp.floating):
+            out[f"l{i:02d}"] = jax.random.normal(k, shape).astype(dt)
+        else:
+            out[f"l{i:02d}"] = jnp.arange(max(n, 1), dtype=dt).reshape(shape)
+    return out
+
+
+leaf_sizes = st.lists(st.integers(0, 64), min_size=1, max_size=12)
+
+
+@given(sizes=leaf_sizes, streams=st.integers(1, 8), fuse=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_partition_disjoint_and_exhaustive(sizes, streams, fuse):
+    """Every global leaf lands in exactly one stream, streams are contiguous
+    in flatten order, and the union of per-stream specs is the whole payload."""
+    tree = jax.eval_shape(lambda: _tree(sizes))
+    part = stream_partition(tree, streams, fuse=fuse)
+    assert part.stream_count == streams
+    assert len(part.leaf_stream) == part.num_leaves == len(sizes)
+    # contiguous: leaf→stream is non-decreasing in flatten order
+    assert list(part.leaf_stream) == sorted(part.leaf_stream)
+    covered = [i for k in range(streams) for i in part.leaf_indices(k)]
+    assert sorted(covered) == list(range(len(sizes)))
+    assert len(covered) == len(set(covered))
+    assert part.nbytes == make_spec(tree, fuse=fuse).nbytes
+
+
+@given(sizes=leaf_sizes, streams=st.integers(1, 8), fuse=st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_partition_deterministic(sizes, streams, fuse):
+    """Same (spec, stream_count) → identical partition, call after call."""
+    tree = jax.eval_shape(lambda: _tree(sizes))
+    a = stream_partition(tree, streams, fuse=fuse)
+    b = stream_partition(tree, streams, fuse=fuse)
+    assert a.leaf_stream == b.leaf_stream
+    assert [s.buffers for s in a.specs] == [s.buffers for s in b.specs]
+
+
+@given(sizes=leaf_sizes, fuse=st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_partition_single_stream_is_fused_payload(sizes, fuse):
+    """stream_count=1 reproduces today's whole-payload spec exactly."""
+    tree = jax.eval_shape(lambda: _tree(sizes))
+    part = stream_partition(tree, 1, fuse=fuse)
+    assert part.specs[0].buffers == make_spec(tree, fuse=fuse).buffers
+    assert part.leaf_stream == (0,) * len(sizes)
+
+
+@given(sizes=leaf_sizes, streams=st.integers(1, 6), world=st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_partition_scale_invariant_under_stacking(sizes, streams, world):
+    """Adding a leading replica axis to every leaf (the stacked runtime's
+    layout) scales all midpoints uniformly, so the leaf→stream assignment is
+    unchanged — the invariant that lets the distributed trainer key its
+    partition off the stacked struct."""
+    tree = jax.eval_shape(lambda: _tree(sizes))
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((world,) + s.shape, s.dtype), tree
+    )
+    assert (
+        stream_partition(tree, streams).leaf_stream
+        == stream_partition(stacked, streams).leaf_stream
+    )
+
+
+@given(streams=st.integers(1, 5), fuse=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_stream_pack_unpack_roundtrip_identity(streams, fuse):
+    """Per-stream pack → unpack_onto replaces exactly that stream's leaves
+    (bit-identical) and leaves every other leaf of the base untouched."""
+    sizes = [7, 0, 33, 4, 16, 2]
+    dtypes = ["float32", "float32", "float16", "int32", "float32", "float32"]
+    tree = _tree(sizes, dtypes)
+    base = jax.tree.map(jnp.zeros_like, tree)
+    part = stream_partition(tree, streams, fuse=fuse)
+    leaves = jax.tree.flatten(tree)[0]
+    for k in range(streams):
+        buffers, _ = pack(tree, spec=part.specs[k])
+        merged = unpack_onto(buffers, part.specs[k], base)
+        mleaves = jax.tree.flatten(merged)[0]
+        mine = set(part.leaf_indices(k))
+        for i, (src, got) in enumerate(zip(leaves, mleaves)):
+            want = src if i in mine else jax.tree.flatten(base)[0][i]
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+
+@given(m=st.integers(1, 64), s=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_schedule_offsets_and_sync_indices(m, s):
+    if s > m:
+        with pytest.raises(ValueError):
+            StreamSchedule(m, s)
+        return
+    sched = StreamSchedule(m, s)
+    assert sched.offsets == tuple((k * m) // s for k in range(s))
+    assert len(set(sched.offsets)) == s  # distinct ⇒ ≤1 stream per step
+    # scanning inner steps: each stream fires once per round, global sync
+    # indices come out 0,1,2,... consecutively, and nothing fires in round 0
+    seen = []
+    for t in range(3 * m):
+        k = sched.due(t)
+        if k is not None:
+            assert t >= m
+            seen.append(sched.sync_index(k, t))
+    assert seen == list(range(2 * s))
+
+
