@@ -19,6 +19,7 @@ MODULES = [
     ("table3", "benchmarks.table3_batch_size"),   # Table 3 batch-size ablation
     ("kernels", "benchmarks.kernel_bench"),       # Pallas kernel roofline est.
     ("engine", "benchmarks.engine_bench"),        # TrainLoop throughput -> BENCH_engine.json
+    ("serve", "benchmarks.serve_bench"),          # continuous vs static batching -> BENCH_serve.json
 ]
 
 

@@ -1,47 +1,66 @@
-"""Batched serving example: prefill a prompt batch, then greedy-decode new
-tokens with the KV cache — the ensemble angle: each NoLoCo replica can serve
-its own requests (here: one replica = one model).
+"""Continuous-batching serving example: mixed-length requests through the
+paged-KV engine — the ensemble angle: each NoLoCo replica can serve its own
+requests (here: one replica = one model).
 
     PYTHONPATH=src python examples/serve_decode.py
+    # serve a trained checkpoint with explicit kernel impl:
+    PYTHONPATH=src python examples/serve_decode.py --ckpt /tmp/run_ck --impl jnp
 """
-import sys, os
+import argparse
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.dispatch import KernelConfig
 from repro.models import model as M
 from repro.models.common import values_of
 from repro.models.config import ModelConfig
-from repro.parallel.sharding import ShardCtx
+from repro.serve import Request, ServeConfig, ServeEngine, promote
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", default=None, help="promote a training checkpoint")
+    ap.add_argument("--replica", type=int, default=0)
+    ap.add_argument("--impl", default="auto", choices=["auto", "pallas", "jnp"])
+    args = ap.parse_args()
+
+    kcfg = KernelConfig(impl=args.impl)
     cfg = ModelConfig(
         name="serve-demo", num_layers=2, d_model=96, num_heads=4,
         num_kv_heads=2, d_ff=192, vocab_size=256, dtype="float32", remat=False,
+        kernels=kcfg,
     )
-    ctx = ShardCtx.local()
-    params = values_of(M.init_params(jax.random.PRNGKey(0), cfg))
+    if args.ckpt:
+        params, info = promote(args.ckpt, replica=args.replica)
+        print("promoted:", info)
+    else:
+        params = values_of(M.init_params(jax.random.PRNGKey(0), cfg))
 
-    batch, prompt_len, gen_len, max_len = 4, 12, 20, 64
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len), 0, 256)
+    # Mixed prompt/generation lengths: short requests finish early and their
+    # slots are refilled from the queue while long ones keep decoding.
+    key = jax.random.PRNGKey(1)
+    requests = []
+    for rid, (plen, glen) in enumerate([(12, 20), (4, 6), (24, 12), (7, 20), (3, 9)]):
+        key, sub = jax.random.split(key)
+        prompt = jax.random.randint(sub, (plen,), 0, cfg.vocab_size)
+        requests.append(Request(rid=rid, prompt=[int(t) for t in prompt], max_new=glen))
 
-    caches = values_of(M.init_cache_tree(cfg, batch, max_len))
-    _, caches = M.prefill(params, cfg, {"tokens": prompts}, caches, ctx)
-    decode = jax.jit(lambda p, t, i, c: M.decode_step(p, cfg, t, i, c, ctx))
+    scfg = ServeConfig(max_slots=3, num_pages=64, page_size=8, max_new_cap=20)
+    engine = ServeEngine(params, cfg, scfg)
+    finished = engine.run(requests)
 
-    tok = prompts[:, -1:]
-    outs = []
-    for i in range(gen_len):
-        logits, caches = decode(params, tok, jnp.asarray(prompt_len + i), caches)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        outs.append(tok)
-    gen = jnp.concatenate(outs, axis=1)
-    print("prompts:\n", prompts)
-    print("generation:\n", gen)
-    assert gen.shape == (batch, gen_len)
-    print("OK: batched prefill+decode served", batch, "requests")
+    for f in sorted(finished, key=lambda f: f.rid):
+        print(f"request {f.rid}: prompt_len={len(f.prompt)} -> {f.tokens}")
+    total = sum(len(f.tokens) for f in finished)
+    assert len(finished) == len(requests)
+    assert all(len(f.tokens) == r.max_new for f, r in
+               zip(sorted(finished, key=lambda f: f.rid), requests))
+    print(f"OK: served {len(finished)} requests ({total} tokens) through "
+          f"{scfg.max_slots} slots in {engine.decode_steps} decode steps")
 
 
 if __name__ == "__main__":

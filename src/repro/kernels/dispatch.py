@@ -35,8 +35,10 @@ from typing import Any, Callable, Mapping
 import jax
 
 from repro.kernels import ref
+from repro.kernels import decode_update as decode_update_mod
 from repro.kernels import flash_attention as flash_attention_mod
 from repro.kernels import noloco_update as noloco_update_mod
+from repro.kernels import paged_attention as paged_attention_mod
 from repro.kernels import quantize as quantize_mod
 from repro.kernels import rglru_scan as rglru_scan_mod
 from repro.kernels import ssd_scan as ssd_scan_mod
@@ -215,6 +217,36 @@ register(
     pallas_file="kernels/noloco_update.py",
     consumers=(
         "core/outer.py::noloco_momentum_update (via kernels/ops.py::noloco_update_pytree)",
+    ),
+)
+
+register(
+    "paged_attention",
+    pallas=paged_attention_mod.pallas_paged_attention,
+    jnp=ref.jnp_paged_attention,
+    pallas_file="kernels/paged_attention.py",
+    consumers=(
+        "models/attention.py::apply_attention (paged decode, via kernels/ops.py::paged_attention)",
+    ),
+)
+
+register(
+    "rglru_decode",
+    pallas=decode_update_mod.pallas_rglru_decode,
+    jnp=ref.jnp_rglru_decode,
+    pallas_file="kernels/decode_update.py",
+    consumers=(
+        "models/rglru.py::apply_rglru (single-token decode, via kernels/ops.py::rglru_decode)",
+    ),
+)
+
+register(
+    "ssd_decode",
+    pallas=decode_update_mod.pallas_ssd_decode,
+    jnp=ref.jnp_ssd_decode,
+    pallas_file="kernels/decode_update.py",
+    consumers=(
+        "models/ssd.py::ssd_chunked (single-token decode, via kernels/ops.py::ssd_decode)",
     ),
 )
 

@@ -31,6 +31,9 @@ __all__ = [
     "noloco_update_pytree",
     "int8_quantize",
     "int8_dequantize",
+    "paged_attention",
+    "rglru_decode",
+    "ssd_decode",
 ]
 
 
@@ -283,6 +286,82 @@ def noloco_update_pytree(
         jax.tree.unflatten(treedef, new_phi),
         jax.tree.unflatten(treedef, new_delta),
     )
+
+
+# ---------------------------------------------------------------------------
+# Serving decode ops (inference-only: no vjp — they sit outside jax.grad)
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(
+    q: jax.Array,             # (R, H, D) one decode token per request slot
+    k_pages: jax.Array,       # (NP, BS, KV, D) page pool
+    v_pages: jax.Array,       # (NP, BS, KV, D)
+    block_tables: jax.Array,  # (R, MB) int32 page ids per slot
+    positions: jax.Array,     # (R,) int32 current token position per slot
+    *,
+    mode: str = "causal",
+    window: int = 0,
+    config: KernelConfig | None = None,
+) -> jax.Array:
+    """Paged decode attention: K/V gathered through per-slot block tables.
+
+    Masking is positional (key j valid iff j <= positions[r], plus the
+    sliding window for local layers), so trash-page writes and unallocated
+    table entries never contribute.  The Pallas kernel requires H % KV == 0
+    (GQA folding); ragged head counts route to the jnp twin."""
+    impl, interpret = _resolve(config)
+    h, kvh = q.shape[1], k_pages.shape[2]
+    if impl == "pallas" and h % kvh == 0:
+        return dispatch("paged_attention", KernelConfig("pallas", interpret))(
+            q, k_pages, v_pages, block_tables, positions, mode=mode, window=window
+        )
+    return dispatch("paged_attention", KernelConfig("jnp"))(
+        q, k_pages, v_pages, block_tables, positions, mode=mode, window=window
+    )
+
+
+def rglru_decode(
+    h: jax.Array,   # (R, W) recurrent state
+    a: jax.Array,   # (R, W) per-token decay
+    b: jax.Array,   # (R, W) per-token input
+    *,
+    config: KernelConfig | None = None,
+) -> jax.Array:
+    """Single RG-LRU decode step h' = a·h + b across request slots (f32)."""
+    impl, interpret = _resolve(config)
+    if impl == "pallas":
+        return dispatch("rglru_decode", KernelConfig("pallas", interpret))(h, a, b)
+    return dispatch("rglru_decode", KernelConfig("jnp"))(h, a, b)
+
+
+def ssd_decode(
+    state: jax.Array,   # (R, H, P, N) f32 recurrent state
+    dt1: jax.Array,     # (R, H) positive step sizes for this token
+    a: jax.Array,       # (H,) negative decay rates
+    b1: jax.Array,      # (R, N) input projection for this token
+    c1: jax.Array,      # (R, N) output projection for this token
+    x1: jax.Array,      # (R, H, P) conv+silu'd input for this token
+    *,
+    config: KernelConfig | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Single SSD decode step at model layout; returns (state', y).
+
+    state' = exp(dt·a)·state + dt·(x ⊗ B),  y = state'·C — the per-head
+    decay/input are broadcast to channel granularity (H·P) here so the
+    dispatched kernel is a pure fused elementwise + contraction over slots."""
+    impl, interpret = _resolve(config)
+    r, h, p, n = state.shape
+    decay = jnp.repeat(jnp.exp(dt1.astype(jnp.float32) * a[None, :]), p, axis=1)
+    dtx = (dt1.astype(jnp.float32)[..., None] * x1.astype(jnp.float32)).reshape(r, h * p)
+    flat = state.reshape(r, h * p, n)
+    if impl == "pallas":
+        st, y = dispatch("ssd_decode", KernelConfig("pallas", interpret))(
+            flat, decay, dtx, b1, c1
+        )
+    else:
+        st, y = dispatch("ssd_decode", KernelConfig("jnp"))(flat, decay, dtx, b1, c1)
+    return st.reshape(r, h, p, n), y.reshape(r, h, p)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,155 @@
+"""Pallas TPU paged decode attention: one query token per request slot,
+K/V gathered from fixed-size pages through per-request block tables.
+
+This is the serving twin of kernels/flash_attention.py: same online-softmax
+recurrence, but the KV sequence is PHYSICALLY SCATTERED across a page pool
+(NP, BS, KV, D) and addressed logically by ``block_tables (R, MB)``.  The
+tables (plus per-request positions) ride in as SCALAR-PREFETCH operands
+(``pltpu.PrefetchScalarGridSpec``), so each grid step's K/V page index is
+known before the body runs and the DMA fetches exactly one page per step —
+no dense gather of the whole context ever materializes.
+
+Grid: (R, KV, MB) with the block dim innermost and "arbitrary" (sequential)
+so the softmax state lives in VMEM scratch across page iterations.  GQA is
+folded like the flash kernel: the G = H/KV query heads sharing a kv head form
+the q row dim of a (G, D) tile, so K/V stay at kv-head width.
+
+Masking is positional only: key j is valid iff ``j <= positions[r]`` (and
+``j > positions[r] - window`` for sliding-window layers).  Pages past the
+context, unallocated table entries (pointing anywhere) and the trash page are
+all invalid by position, so garbage page contents never reach the softmax.
+Fully-masked pages self-heal exactly as in the flash kernel: their p=1 rows
+are wiped by corr=0 once a finite-max page arrives, and for causal decode
+page 0 is always valid.
+
+VMEM per program: q (G, D) + k/v (BS, D) + acc (G, D) f32 + m/l (G,)
+≈ a few KiB for typical (G ≤ 8, BS ≤ 64, D ≤ 256) — paging keeps the decode
+working set independent of context length.  Validated on CPU with
+interpret=True against ref.jnp_paged_attention; the TPU is the TARGET.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tpu_compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    tables_ref, pos_ref,               # scalar-prefetch: (R, MB), (R,)
+    q_ref, k_ref, v_ref,               # VMEM tiles
+    o_ref,                             # (1, 1, G, D) output tile (revisited)
+    acc_ref, m_ref, l_ref,             # scratch: f32 softmax state
+    *,
+    mode: str,
+    window: int,
+    page_size: int,
+    scale: float,
+):
+    r = pl.program_id(0)
+    bi = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(bi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (BS, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = q @ k.T                                        # (G, BS)
+
+    pos = pos_ref[r]
+    kv_pos = bi * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1
+    )
+    valid = kv_pos <= pos
+    if mode == "local":
+        valid &= kv_pos > pos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(bi == nb - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...][:, None], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "window", "interpret")
+)
+def pallas_paged_attention(
+    q: jax.Array,             # (R, H, D) — one decode token per request slot
+    k_pages: jax.Array,       # (NP, BS, KV, D)
+    v_pages: jax.Array,       # (NP, BS, KV, D)
+    block_tables: jax.Array,  # (R, MB) int32
+    positions: jax.Array,     # (R,) int32
+    *,
+    mode: str = "causal",
+    window: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paged decode attention at model layout — requires H % KV == 0 (the ops
+    wrapper routes non-divisible head counts to the jnp twin)."""
+    r, h, d = q.shape
+    np_, bs, kvh, _ = k_pages.shape
+    mb = block_tables.shape[1]
+    if h % kvh:
+        raise ValueError(
+            f"pallas paged attention needs H % KV == 0, got H={h} KV={kvh}"
+        )
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(r, kvh, g, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(r, kvh, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ri, hi, bi, tbl, pos: (ri, hi, 0, 0)),
+            pl.BlockSpec(
+                (1, bs, 1, d), lambda ri, hi, bi, tbl, pos: (tbl[ri, bi], 0, hi, 0)
+            ),
+            pl.BlockSpec(
+                (1, bs, 1, d), lambda ri, hi, bi, tbl, pos: (tbl[ri, bi], 0, hi, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda ri, hi, bi, tbl, pos: (ri, hi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, mode=mode, window=window, page_size=bs, scale=scale
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), positions.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(r, h, d)

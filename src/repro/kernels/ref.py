@@ -126,6 +126,55 @@ def jnp_flash_attention(
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
 
 
+def jnp_paged_attention(
+    q: jax.Array,             # (R, H, D) — one decode token per request slot
+    k_pages: jax.Array,       # (NP, BS, KV, D) — fixed-size KV pages (last = trash)
+    v_pages: jax.Array,       # (NP, BS, KV, D)
+    block_tables: jax.Array,  # (R, MB) int32 page index per logical block
+    positions: jax.Array,     # (R,) int32 position of the incoming token
+    *,
+    mode: str = "causal",
+    window: int = 0,
+) -> jax.Array:
+    """Decode-step paged attention — the jnp twin of
+    :func:`repro.kernels.paged_attention.pallas_paged_attention`.
+
+    Gathers each request's K/V pages through its block table into a dense
+    (R, MB·BS, KV, D) view and runs one masked softmax per request slot; GQA
+    groups the query heads over their kv head like :func:`jnp_flash_attention`
+    (non-divisible head counts gather-expand, which the Pallas kernel does not
+    support — the ops wrapper falls back here for those).  Valid keys are
+    ``kv_pos <= positions[r]`` (and within ``window`` for local layers) — keys
+    past the request's context, unallocated table entries and the trash page
+    are all masked out by position alone."""
+    r, h, d = q.shape
+    bs, kvh = k_pages.shape[1], k_pages.shape[2]
+    mb = block_tables.shape[1]
+    k = jnp.take(k_pages, block_tables, axis=0)          # (R, MB, BS, KV, D)
+    v = jnp.take(v_pages, block_tables, axis=0)
+    k = k.reshape(r, mb * bs, kvh, d)
+    v = v.reshape(r, mb * bs, kvh, d)
+    if h % kvh:
+        head_map = (jnp.arange(h) * kvh) // h
+        k = jnp.take(k, head_map, axis=2)
+        v = jnp.take(v, head_map, axis=2)
+        kvh = h
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    qg = (q.astype(jnp.float32) * scale).reshape(r, kvh, g, d)
+
+    kv_pos = jnp.arange(mb * bs, dtype=jnp.int32)[None, :]   # (1, T)
+    pos = positions[:, None]                                  # (R, 1)
+    valid = kv_pos <= pos
+    if mode == "local":
+        valid &= kv_pos > pos - window
+    s = jnp.einsum("rkgd,rtkd->rkgt", qg, k.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("rkgt,rtkd->rkgd", p, v.astype(jnp.float32))
+    return out.reshape(r, h, d).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # NoLoCo outer update (Eqs. 2–3 over group means)
 # ---------------------------------------------------------------------------
@@ -243,6 +292,41 @@ def jnp_rglru_scan(a: jax.Array, b: jax.Array) -> jax.Array:
         combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1
     )
     return h
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode state updates (serving hot loop)
+# ---------------------------------------------------------------------------
+
+
+def jnp_rglru_decode(h: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """One RG-LRU decode step  h' = a ⊙ h + b  over (R, W) slot states — the
+    jnp twin of :func:`repro.kernels.decode_update.pallas_rglru_decode`.
+    Returns f32 like the training scan kernel's accumulator."""
+    return a.astype(jnp.float32) * h.astype(jnp.float32) + b.astype(jnp.float32)
+
+
+def jnp_ssd_decode(
+    state: jax.Array,  # (R, H·P, N) f32 slot states, heads folded into rows
+    decay: jax.Array,  # (R, H·P) exp(dt·a) broadcast over P
+    dtx: jax.Array,    # (R, H·P) dt-scaled inputs (dt_h · x_{h,p})
+    b: jax.Array,      # (R, N)
+    c: jax.Array,      # (R, N)
+) -> tuple[jax.Array, jax.Array]:
+    """One SSD decode step over prepared per-slot operands — the jnp twin of
+    :func:`repro.kernels.decode_update.pallas_ssd_decode`:
+
+        state' = decay ⊙ state + dtx ⊗ b;   y = state' · c
+
+    Returns ``(state' (R,H·P,N) f32, y (R,H·P) f32)``.  The model-level
+    reshapes (head/dim folding, decay broadcast) live in
+    :func:`repro.kernels.ops.ssd_decode`."""
+    f = jnp.float32
+    st = state.astype(f) * decay.astype(f)[..., None] + (
+        dtx.astype(f)[..., None] * b.astype(f)[:, None, :]
+    )
+    y = jnp.einsum("rkn,rn->rk", st, c.astype(f))
+    return st, y
 
 
 # ---------------------------------------------------------------------------

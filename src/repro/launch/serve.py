@@ -1,64 +1,182 @@
-"""Serving driver: prefill + batched greedy decode for any --arch (reduced
-variant on CPU; full configs are exercised via the dry-run).
+"""Serving driver: continuous-batching engine over the paged KV cache.
+
+Generates a synthetic mixed-length request load, optionally promotes a
+trained NoLoCo checkpoint (one replica's θ or φ), and serves it through
+:class:`repro.serve.ServeEngine` — request-driven admit/evict scheduling,
+per-request sampling temperatures, dispatched Pallas/jnp decode kernels.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-        --batch 4 --prompt-len 12 --gen 16
+        --requests 8 --max-batch 4 --prompt-lens 4,12 --gen-lens 8,24
+
+    # serve a trained checkpoint (replica 1's outer weights):
+    ... --ckpt /tmp/run_ck --replica 1 --weights phi
+
+JSONL telemetry (--log-jsonl): run_start / admit-free `finish` per request
+(ttft_s, tokens) / run_end (tokens_per_s, p50/p99 latency, parity when
+--verify).  The final line on stdout is the run_end summary JSON.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import registry
+from repro.launch.train import add_engine_flags, kernel_config_from_args
 from repro.models import model as M
 from repro.models.common import values_of
-from repro.parallel.sharding import ShardCtx
+from repro.serve import Request, ServeConfig, ServeEngine, promote
+
+
+def synth_requests(
+    n: int, vocab: int, prompt_lens: list[int], gen_lens: list[int],
+    temps: list[float], seed: int,
+) -> list[Request]:
+    """Synthetic load: prompts/gen budgets cycled from the given buckets so a
+    small ``--requests`` already exercises mixed lengths (the workload where
+    continuous batching beats static batching)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        pl = prompt_lens[i % len(prompt_lens)]
+        gl = gen_lens[i % len(gen_lens)]
+        prompt = rng.integers(0, vocab, size=(pl,)).tolist()
+        reqs.append(
+            Request(rid=i, prompt=[int(t) for t in prompt], max_new=gl,
+                    temperature=temps[i % len(temps)])
+        )
+    return reqs
+
+
+def serve_run(
+    params, cfg, scfg: ServeConfig, requests: list[Request],
+    *, verify: bool = False, log=None,
+) -> dict:
+    """Run one serving load; returns the run_end summary dict."""
+    engine = ServeEngine(params, cfg, scfg)
+    t0 = time.perf_counter()
+    finished = engine.run([dataclasses.replace(r) for r in requests])
+    wall = time.perf_counter() - t0
+    gen_tokens = sum(len(f.tokens) for f in finished)
+    ttfts = sorted(f.ttft_s for f in finished)
+    summary = {
+        "event": "run_end",
+        "policy": scfg.policy,
+        "requests": len(finished),
+        "gen_tokens": gen_tokens,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(gen_tokens / max(wall, 1e-9), 2),
+        "decode_steps": engine.decode_steps,
+        "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
+        "ttft_p99_s": round(float(np.percentile(ttfts, 99)), 4),
+    }
+    if engine.decode_step_times:
+        st = np.asarray(engine.decode_step_times)
+        summary["step_p50_s"] = round(float(np.percentile(st, 50)), 5)
+        summary["step_p99_s"] = round(float(np.percentile(st, 99)), 5)
+    if log:
+        for f in sorted(finished, key=lambda f: f.rid):
+            log({"event": "finish", "rid": f.rid, "prompt_len": len(f.prompt),
+                 "gen_len": len(f.tokens), "ttft_s": round(f.ttft_s, 4),
+                 "tokens": f.tokens})
+    if verify:
+        batched = {f.rid: f.tokens for f in finished}
+        mismatches = 0
+        for r in requests:
+            solo = ServeEngine(params, cfg, scfg)
+            [f] = solo.run([dataclasses.replace(r)])
+            if f.tokens != batched[r.rid]:
+                mismatches += 1
+        summary["verify_requests"] = len(requests)
+        summary["verify_mismatches"] = mismatches
+        summary["parity"] = mismatches == 0
+    return summary
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=12)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots (concurrent requests)")
+    ap.add_argument("--pages", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prompt-lens", default="4,12,24",
+                    help="comma-separated prompt-length buckets, cycled")
+    ap.add_argument("--gen-lens", default="8,16,32",
+                    help="comma-separated generation budgets, cycled")
+    ap.add_argument("--temps", default="0.0",
+                    help="comma-separated sampling temperatures, cycled (0=greedy)")
+    ap.add_argument("--policy", default="continuous", choices=["continuous", "static"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None,
+                    help="promote a training checkpoint from this directory")
+    ap.add_argument("--step", type=int, default=None,
+                    help="checkpoint step (default: latest)")
+    ap.add_argument("--replica", type=int, default=0,
+                    help="which NoLoCo replica to promote")
+    ap.add_argument("--weights", default="theta", choices=["theta", "phi"],
+                    help="promote the inner weights (theta) or outer anchor (phi)")
+    ap.add_argument("--verify", action="store_true",
+                    help="re-decode each request solo and assert exact match")
+    ap.add_argument("--sync-each-step", action="store_true",
+                    help="block per decode step for per-token latency stats")
+    add_engine_flags(ap)
     args = ap.parse_args()
+    kcfg = kernel_config_from_args(args)
 
     cfg = registry.get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(dtype="float32", remat=False)
-    ctx = ShardCtx.local()
-    params = values_of(M.init_params(jax.random.PRNGKey(0), cfg))
+    cfg = dataclasses.replace(cfg, kernels=kcfg)
 
-    b = args.batch
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (b, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.frontend == "audio":
-        batch["encoder_embeds"] = jnp.ones((b, cfg.encoder_seq, cfg.frontend_dim), jnp.float32)
-    if cfg.frontend == "vision":
-        batch["image_embeds"] = jnp.ones((b, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+    promo_info = None
+    if args.ckpt:
+        params, promo_info = promote(
+            args.ckpt, step=args.step, replica=args.replica, source=args.weights
+        )
+        params = jax.tree.map(jax.numpy.asarray, params)
+    else:
+        params = values_of(M.init_params(jax.random.PRNGKey(args.seed), cfg))
 
-    caches = values_of(M.init_cache_tree(cfg, b, args.max_len))
-    _, caches = M.prefill(params, cfg, batch, caches, ctx)
-    decode = jax.jit(lambda p, t, i, c: M.decode_step(p, cfg, t, i, c, ctx))
+    jsonl = open(args.log_jsonl, "a") if args.log_jsonl else None
 
-    tok = batch["tokens"][:, -1:]
-    pos0 = batch["tokens"].shape[1]
-    t0 = time.time()
-    outs = []
-    for i in range(args.gen):
-        logits, caches = decode(params, tok, jnp.asarray(pos0 + i), caches)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        outs.append(tok)
-    gen = jnp.concatenate(outs, axis=1)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} served {b} requests x {args.gen} tokens "
-          f"in {dt:.2f}s ({b*args.gen/dt:.1f} tok/s on CPU)")
-    print(gen)
+    def log(ev: dict) -> None:
+        if jsonl:
+            jsonl.write(json.dumps(ev) + "\n")
+            jsonl.flush()
+
+    prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
+    gen_lens = [int(x) for x in args.gen_lens.split(",")]
+    temps = [float(x) for x in args.temps.split(",")]
+    scfg = ServeConfig(
+        max_slots=args.max_batch, num_pages=args.pages, page_size=args.page_size,
+        max_new_cap=max(gen_lens), policy=args.policy,
+        sync_each_step=args.sync_each_step,
+    )
+    requests = synth_requests(
+        args.requests, cfg.vocab_size, prompt_lens, gen_lens, temps, args.seed
+    )
+    log({"event": "run_start", "arch": cfg.name, "policy": args.policy,
+         "requests": args.requests, "max_batch": args.max_batch,
+         "pages": args.pages, "page_size": args.page_size,
+         "impl": kcfg.resolved_impl(), "promoted": promo_info})
+
+    summary = serve_run(params, cfg, scfg, requests, verify=args.verify, log=log)
+    summary["arch"] = cfg.name
+    summary["impl"] = kcfg.resolved_impl()
+    if promo_info:
+        summary["promoted"] = promo_info
+    log(summary)
+    if jsonl:
+        jsonl.close()
+    print(json.dumps(summary))
 
 
 if __name__ == "__main__":

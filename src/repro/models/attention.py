@@ -183,6 +183,51 @@ class AttnCache:
         )
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedAttnCache:
+    """Serving KV cache: a pool of fixed-size pages shared by all request
+    slots, addressed through the per-slot block tables in :class:`PagedView`.
+
+    ``k_pages``/``v_pages`` are (num_pages + 1, page_size, KV, D); the LAST
+    page is the TRASH page — decode steps of inactive slots redirect their
+    masked writes there, so one fully-batched scatter serves every slot
+    without conditionals and without corrupting live pages.  Trash contents
+    are never read: the positional mask (key pos <= slot pos) rejects any
+    page entry past a request's context, and inactive slots' outputs are
+    discarded by the engine."""
+
+    k_pages: jax.Array
+    v_pages: jax.Array
+
+    @staticmethod
+    def init(cfg, num_pages: int, page_size: int) -> "PagedAttnCache":
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        return PagedAttnCache(
+            k_pages=jnp.zeros((num_pages + 1, page_size, kv, hd), dt),
+            v_pages=jnp.zeros((num_pages + 1, page_size, kv, hd), dt),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedView:
+    """Per-step view of the paged cache, shared by every attention layer
+    (block tables are layer-independent: all layers of one request use the
+    same logical→physical page mapping, each layer owning its own pools).
+
+    ``block_tables`` (R, MB) int32 — physical page id of each slot's logical
+    block (rows beyond a request's allocation may hold stale ids; positional
+    masking makes them unreachable).  ``positions`` (R,) int32 — index of the
+    token being processed this step.  ``active`` (R,) bool — slots currently
+    owning a request; inactive slots write to the trash page."""
+
+    block_tables: jax.Array
+    positions: jax.Array
+    active: jax.Array
+
+
 def _expand_kv(x: jax.Array, head_map: jax.Array) -> jax.Array:
     """Gather the kv head per (local) q head: (B,S,KV,D) -> (B,S,Hl,D)."""
     return jnp.take(x, head_map, axis=2)
@@ -255,6 +300,8 @@ def apply_attention(
     positions: jax.Array | None = None,  # (S,) absolute positions of x
     kv_source: jax.Array | None = None,  # cross-attention encoder states
     cache: AttnCache | None = None,      # prefill (S>1) or decode (S==1)
+    paged: PagedView | None = None,      # serving view (with PagedAttnCache)
+    decode: bool = False,                # paged phase selector
 ) -> tuple[jax.Array, AttnCache | None]:
     """Attention block: projections + (cached) attention + output projection.
 
@@ -309,6 +356,48 @@ def apply_attention(
     shard = ctx.model_index() if tp_h > 1 else jnp.zeros((), jnp.int32)
     global_heads = shard * h_local + jnp.arange(h_local)
     head_map = (global_heads * kv) // h
+
+    # =====================================================================
+    # PAGED serving cache: page-pool scatter + block-table attention
+    # =====================================================================
+    if isinstance(cache, PagedAttnCache):
+        if paged is None:
+            raise ValueError("PagedAttnCache requires a PagedView")
+        if tp_h > 1:
+            raise NotImplementedError(
+                "paged serving assumes unsharded attention heads (tp=1)"
+            )
+        window = cfg.sliding_window or 0
+        trash = cache.k_pages.shape[0] - 1
+        page_size = cache.k_pages.shape[1]
+        mb = paged.block_tables.shape[1]
+        if not decode:
+            # PREFILL (B == 1, canonical positions): attention over the fresh
+            # K/V exactly like the dense prefill, then every prompt token's
+            # K/V scattered into the slot's pages.
+            out = _dispatched_attention(
+                q, k, v, cfg, ctx, tp_h, mode=mode, window=window,
+            )
+            tok = jnp.arange(s, dtype=jnp.int32)
+            pages_idx = paged.block_tables[0, tok // page_size]
+            offs = tok % page_size
+            kp = cache.k_pages.at[pages_idx, offs].set(k[0])
+            vp = cache.v_pages.at[pages_idx, offs].set(v[0])
+            return _out_proj(out, w_o, ctx, tp_h), PagedAttnCache(kp, vp)
+        # DECODE: one token per slot — masked page scatter (inactive slots
+        # redirect to the trash page) + the dispatched paged-attention kernel.
+        pos = paged.positions
+        blk = jnp.clip(pos // page_size, 0, mb - 1)
+        pages_idx = jnp.take_along_axis(paged.block_tables, blk[:, None], axis=1)[:, 0]
+        pages_idx = jnp.where(paged.active, pages_idx, trash)
+        offs = pos % page_size
+        kp = cache.k_pages.at[pages_idx, offs].set(k[:, 0])
+        vp = cache.v_pages.at[pages_idx, offs].set(v[:, 0])
+        out = kernel_ops.paged_attention(
+            q[:, 0], kp, vp, paged.block_tables, pos,
+            mode=mode, window=window, config=cfg.kernels,
+        )[:, None]
+        return _out_proj(out, w_o, ctx, tp_h), PagedAttnCache(kp, vp)
 
     # =====================================================================
     # No cache: plain (training / encoder) attention — dispatched kernels

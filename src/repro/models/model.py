@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tfm
-from repro.models.attention import AttnCache
+from repro.models.attention import AttnCache, PagedAttnCache, PagedView
 from repro.models.common import Param, param, truncated_normal, unzip, values_of
 from repro.models.config import ModelConfig
 from repro.models.layers import (
@@ -278,6 +278,93 @@ def prefill(
     )
     x = apply_norm(params["final_norm"], x)
     return x[:, -1:], new_caches
+
+
+def init_paged_cache_tree(
+    cfg: ModelConfig, num_slots: int, num_pages: int, page_size: int
+) -> dict:
+    """Serving cache tree: paged K/V pools for attention layers (shared
+    across request slots, + trash page), per-slot recurrent state for
+    RG-LRU/SSD layers.  Plain arrays (single-host serving — no shard specs).
+
+    Encoder-decoder and vision-frontend archs are not servable through the
+    paged engine (their prompts are not plain token streams)."""
+    if cfg.is_encoder_decoder or cfg.frontend == "vision":
+        raise ValueError(
+            "paged serving supports decoder-only token models; "
+            f"got frontend={cfg.frontend!r} enc-dec={cfg.is_encoder_decoder}"
+        )
+    period, n_full, rem = tfm.layer_plan(cfg)
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(kind):
+        if kind in ("global", "local"):
+            mixer = PagedAttnCache.init(cfg, num_pages, page_size)
+        elif kind == "rglru":
+            mixer = RGLRUCache.init(cfg, num_slots, cfg.lru_width or cfg.d_model, dt)
+        elif kind == "ssd":
+            mixer = SSDCache.init(cfg, num_slots, d_inner(cfg), num_heads_ssm(cfg), dt)
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        return (mixer, None)
+
+    caches: dict = {"scan": [], "rem": []}
+    for pos, kind in enumerate(period):
+        layers = [one(kind) for _ in range(n_full)]
+        caches["scan"].append(tfm._stack_trees(layers) if n_full else None)
+    for j in range(rem):
+        caches["rem"].append(one(period[j]))
+    return caches
+
+
+def paged_prefill(
+    params: PyTree, cfg: ModelConfig, tokens: jax.Array, caches: PyTree,
+    view: PagedView, ctx: ShardCtx,
+) -> tuple[jax.Array, PyTree]:
+    """Prefill ONE request (tokens (1, S)) into the paged caches.
+
+    ``view.block_tables`` is the single (1, MB) row of the slot being filled;
+    attention scatters every prompt token's K/V into those pages while the
+    attention itself runs over the fresh K/V (dispatched flash kernel,
+    canonical positions).  Recurrent caches in ``caches`` must be batch-1
+    scratch (the engine merges the final states into the slot afterwards).
+    Returns (vocab-LOCAL logits of the last prompt position (1, 1, V/tp),
+    new caches)."""
+    x = embed_tokens(params["embed"], cfg, tokens, ctx)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, new_caches, _ = tfm.apply_stack(
+        params["stack"], cfg, x, ctx, positions=positions,
+        caches=caches, paged=view,
+    )
+    x = apply_norm(params["final_norm"], x)
+    return logits_sharded(params["embed"], cfg, x[:, -1:], ctx), new_caches
+
+
+def paged_decode_step(
+    params: PyTree, cfg: ModelConfig, tokens: jax.Array, caches: PyTree,
+    view: PagedView, ctx: ShardCtx,
+) -> tuple[jax.Array, PyTree]:
+    """One decode step for ALL request slots at once: tokens (R, 1), per-slot
+    positions/activity in ``view``.  Inactive slots compute garbage that goes
+    to the trash page / gets overwritten at admission — no conditionals in
+    the hot path.  Returns (vocab-LOCAL logits (R, 1, V/tp), new caches)."""
+    x = embed_tokens(params["embed"], cfg, tokens, ctx)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if not cfg.use_rope:
+        table = sinusoidal_positions(2**15, cfg.d_model).astype(x.dtype)
+        rows = jnp.take(table, jnp.clip(view.positions, 0, 2**15 - 1), axis=0)
+        x = x + rows[:, None]
+    x, new_caches, _ = tfm.apply_stack(
+        params["stack"], cfg, x, ctx, positions=view.positions[:, None],
+        caches=caches, decode=True, paged=view,
+    )
+    x = apply_norm(params["final_norm"], x)
+    return logits_sharded(params["embed"], cfg, x, ctx), new_caches
 
 
 def decode_step(

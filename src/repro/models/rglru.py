@@ -125,7 +125,8 @@ def apply_rglru(
             RGLRUCache(conv=new_conv, h=h[:, -1]) if cache is not None else None
         )
     else:
-        h_last = a[:, 0] * cache.h + b[:, 0]
+        # dispatched single-step update (serving hot loop)
+        h_last = kernel_ops.rglru_decode(cache.h, a[:, 0], b[:, 0], config=cfg.kernels)
         h = h_last[:, None, :]
         new_cache = RGLRUCache(conv=new_conv, h=h_last)
 

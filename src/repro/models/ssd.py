@@ -158,13 +158,13 @@ def apply_ssd(
             SSDCache(conv=new_conv, state=final_state) if cache is not None else None
         )
     else:
-        # single-token recurrence: h' = exp(dt·a)·h + dt·(B ⊗ x)
-        dt1 = dt[:, 0]                                   # (B,H_l)
-        decay = jnp.exp(dt1 * a[None, :])                # (B,H_l)
-        upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, b_mat[:, 0], u_heads[:, 0])
-        state = cache.state * decay[:, :, None, None] + upd
-        y = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0], state)[:, None]
-        y = y.reshape(bsz, 1, h_local, hd)
+        # single-token recurrence h' = exp(dt·a)·h + dt·(B ⊗ x) — dispatched
+        # fused update (serving hot loop)
+        state, y1 = kernel_ops.ssd_decode(
+            cache.state, dt[:, 0], a, b_mat[:, 0], c_mat[:, 0], u_heads[:, 0],
+            config=cfg.kernels,
+        )
+        y = y1[:, None]                                  # (B,1,H_l,P)
         new_cache = SSDCache(conv=new_conv, state=state)
         final_state = state
 

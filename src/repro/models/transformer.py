@@ -81,6 +81,7 @@ def apply_block(
     cross_cache: AttnCache | None = None,
     enc_out: jax.Array | None = None,
     decode: bool = False,
+    paged: attn_lib.PagedView | None = None,
 ) -> tuple[jax.Array, PyTree | None, jax.Array]:
     """Pre-norm block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -89,7 +90,8 @@ def apply_block(
     if kind in ("global", "local"):
         mode = "local" if kind == "local" else "causal"
         y, new_cache = attn_lib.apply_attention(
-            p["attn"], cfg, h, ctx, mode=mode, positions=positions, cache=cache
+            p["attn"], cfg, h, ctx, mode=mode, positions=positions, cache=cache,
+            paged=paged, decode=decode,
         )
     elif kind == "encoder":  # bidirectional self-attention (whisper encoder)
         y, new_cache = attn_lib.apply_attention(
@@ -181,6 +183,7 @@ def apply_stack(
     enc_out: jax.Array | None = None,
     decode: bool = False,
     kinds: tuple[str, ...] | None = None,
+    paged: attn_lib.PagedView | None = None,
 ) -> tuple[jax.Array, dict | None, jax.Array]:
     """Run all layers. ``caches`` mirrors the params structure:
     {"scan": [stacked cache per position], "rem": [cache per layer]}."""
@@ -206,6 +209,7 @@ def apply_stack(
                     cross_cache=cc,
                     enc_out=enc_out,
                     decode=decode,
+                    paged=paged,  # scan closure constant (shared by layers)
                 )
                 aux_sum = aux_sum + aux
                 new_slices.append(nc)
@@ -235,7 +239,7 @@ def apply_stack(
         x, nc, aux = apply_block(
             params["rem"][j], cfg, x, ctx, kind,
             positions=positions, cache=c0, cross_cache=cc,
-            enc_out=enc_out, decode=decode,
+            enc_out=enc_out, decode=decode, paged=paged,
         )
         aux_total = aux_total + aux
         if new_caches is not None:

@@ -1,0 +1,29 @@
+"""Serving subsystem: continuous batching over a paged KV cache.
+
+The counterpart of :mod:`repro.train` for the inference side of the north
+star — promote one replica of a NoLoCo checkpoint (:func:`promote`) and
+serve it through a request-driven engine (:class:`ServeEngine`) whose decode
+hot loop runs the dispatched Pallas/jnp serving kernels (paged attention,
+RG-LRU/SSD single-token updates) registered in :mod:`repro.kernels.dispatch`.
+"""
+
+from repro.serve.engine import (
+    EngineState,
+    FinishedRequest,
+    Request,
+    ServeConfig,
+    ServeEngine,
+)
+from repro.serve.paged import BlockAllocator
+from repro.serve.promote import promote, resolve_replica
+
+__all__ = [
+    "BlockAllocator",
+    "EngineState",
+    "FinishedRequest",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "promote",
+    "resolve_replica",
+]

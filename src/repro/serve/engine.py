@@ -1,0 +1,383 @@
+"""Continuous-batching inference engine over the paged KV cache.
+
+Scheduler state machine (one host loop around one jitted decode program):
+
+    QUEUED ──admit──► PREFILL ──(same step)──► DECODING ──evict──► FINISHED
+                 ▲                                  │
+                 └────────── pages freed ◄──────────┘
+
+Each :meth:`ServeEngine.step`:
+  1. EVICT — slots whose request hit its token budget are read out (the ONE
+     host sync a request ever costs), their pages returned to the allocator.
+  2. ADMIT (prefill-prioritized) — while a slot and enough pages are free,
+     the next queued request is prefilled into its pages (batch-1, exact
+     prompt length — padding would pollute RG-LRU/SSD states through the
+     gate nonlinearities) and its first token sampled from the prefill
+     logits.  Pages for prompt+max_new are reserved up front, so a running
+     request can never OOM mid-decode.  ``policy="static"`` instead admits
+     only into an all-idle engine — classic static batching, kept as the
+     measured baseline.
+  3. DECODE — one fused, donated, jitted step advances ALL active slots:
+     per-slot positions drive RoPE + the paged-attention mask, per-slot
+     temperatures drive gumbel sampling, sampled tokens land in an on-device
+     output buffer.  Nothing crosses the host boundary per token.
+
+Inactive slots ride along (their writes hit the trash page, their recurrent
+states are overwritten at admission) — the decode program never retraces as
+requests come and go.  Prefill retraces per distinct prompt LENGTH only.
+
+Exactness: with attention/recurrent mixers every slot's row is computed
+independently, and sampling noise is keyed by (request id, output index)
+rather than engine step, so a request decoded in a churning batch produces
+bitwise the tokens of a solo run — greedy or sampled (tested end-to-end).  MoE blocks break this (capacity
+is batch-global); they serve fine but without the exactness guarantee.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.attention import PagedAttnCache, PagedView
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardCtx
+from repro.serve.paged import BlockAllocator
+
+__all__ = ["Request", "FinishedRequest", "ServeConfig", "EngineState", "ServeEngine"]
+
+# Root of every sampling stream; token i of request rid draws its gumbel
+# noise from fold_in(fold_in(_SAMPLE_KEY, rid), i).
+_SAMPLE_KEY = jax.random.PRNGKey(17)
+
+
+@functools.lru_cache(maxsize=None)
+def _programs(cfg: ModelConfig):
+    """Jitted decode/prefill programs for one model config, shared by every
+    engine serving it (ModelConfig is frozen/hashable) — a fresh engine, e.g.
+    a solo-verification run, reuses the already-compiled programs."""
+    ctx = ShardCtx.local()
+
+    def decode_impl(params, state: EngineState) -> EngineState:
+        view = PagedView(state.block_tables, state.positions, state.active)
+        logits, caches = M.paged_decode_step(
+            params, cfg, state.tokens[:, None], state.caches, view, ctx
+        )
+        logits = logits[:, 0]                                   # (R, V)
+        # temperature-t categorical == argmax(logits + t·gumbel); t=0 greedy.
+        # Noise is keyed by (request id, output index), NOT engine step — a
+        # request draws the same sample stream wherever the scheduler puts it,
+        # which is what makes batched sampling match a solo run exactly.
+        keys = jax.vmap(
+            lambda rid, i: jax.random.fold_in(jax.random.fold_in(_SAMPLE_KEY, rid), i)
+        )(state.rids, state.out_len)
+        g = jax.vmap(lambda k: jax.random.gumbel(k, logits.shape[-1:], jnp.float32))(keys)
+        nxt = jnp.argmax(logits + state.temps[:, None] * g, axis=-1).astype(jnp.int32)
+        row = jnp.arange(state.out_buf.shape[0])
+        idx = jnp.clip(state.out_len, 0, state.out_buf.shape[1] - 1)
+        keep = state.out_buf[row, idx]
+        out_buf = state.out_buf.at[row, idx].set(jnp.where(state.active, nxt, keep))
+        act = state.active.astype(jnp.int32)
+        return EngineState(
+            caches=caches,
+            block_tables=state.block_tables,
+            tokens=jnp.where(state.active, nxt, state.tokens),
+            positions=state.positions + act,
+            active=state.active,
+            temps=state.temps,
+            rids=state.rids,
+            out_buf=out_buf,
+            out_len=state.out_len + act,
+        )
+
+    decode = jax.jit(decode_impl, donate_argnums=(1,))
+
+    def prefill_impl(params, tokens, caches, table_row, temp, key):
+        view = PagedView(
+            table_row[None],
+            jnp.zeros((1,), jnp.int32),
+            jnp.ones((1,), bool),
+        )
+        logits, new_caches = M.paged_prefill(params, cfg, tokens[None], caches, view, ctx)
+        g = jax.random.gumbel(key, logits[0, 0].shape, jnp.float32)
+        tok0 = jnp.argmax(logits[0, 0] + temp * g).astype(jnp.int32)
+        return tok0, new_caches
+
+    # one jitted callable; retraces per distinct prompt LENGTH only (exact
+    # lengths — lengths are few under bucketed real workloads)
+    prefill = jax.jit(prefill_impl, donate_argnums=(2,))
+    return decode, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    temperature: float = 0.0
+    submit_t: float = 0.0
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: int
+    prompt: list[int]
+    tokens: list[int]
+    submit_t: float
+    admit_t: float       # prefill completed = first token exists
+    finish_t: float
+
+    @property
+    def ttft_s(self) -> float:
+        return self.admit_t - self.submit_t
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 4          # R: concurrent requests in the decode batch
+    num_pages: int = 128        # KV page pool size (per layer), excl. trash
+    page_size: int = 16         # tokens per page
+    max_new_cap: int = 128      # on-device output buffer width
+    policy: str = "continuous"  # "continuous" | "static" (baseline)
+    sync_each_step: bool = False  # block per decode step (per-token timing)
+
+    def validate(self) -> None:
+        if self.policy not in ("continuous", "static"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if self.max_slots < 1:
+            raise ValueError("need at least one slot")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    """Everything the jitted decode step touches — donated through it."""
+
+    caches: Any               # paged attn pools + per-slot recurrent states
+    block_tables: jax.Array   # (R, MB) int32
+    tokens: jax.Array         # (R,) int32 — token being fed this step
+    positions: jax.Array      # (R,) int32 — its position
+    active: jax.Array         # (R,) bool
+    temps: jax.Array          # (R,) f32 — 0 = greedy
+    rids: jax.Array           # (R,) int32 — request id (seeds its gumbel noise)
+    out_buf: jax.Array        # (R, CAP) int32 — generated tokens, on device
+    out_len: jax.Array        # (R,) int32
+
+
+class ServeEngine:
+    """Request-driven serving engine for one decoder-only model."""
+
+    def __init__(self, params: Any, cfg: ModelConfig, scfg: ServeConfig):
+        scfg.validate()
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.ctx = ShardCtx.local()
+        self.alloc = BlockAllocator(scfg.num_pages, scfg.page_size)
+        r, mb = scfg.max_slots, scfg.num_pages
+        self._mb = mb
+        caches = M.init_paged_cache_tree(cfg, r, scfg.num_pages, scfg.page_size)
+        self.state = EngineState(
+            caches=caches,
+            block_tables=jnp.full((r, mb), self.alloc.trash_page, jnp.int32),
+            tokens=jnp.zeros((r,), jnp.int32),
+            positions=jnp.zeros((r,), jnp.int32),
+            active=jnp.zeros((r,), bool),
+            temps=jnp.zeros((r,), jnp.float32),
+            rids=jnp.zeros((r,), jnp.int32),
+            out_buf=jnp.zeros((r, scfg.max_new_cap), jnp.int32),
+            out_len=jnp.zeros((r,), jnp.int32),
+        )
+        self.queue: list[Request] = []
+        # host mirror of per-slot occupancy: (request, blocks, admit_t, steps)
+        self._slots: list[dict | None] = [None] * r
+        self._decode_fn, self._prefill_fn = _programs(cfg)
+        self.decode_steps = 0
+        self.decode_step_times: list[float] = []
+
+    # -- prefill cache surgery ---------------------------------------------
+
+    def _entry_scratch(self, entry, stacked: bool):
+        """Prefill view of one layer-group cache entry: shared page pools
+        pass through, per-slot recurrent state becomes batch-1 zeros."""
+        mixer, cross = entry
+        if isinstance(mixer, PagedAttnCache):
+            return (mixer, cross)
+        ax = 1 if stacked else 0
+        scratch = jax.tree.map(
+            lambda x: jnp.zeros(x.shape[:ax] + (1,) + x.shape[ax + 1:], x.dtype),
+            mixer,
+        )
+        return (scratch, cross)
+
+    def _entry_merge(self, old, new, stacked: bool, slot: int):
+        mixer_o, _ = old
+        mixer_n, cross = new
+        if isinstance(mixer_o, PagedAttnCache):
+            return (mixer_n, cross)  # pages were written in place
+        if stacked:
+            merged = jax.tree.map(
+                lambda o, n: o.at[:, slot].set(n[:, 0]), mixer_o, mixer_n
+            )
+        else:
+            merged = jax.tree.map(lambda o, n: o.at[slot].set(n[0]), mixer_o, mixer_n)
+        return (merged, cross)
+
+    def _prefill_caches(self, caches):
+        return {
+            "scan": [
+                self._entry_scratch(e, True) if e is not None else None
+                for e in caches["scan"]
+            ],
+            "rem": [self._entry_scratch(e, False) for e in caches["rem"]],
+        }
+
+    def _merge_caches(self, old, new, slot: int):
+        return {
+            "scan": [
+                self._entry_merge(o, n, True, slot) if o is not None else None
+                for o, n in zip(old["scan"], new["scan"])
+            ],
+            "rem": [
+                self._entry_merge(o, n, False, slot)
+                for o, n in zip(old["rem"], new["rem"])
+            ],
+        }
+
+    # -- scheduler ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.max_new > self.scfg.max_new_cap:
+            raise ValueError(
+                f"request {req.rid}: max_new {req.max_new} exceeds engine cap "
+                f"{self.scfg.max_new_cap}"
+            )
+        need = self.alloc.blocks_for(len(req.prompt) + req.max_new)
+        if need > self.alloc.num_pages or need > self._mb:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages; pool holds "
+                f"{self.alloc.num_pages}"
+            )
+        if not req.submit_t:
+            req.submit_t = time.perf_counter()
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _evict_finished(self) -> list[FinishedRequest]:
+        done: list[FinishedRequest] = []
+        out_buf = None
+        for slot, occ in enumerate(self._slots):
+            if occ is None or occ["steps"] < occ["req"].max_new:
+                continue
+            if out_buf is None:  # one device_get serves every eviction this step
+                out_buf = np.asarray(jax.device_get(self.state.out_buf))
+            req: Request = occ["req"]
+            toks = out_buf[slot, : req.max_new].tolist()
+            done.append(
+                FinishedRequest(
+                    rid=req.rid, prompt=req.prompt, tokens=toks,
+                    submit_t=req.submit_t, admit_t=occ["admit_t"],
+                    finish_t=time.perf_counter(),
+                )
+            )
+            self.alloc.free(occ["blocks"])
+            self._slots[slot] = None
+            st = self.state
+            self.state = dataclasses.replace(
+                st,
+                active=st.active.at[slot].set(False),
+                positions=st.positions.at[slot].set(0),
+                tokens=st.tokens.at[slot].set(0),
+                out_len=st.out_len.at[slot].set(0),
+            )
+        return done
+
+    def _admit(self) -> None:
+        if self.scfg.policy == "static" and any(s is not None for s in self._slots):
+            return  # static baseline: wait for the whole batch to drain
+        free = self._free_slots()
+        while self.queue and free:
+            req = self.queue[0]
+            need = self.alloc.blocks_for(len(req.prompt) + req.max_new)
+            if not self.alloc.can_alloc(need):
+                break  # head-of-line blocks until pages free up (no preempt)
+            self.queue.pop(0)
+            slot = free.pop(0)
+            blocks = self.alloc.alloc(need)
+            row = np.full((self._mb,), self.alloc.trash_page, np.int32)
+            row[: len(blocks)] = blocks
+            row_dev = jnp.asarray(row)
+
+            st = self.state
+            # scratch shares the page-pool buffers with st.caches; prefill
+            # donates them and _merge keeps the returned (written) pools
+            scratch = self._prefill_caches(st.caches)
+            key = jax.random.fold_in(jax.random.fold_in(_SAMPLE_KEY, req.rid), 0)
+            tok0, new_caches = self._prefill_fn(
+                self.params,
+                jnp.asarray(req.prompt, jnp.int32),
+                scratch,
+                row_dev,
+                jnp.float32(req.temperature),
+                key,
+            )
+            merged = self._merge_caches(st.caches, new_caches, slot)
+            self.state = dataclasses.replace(
+                st,
+                caches=merged,
+                block_tables=st.block_tables.at[slot].set(row_dev),
+                tokens=st.tokens.at[slot].set(tok0),
+                positions=st.positions.at[slot].set(len(req.prompt)),
+                active=st.active.at[slot].set(True),
+                temps=st.temps.at[slot].set(req.temperature),
+                rids=st.rids.at[slot].set(req.rid),
+                out_buf=st.out_buf.at[slot, 0].set(tok0),
+                out_len=st.out_len.at[slot].set(1),
+            )
+            self._slots[slot] = {
+                "req": req, "blocks": blocks,
+                "admit_t": time.perf_counter(), "steps": 1,
+            }
+
+    def step(self) -> list[FinishedRequest]:
+        """One scheduler tick: evict → admit (prefill) → fused decode step."""
+        done = self._evict_finished()
+        self._admit()
+        if any(s is not None and s["steps"] < s["req"].max_new for s in self._slots):
+            t0 = time.perf_counter()
+            self.state = self._decode_fn(self.params, self.state)
+            if self.scfg.sync_each_step:
+                jax.block_until_ready(self.state.out_len)
+                self.decode_step_times.append(time.perf_counter() - t0)
+            self.decode_steps += 1
+            for occ in self._slots:
+                if occ is not None:
+                    occ["steps"] += 1
+        return done
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self._slots)
+
+    def run(self, requests: list[Request]) -> list[FinishedRequest]:
+        """Serve a batch of requests to completion (submit-all load)."""
+        for r in requests:
+            self.submit(r)
+        finished: list[FinishedRequest] = []
+        guard = 0
+        limit = 10_000 + sum(r.max_new for r in requests) * 4
+        while not self.idle:
+            finished.extend(self.step())
+            guard += 1
+            if guard > limit:  # pragma: no cover
+                raise RuntimeError("serve loop failed to converge")
+        finished.extend(self._evict_finished())
+        return finished

@@ -1,0 +1,62 @@
+"""Host-side page bookkeeping for the paged KV cache.
+
+The device side (models/attention.py: PagedAttnCache / PagedView, the
+dispatched paged-attention kernel) only ever sees page POOLS and block
+TABLES; which physical page backs which request block is decided here, on
+the host, by a free-list allocator.  Pages are identical fixed-size units,
+so allocation is O(1) pops with zero fragmentation — the whole point of
+paging the cache (vLLM, arXiv:2309.06180) versus reserving max-length dense
+rings per slot.
+
+Page id ``num_pages`` (one past the pool) is the TRASH page: never
+allocated, it absorbs the masked writes of inactive slots in the batched
+decode step.  Unused block-table entries also point at it, keeping every
+table entry a valid pool index.
+"""
+
+from __future__ import annotations
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_pages`` fixed-size KV pages."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError(f"need >=1 pages of >=1 tokens, got {num_pages}x{page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list: recently-freed pages are reused first (their cache
+        # lines / HBM pages are hottest)
+        self._free = list(range(num_pages))
+
+    @property
+    def trash_page(self) -> int:
+        return self.num_pages
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` KV entries."""
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    def can_alloc(self, n_blocks: int) -> bool:
+        return n_blocks <= len(self._free)
+
+    def alloc(self, n_blocks: int) -> list[int]:
+        if not self.can_alloc(n_blocks):
+            raise MemoryError(
+                f"paged KV OOM: need {n_blocks} pages, {len(self._free)} free"
+            )
+        taken = self._free[-n_blocks:]
+        del self._free[-n_blocks:]
+        return taken
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if not 0 <= b < self.num_pages:
+                raise ValueError(f"freeing invalid page id {b}")
+            if b in self._free:
+                raise ValueError(f"double free of page {b}")
+        self._free.extend(blocks)

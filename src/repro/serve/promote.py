@@ -1,0 +1,121 @@
+"""Train→serve checkpoint promotion: pull ONE replica's weights out of a
+NoLoCo training checkpoint and hand them to the inference engine.
+
+NoLoCo never fully synchronizes its replicas (paper §1) — a checkpoint holds
+an ENSEMBLE of R distinct weight sets, stacked along a leading replica axis,
+plus each replica's outer anchor φ.  Promotion therefore has to choose:
+
+  * ``replica`` — which ensemble member;
+  * ``source`` — ``"theta"`` (the fast inner weights: freshest, carries the
+    last partial inner loop) or ``"phi"`` (the outer anchor: the smoothed
+    Eq. 2–3 state, what the paper evaluates after averaging).
+
+Elastic runs can checkpoint with replicas dropped from the gossip.  A frozen
+replica's θ stopped moving at its last active round, so promoting it silently
+would serve stale weights — the saved membership mask is validated and a
+frozen/out-of-range choice warns and falls back to the first ACTIVE replica.
+
+Supported layouts (see train/adapters.py state_pytree):
+  * gossip / elastic: {"theta", "outer": {"phi", ...}, "membership", ...}
+  * distributed (shard_map): {"theta", "phi", "delta", ...}
+  * pipeline: {"params": [per-stage], ...} — stage-partitioned, NOT
+    promotable to a single serving model; raises with a pointer.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+__all__ = ["promote", "resolve_replica"]
+
+
+def resolve_replica(membership: dict | None, replica: int, world: int) -> int:
+    """Validate ``replica`` against the checkpoint's membership; warn and
+    fall back to the first active replica when it is frozen or out of range."""
+    mask = None
+    if membership is not None:
+        mask = np.asarray(membership["mask"], dtype=bool)
+        world = int(mask.shape[0])
+    if 0 <= replica < world and (mask is None or mask[replica]):
+        return replica
+    if mask is not None and mask.any():
+        fallback = int(np.flatnonzero(mask)[0])
+        reason = (
+            f"out of range (world={world})"
+            if not 0 <= replica < world
+            else "frozen in the saved membership (dropped from the gossip)"
+        )
+        warnings.warn(
+            f"replica {replica} is {reason}; promoting first active replica "
+            f"{fallback} instead",
+            stacklevel=2,
+        )
+        return fallback
+    if 0 <= replica < world:
+        return replica
+    fallback = 0
+    warnings.warn(
+        f"replica {replica} out of range (world={world}); promoting replica 0",
+        stacklevel=2,
+    )
+    return fallback
+
+
+def promote(
+    ckpt_dir: str,
+    *,
+    step: int | None = None,
+    replica: int = 0,
+    source: str = "theta",
+) -> tuple[Any, dict]:
+    """Load a training checkpoint and extract one replica's serving params.
+
+    Returns ``(params, info)``: a plain value tree matching
+    ``models.model.init_params`` structure, and an info dict with the
+    resolved ``{"step", "replica", "source", "world"}``."""
+    if source not in ("theta", "phi"):
+        raise ValueError(f"source must be 'theta' or 'phi', got {source!r}")
+    if step is None:
+        step = ckpt_lib.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    tree = ckpt_lib.restore(ckpt_dir, step)
+    prog = tree.get("program", tree)
+
+    if "params" in prog and "theta" not in prog:
+        raise ValueError(
+            "pipeline checkpoints hold stage-partitioned params and cannot "
+            "be promoted to a single serving model; re-train with the gossip "
+            "or distributed runtime, or stitch stages offline"
+        )
+    if "theta" not in prog:
+        raise ValueError(
+            f"unrecognized checkpoint layout: keys {sorted(prog)} — expected "
+            "a gossip/distributed training checkpoint"
+        )
+
+    if source == "theta":
+        stacked = prog["theta"]
+    elif "outer" in prog:           # gossip layout
+        stacked = prog["outer"]["phi"]
+    elif "phi" in prog:             # distributed layout
+        stacked = prog["phi"]
+    else:
+        raise ValueError("checkpoint has no outer state; use source='theta'")
+
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        raise ValueError("checkpoint weight tree is empty")
+    world = int(np.asarray(leaves[0]).shape[0])
+    replica = resolve_replica(prog.get("membership"), replica, world)
+
+    params = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[replica]), stacked)
+    info = {"step": int(step), "replica": int(replica), "source": source, "world": world}
+    return params, info

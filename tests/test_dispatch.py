@@ -30,6 +30,9 @@ EXPECTED_OPS = {
     "noloco_update",
     "int8_quantize",
     "int8_dequantize",
+    "paged_attention",
+    "rglru_decode",
+    "ssd_decode",
 }
 
 
