@@ -94,6 +94,53 @@ def main() -> None:
     us4 = _time(fn4, ar, br)
     _record("kernel_rglru_scan_s2048", us4, f"impl={impl};linear_recurrence")
 
+    # -- serving hot-loop ops: R=8 slots, pool 256 pages x 16 tokens --------
+    # These are the per-token ops of the ServeEngine decode step and the
+    # per-chunk op of chunked prefill — the serving-side counterparts of the
+    # training kernels above.
+    r, np_, bs, kvh, hq, d = 8, 256, 16, 2, 8, 128
+    mbk = 64
+    kp = jax.random.normal(jax.random.fold_in(key, 20), (np_ + 1, bs, kvh, d)) * 0.3
+    vp = jax.random.normal(jax.random.fold_in(key, 21), (np_ + 1, bs, kvh, d)) * 0.3
+    tables = jax.random.randint(jax.random.fold_in(key, 22), (r, mbk), 0, np_)
+    pos = jnp.full((r,), mbk * bs // 2, jnp.int32)
+    qd = jax.random.normal(jax.random.fold_in(key, 23), (r, hq, d))
+    fnp = jax.jit(lambda *a: ops.paged_attention(*a, mode="causal"))
+    usp = _time(fnp, qd, kp, vp, tables, pos)
+    read = r * (mbk * bs // 2) * kvh * d * 4 * 2  # K+V f32 up to position
+    _record("kernel_paged_attn_decode_r8", usp,
+            f"impl={impl};kv_bytes={read:.3g};tpu_roofline_us={read / HBM_BW * 1e6:.1f}")
+
+    cch = 32
+    qc = jax.random.normal(jax.random.fold_in(key, 24), (r, cch, hq, d))
+    fnc = jax.jit(lambda *a: ops.paged_chunk_attention(*a, mode="causal"))
+    usc = _time(fnc, qc, kp, vp, tables, pos)
+    _record("kernel_paged_attn_chunk_r8_c32", usc,
+            f"impl={impl};per_token_us={usc / (r * cch):.2f};"
+            f"decode_equiv_us={usp * cch:.1f}")
+
+    w = 2048
+    hr = jax.random.normal(jax.random.fold_in(key, 25), (r, w))
+    ag = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 26), (r, w)))
+    bg = jax.random.normal(jax.random.fold_in(key, 27), (r, w)) * 0.3
+    fnr = jax.jit(lambda *a: ops.rglru_decode(*a))
+    usr = _time(fnr, hr, ag, bg)
+    _record("kernel_rglru_decode_r8_w2048", usr, f"impl={impl};fused_state_update")
+
+    hh, p, nn = 8, 64, 64
+    st = jax.random.normal(jax.random.fold_in(key, 28), (r, hh, p, nn)) * 0.1
+    dt1 = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 29), (r, hh))) * 0.1
+    ad = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 30), (hh,)) * 0.3)
+    b1 = jax.random.normal(jax.random.fold_in(key, 31), (r, nn)) * 0.3
+    c1 = jax.random.normal(jax.random.fold_in(key, 32), (r, nn)) * 0.3
+    x1 = jax.random.normal(jax.random.fold_in(key, 33), (r, hh, p)) * 0.3
+    fns = jax.jit(lambda *a: ops.ssd_decode(*a)[1])
+    uss = _time(fns, st, dt1, ad, b1, c1, x1)
+    sbytes = r * hh * p * nn * 4 * 2  # state read + write dominates
+    _record("kernel_ssd_decode_r8", uss,
+            f"impl={impl};state_bytes={sbytes:.3g};"
+            f"tpu_roofline_us={sbytes / HBM_BW * 1e6:.1f}")
+
     # -- comm codecs: encode+decode round trip of a 16M-element fp32 gossip
     # buffer through the production codec object (int8 runs the dispatched
     # quantize kernels), plus the exact wire-byte reduction.

@@ -1,12 +1,20 @@
-"""Serving benchmark: continuous batching vs the static-batching baseline at
-equal concurrency on a mixed prompt/generation workload, written to
-BENCH_serve.json so the serving perf trajectory is tracked.
+"""Serving benchmark: the fast-path matrix, written to BENCH_serve.json.
 
-Both policies run the SAME engine, model, page pool, and request load — the
-only difference is the admit rule (refill freed slots mid-flight vs drain the
-whole batch first), so the speedup isolates the scheduling win.  Per-token
-decode latency is measured on a separate synced pass (``sync_each_step``
-serializes the host loop, so it is never timed for throughput).
+Four comparisons on one mixed prompt/generation workload:
+
+  * continuous vs static admission (the PR-7 scheduling win, kept as the
+    regression anchor: continuous must not lose its lead);
+  * chunked vs single-shot prefill from COLD jit caches — the compile-zoo
+    comparison: single-shot retraces per distinct prompt length, chunked
+    compiles ONE fixed-width program (the run uses all-distinct lengths to
+    make the zoo explicit);
+  * a concurrency sweep (tok/s + TTFT p50/p99 vs slot count) — how the
+    engine trades time-to-first-token against batch throughput;
+  * speculative decode on vs off, with a depth-truncated draft and the
+    measured acceptance rate.
+
+Per-token decode latency comes from a separate synced pass
+(``sync_each_step`` serializes the host loop, so it is never the timed one).
 """
 import dataclasses
 import json
@@ -20,14 +28,16 @@ from benchmarks.common import emit
 from repro.configs import registry
 from repro.models import model as M
 from repro.models.common import values_of
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine, SpecServeEngine, truncate_layers
+from repro.serve import engine as engine_mod
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
 SLOTS = 4
 PAGES = 96
 PAGE_SIZE = 8
-# mixed lengths: the workload where slot churn matters
+# mixed lengths: the workload where slot churn matters.  All prompt lengths
+# DISTINCT so single-shot prefill pays one retrace per request.
 LOADS = [(4, 8), (12, 24), (8, 12), (20, 6), (6, 24), (10, 8), (16, 16), (3, 12)]
 
 
@@ -39,22 +49,18 @@ def _requests(vocab: int) -> list[Request]:
     ]
 
 
-def _run(params, cfg, policy: str, *, sync: bool = False):
-    scfg = ServeConfig(
-        max_slots=SLOTS, num_pages=PAGES, page_size=PAGE_SIZE,
+def _scfg(policy="continuous", *, slots=SLOTS, chunk=16, budget=0, sync=False):
+    return ServeConfig(
+        max_slots=slots, num_pages=PAGES, page_size=PAGE_SIZE,
         max_new_cap=max(gl for _, gl in LOADS), policy=policy,
-        sync_each_step=sync,
+        sync_each_step=sync, prefill_chunk=chunk, prefill_budget=budget,
     )
-    engine = ServeEngine(params, cfg, scfg)
-    reqs = [dataclasses.replace(r) for r in _requests(cfg.vocab_size)]
-    t0 = time.perf_counter()
-    finished = engine.run(reqs)
-    jax.block_until_ready(engine.state.out_len)
-    wall = time.perf_counter() - t0
+
+
+def _summarize(engine, finished, wall):
     toks = sum(len(f.tokens) for f in finished)
     ttfts = sorted(f.ttft_s for f in finished)
     return {
-        "policy": policy,
         "requests": len(finished),
         "gen_tokens": toks,
         "wall_s": round(wall, 4),
@@ -62,7 +68,35 @@ def _run(params, cfg, policy: str, *, sync: bool = False):
         "decode_steps": engine.decode_steps,
         "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
         "ttft_p99_s": round(float(np.percentile(ttfts, 99)), 4),
-    }, engine
+    }
+
+
+def _run(params, cfg, scfg, *, draft=None, spec_k=4):
+    if draft is not None:
+        engine = SpecServeEngine(params, cfg, scfg, draft[0], draft[1], spec_k=spec_k)
+    else:
+        engine = ServeEngine(params, cfg, scfg)
+    reqs = [dataclasses.replace(r) for r in _requests(cfg.vocab_size)]
+    t0 = time.perf_counter()
+    finished = engine.run(reqs)
+    jax.block_until_ready(engine.state.out_len)
+    wall = time.perf_counter() - t0
+    out = _summarize(engine, finished, wall)
+    out["policy"] = scfg.policy
+    out["prefill_chunk"] = scfg.prefill_chunk
+    if draft is not None:
+        out["spec_k"] = spec_k
+        out["spec_rounds"] = engine.spec_rounds
+        out["accept_rate"] = round(engine.accept_rate, 4)
+    return out, engine
+
+
+def _cold() -> None:
+    """Drop every compiled serving program so the next run pays compiles —
+    how the chunked-vs-single-shot comparison isolates the compile zoo."""
+    engine_mod._programs.cache_clear()
+    engine_mod._chunk_program.cache_clear()
+    jax.clear_caches()
 
 
 def main() -> None:
@@ -71,15 +105,30 @@ def main() -> None:
     )
     params = values_of(M.init_params(jax.random.PRNGKey(0), cfg))
 
-    # warm pass compiles the decode program + the prefill-length buckets so
-    # both timed policies start from the same jit caches
-    _run(params, cfg, "continuous")
-
-    cont, _ = _run(params, cfg, "continuous")
-    stat, _ = _run(params, cfg, "static")
-    # synced pass for per-token latency percentiles (never the timed one)
-    _, synced = _run(params, cfg, "continuous", sync=True)
+    # -- scheduling: continuous vs static (warm caches, like PR 7) ----------
+    _run(params, cfg, _scfg("continuous"))  # warm pass
+    cont, _ = _run(params, cfg, _scfg("continuous"))
+    stat, _ = _run(params, cfg, _scfg("static"))
+    _, synced = _run(params, cfg, _scfg("continuous", sync=True))
     st = np.asarray(synced.decode_step_times)
+
+    # -- prefill: chunked vs single-shot, both from COLD jit caches ---------
+    _cold()
+    single, _ = _run(params, cfg, _scfg("continuous", chunk=0))
+    _cold()
+    chunked, _ = _run(params, cfg, _scfg("continuous", chunk=16))
+
+    # -- concurrency sweep: tok/s and TTFT percentiles vs slot count --------
+    sweep = []
+    for slots in (1, 2, SLOTS):
+        res, _ = _run(params, cfg, _scfg("continuous", slots=slots))
+        res["slots"] = slots
+        sweep.append(res)
+
+    # -- speculative decode: depth-truncated draft of the same weights ------
+    draft = truncate_layers(params, cfg, max(1, cfg.num_layers // 2))
+    _run(params, cfg, _scfg("continuous"), draft=draft)  # warm spec program
+    spec, _ = _run(params, cfg, _scfg("continuous"), draft=draft)
 
     bench = {
         "arch": cfg.name,
@@ -92,6 +141,14 @@ def main() -> None:
         "speedup_tokens_per_s": round(cont["tokens_per_s"] / max(stat["tokens_per_s"], 1e-9), 2),
         "decode_step_p50_s": round(float(np.percentile(st, 50)), 5),
         "decode_step_p99_s": round(float(np.percentile(st, 99)), 5),
+        "prefill_single_shot": single,
+        "prefill_chunked": chunked,
+        "chunked_speedup": round(
+            chunked["tokens_per_s"] / max(single["tokens_per_s"], 1e-9), 2
+        ),
+        "slot_sweep": sweep,
+        "spec": spec,
+        "spec_draft_layers": max(1, cfg.num_layers // 2),
     }
     with open(OUT, "w") as f:
         json.dump(bench, f, indent=2)
@@ -102,6 +159,13 @@ def main() -> None:
     emit("serve_speedup", 0.0,
          f"x{bench['speedup_tokens_per_s']};"
          f"steps={cont['decode_steps']}v{stat['decode_steps']}")
+    emit("serve_chunked_prefill", 0.0,
+         f"x{bench['chunked_speedup']};cold_tok_s="
+         f"{chunked['tokens_per_s']}v{single['tokens_per_s']};"
+         f"ttft_p99={chunked['ttft_p99_s']}v{single['ttft_p99_s']}")
+    emit("serve_spec_decode", 0.0,
+         f"tok_s={spec['tokens_per_s']};accept={spec['accept_rate']};"
+         f"rounds={spec['spec_rounds']}")
 
 
 if __name__ == "__main__":

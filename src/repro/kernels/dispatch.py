@@ -231,6 +231,16 @@ register(
 )
 
 register(
+    "paged_chunk_attention",
+    pallas=paged_attention_mod.pallas_paged_chunk_attention,
+    jnp=ref.jnp_paged_chunk_attention,
+    pallas_file="kernels/paged_attention.py",
+    consumers=(
+        "models/attention.py::apply_attention (chunked paged prefill, via kernels/ops.py::paged_chunk_attention)",
+    ),
+)
+
+register(
     "rglru_decode",
     pallas=decode_update_mod.pallas_rglru_decode,
     jnp=ref.jnp_rglru_decode,

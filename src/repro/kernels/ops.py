@@ -32,6 +32,7 @@ __all__ = [
     "int8_quantize",
     "int8_dequantize",
     "paged_attention",
+    "paged_chunk_attention",
     "rglru_decode",
     "ssd_decode",
 ]
@@ -317,6 +318,35 @@ def paged_attention(
             q, k_pages, v_pages, block_tables, positions, mode=mode, window=window
         )
     return dispatch("paged_attention", KernelConfig("jnp"))(
+        q, k_pages, v_pages, block_tables, positions, mode=mode, window=window
+    )
+
+
+def paged_chunk_attention(
+    q: jax.Array,             # (R, C, H, D) one prefill chunk per request slot
+    k_pages: jax.Array,       # (NP, BS, KV, D) page pool
+    v_pages: jax.Array,       # (NP, BS, KV, D)
+    block_tables: jax.Array,  # (R, MB) int32 page ids per slot
+    positions: jax.Array,     # (R,) int32 base position of chunk token 0
+    *,
+    mode: str = "causal",
+    window: int = 0,
+    config: KernelConfig | None = None,
+) -> jax.Array:
+    """Chunked paged prefill attention: C query tokens per slot against the
+    paged KV pool, chunk token c querying at ``positions[r] + c``.
+
+    Ragged last chunks are handled upstream: tokens past a slot's valid
+    length scatter to the trash page and their output rows are discarded, so
+    ONE fixed-C program covers every prompt-length mix.  The Pallas kernel
+    requires H % KV == 0; ragged head counts route to the jnp twin."""
+    impl, interpret = _resolve(config)
+    h, kvh = q.shape[2], k_pages.shape[2]
+    if impl == "pallas" and h % kvh == 0:
+        return dispatch("paged_chunk_attention", KernelConfig("pallas", interpret))(
+            q, k_pages, v_pages, block_tables, positions, mode=mode, window=window
+        )
+    return dispatch("paged_chunk_attention", KernelConfig("jnp"))(
         q, k_pages, v_pages, block_tables, positions, mode=mode, window=window
     )
 

@@ -175,6 +175,53 @@ def jnp_paged_attention(
     return out.reshape(r, h, d).astype(q.dtype)
 
 
+def jnp_paged_chunk_attention(
+    q: jax.Array,             # (R, C, H, D) — one prefill chunk per slot
+    k_pages: jax.Array,       # (NP, BS, KV, D)
+    v_pages: jax.Array,       # (NP, BS, KV, D)
+    block_tables: jax.Array,  # (R, MB) int32
+    positions: jax.Array,     # (R,) int32 — base position of chunk token 0
+    *,
+    mode: str = "causal",
+    window: int = 0,
+) -> jax.Array:
+    """Chunked paged prefill attention — the jnp twin of
+    :func:`repro.kernels.paged_attention.pallas_paged_chunk_attention`.
+
+    Same dense block-table gather as :func:`jnp_paged_attention`, but with C
+    query tokens per slot: chunk token c of slot r queries at absolute
+    position ``positions[r] + c`` and sees keys ``kv_pos <= positions[r] + c``
+    (windowed for local layers).  Ragged chunks need no extra masking here —
+    rows past the slot's valid length produce garbage that the caller
+    discards, and their K/V were scattered to the trash page."""
+    r, c, h, d = q.shape
+    bs, kvh = k_pages.shape[1], k_pages.shape[2]
+    mb = block_tables.shape[1]
+    k = jnp.take(k_pages, block_tables, axis=0)          # (R, MB, BS, KV, D)
+    v = jnp.take(v_pages, block_tables, axis=0)
+    k = k.reshape(r, mb * bs, kvh, d)
+    v = v.reshape(r, mb * bs, kvh, d)
+    if h % kvh:
+        head_map = (jnp.arange(h) * kvh) // h
+        k = jnp.take(k, head_map, axis=2)
+        v = jnp.take(v, head_map, axis=2)
+        kvh = h
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    qg = (q.astype(jnp.float32) * scale).reshape(r, c, kvh, g, d)
+
+    kv_pos = jnp.arange(mb * bs, dtype=jnp.int32)[None, None, :]      # (1, 1, T)
+    q_pos = positions[:, None, None] + jnp.arange(c, dtype=jnp.int32)[None, :, None]
+    valid = kv_pos <= q_pos                                           # (R, C, T)
+    if mode == "local":
+        valid &= kv_pos > q_pos - window
+    s = jnp.einsum("rckgd,rtkd->rckgt", qg, k.astype(jnp.float32))
+    s = jnp.where(valid[:, :, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("rckgt,rtkd->rckgd", p, v.astype(jnp.float32))
+    return out.reshape(r, c, h, d).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # NoLoCo outer update (Eqs. 2–3 over group means)
 # ---------------------------------------------------------------------------

@@ -2,8 +2,9 @@
 
 Generates a synthetic mixed-length request load, optionally promotes a
 trained NoLoCo checkpoint (one replica's θ or φ), and serves it through
-:class:`repro.serve.ServeEngine` — request-driven admit/evict scheduling,
-per-request sampling temperatures, dispatched Pallas/jnp decode kernels.
+:class:`repro.serve.ServeEngine` — chunked prefill interleaved with decode,
+request-driven admit/evict scheduling, per-request sampling temperatures,
+dispatched Pallas/jnp decode kernels.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --requests 8 --max-batch 4 --prompt-lens 4,12 --gen-lens 8,24
@@ -11,9 +12,14 @@ per-request sampling temperatures, dispatched Pallas/jnp decode kernels.
     # serve a trained checkpoint (replica 1's outer weights):
     ... --ckpt /tmp/run_ck --replica 1 --weights phi
 
-JSONL telemetry (--log-jsonl): run_start / admit-free `finish` per request
-(ttft_s, tokens) / run_end (tokens_per_s, p50/p99 latency, parity when
---verify).  The final line on stdout is the run_end summary JSON.
+    # ensemble speculative decode: replica 2 drafts for replica 1
+    ... --ckpt /tmp/run_ck --replica 1 --spec-decode --draft-replica 2
+
+JSONL telemetry (--log-jsonl): run_start / streamed ``token`` events
+(--stream-every; batched host drains, never per-token syncs) / admit-free
+`finish` per request (ttft_s, tokens, spec stats) / run_end (tokens_per_s,
+p50/p99 latency, acceptance, parity when --verify).  The final stdout line
+is the run_end summary JSON.
 """
 
 from __future__ import annotations
@@ -30,7 +36,14 @@ from repro.configs import registry
 from repro.launch.train import add_engine_flags, kernel_config_from_args
 from repro.models import model as M
 from repro.models.common import values_of
-from repro.serve import Request, ServeConfig, ServeEngine, promote
+from repro.serve import (
+    Request,
+    ServeConfig,
+    ServeEngine,
+    SpecServeEngine,
+    promote,
+    truncate_layers,
+)
 
 
 def synth_requests(
@@ -55,18 +68,35 @@ def synth_requests(
 
 def serve_run(
     params, cfg, scfg: ServeConfig, requests: list[Request],
-    *, verify: bool = False, log=None,
+    *, verify: bool = False, log=None, draft=None, spec_k: int = 4,
+    stream_every: int = 0,
 ) -> dict:
-    """Run one serving load; returns the run_end summary dict."""
-    engine = ServeEngine(params, cfg, scfg)
+    """Run one serving load; returns the run_end summary dict.
+
+    ``draft=(draft_params, draft_cfg)`` switches on speculative decode.
+    ``--verify`` always re-decodes solo on a PLAIN engine, so with spec on it
+    checks the strongest claim: speculative output == target-only output."""
+    if draft is not None:
+        engine = SpecServeEngine(params, cfg, scfg, draft[0], draft[1], spec_k=spec_k)
+    else:
+        engine = ServeEngine(params, cfg, scfg)
+    token_cb = None
+    if log and stream_every:
+        def token_cb(rid, index, token, t):
+            log({"event": "token", "rid": rid, "index": index,
+                 "token": token, "t": round(t, 6)})
     t0 = time.perf_counter()
-    finished = engine.run([dataclasses.replace(r) for r in requests])
+    finished = engine.run(
+        [dataclasses.replace(r) for r in requests],
+        token_cb=token_cb, drain_every=stream_every,
+    )
     wall = time.perf_counter() - t0
     gen_tokens = sum(len(f.tokens) for f in finished)
     ttfts = sorted(f.ttft_s for f in finished)
     summary = {
         "event": "run_end",
         "policy": scfg.policy,
+        "prefill_chunk": scfg.prefill_chunk,
         "requests": len(finished),
         "gen_tokens": gen_tokens,
         "wall_s": round(wall, 4),
@@ -75,15 +105,21 @@ def serve_run(
         "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
         "ttft_p99_s": round(float(np.percentile(ttfts, 99)), 4),
     }
+    if draft is not None:
+        summary["spec_k"] = spec_k
+        summary["spec_rounds"] = engine.spec_rounds
+        summary["accept_rate"] = round(engine.accept_rate, 4)
     if engine.decode_step_times:
         st = np.asarray(engine.decode_step_times)
         summary["step_p50_s"] = round(float(np.percentile(st, 50)), 5)
         summary["step_p99_s"] = round(float(np.percentile(st, 99)), 5)
     if log:
         for f in sorted(finished, key=lambda f: f.rid):
-            log({"event": "finish", "rid": f.rid, "prompt_len": len(f.prompt),
-                 "gen_len": len(f.tokens), "ttft_s": round(f.ttft_s, 4),
-                 "tokens": f.tokens})
+            ev = {"event": "finish", "rid": f.rid, "prompt_len": len(f.prompt),
+                  "gen_len": len(f.tokens), "ttft_s": round(f.ttft_s, 4),
+                  "tokens": f.tokens}
+            ev.update(f.stats)
+            log(ev)
     if verify:
         batched = {f.rid: f.tokens for f in finished}
         mismatches = 0
@@ -127,6 +163,22 @@ def main() -> None:
                     help="re-decode each request solo and assert exact match")
     ap.add_argument("--sync-each-step", action="store_true",
                     help="block per decode step for per-token latency stats")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill width; 0 = single-shot baseline")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prefill tokens per tick (0 = unlimited)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="ensemble speculative decode (draft replica/slice)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative round width (draft steps per round)")
+    ap.add_argument("--draft-replica", type=int, default=None,
+                    help="promote this replica as the draft (needs --ckpt)")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="depth-truncate the target to this many layers as "
+                         "the draft (default: half, when no --draft-replica)")
+    ap.add_argument("--stream-every", type=int, default=0,
+                    help="drain streamed `token` JSONL events every N ticks "
+                         "(0 = tokens only surface at request finish)")
     add_engine_flags(ap)
     args = ap.parse_args()
     kcfg = kernel_config_from_args(args)
@@ -159,16 +211,40 @@ def main() -> None:
         max_slots=args.max_batch, num_pages=args.pages, page_size=args.page_size,
         max_new_cap=max(gen_lens), policy=args.policy,
         sync_each_step=args.sync_each_step,
+        prefill_chunk=args.prefill_chunk, prefill_budget=args.prefill_budget,
     )
+    draft = None
+    draft_info = None
+    if args.spec_decode:
+        if args.draft_replica is not None:
+            if not args.ckpt:
+                ap.error("--draft-replica needs --ckpt")
+            dparams, dinfo = promote(
+                args.ckpt, step=args.step, replica=args.draft_replica,
+                source=args.weights,
+            )
+            draft = (jax.tree.map(jax.numpy.asarray, dparams), cfg)
+            draft_info = {"kind": "replica", **dinfo}
+        else:
+            n = args.draft_layers or max(1, cfg.num_layers // 2)
+            draft = truncate_layers(params, cfg, n)
+            draft_info = {"kind": "truncated", "layers": n}
     requests = synth_requests(
         args.requests, cfg.vocab_size, prompt_lens, gen_lens, temps, args.seed
     )
     log({"event": "run_start", "arch": cfg.name, "policy": args.policy,
          "requests": args.requests, "max_batch": args.max_batch,
          "pages": args.pages, "page_size": args.page_size,
+         "prefill_chunk": args.prefill_chunk,
+         "spec_decode": bool(args.spec_decode), "draft": draft_info,
          "impl": kcfg.resolved_impl(), "promoted": promo_info})
 
-    summary = serve_run(params, cfg, scfg, requests, verify=args.verify, log=log)
+    summary = serve_run(
+        params, cfg, scfg, requests, verify=args.verify, log=log,
+        draft=draft, spec_k=args.spec_k, stream_every=args.stream_every,
+    )
+    if draft_info:
+        summary["draft"] = draft_info
     summary["arch"] = cfg.name
     summary["impl"] = kcfg.resolved_impl()
     if promo_info:

@@ -302,6 +302,8 @@ def apply_attention(
     cache: AttnCache | None = None,      # prefill (S>1) or decode (S==1)
     paged: PagedView | None = None,      # serving view (with PagedAttnCache)
     decode: bool = False,                # paged phase selector
+    chunk_lengths: jax.Array | None = None,  # (R,) valid tokens per chunk row
+    chunk_exact: bool = False,           # per-token decode-bitwise attention
 ) -> tuple[jax.Array, AttnCache | None]:
     """Attention block: projections + (cached) attention + output projection.
 
@@ -371,6 +373,45 @@ def apply_attention(
         trash = cache.k_pages.shape[0] - 1
         page_size = cache.k_pages.shape[1]
         mb = paged.block_tables.shape[1]
+        if not decode and chunk_lengths is not None:
+            # CHUNKED PREFILL / SPEC VERIFY: R slots × C tokens.  Token
+            # (r, c) sits at absolute position paged.positions[r] + c and is
+            # real iff c < chunk_lengths[r] on an active slot — ragged tails
+            # and idle slots scatter to the trash page, and their output rows
+            # are garbage the engine discards.
+            base = paged.positions
+            c_idx = jnp.arange(s, dtype=jnp.int32)[None, :]
+            tok_pos = base[:, None] + c_idx                        # (R, C)
+            valid = (c_idx < chunk_lengths[:, None]) & paged.active[:, None]
+            blk = jnp.clip(tok_pos // page_size, 0, mb - 1)
+            pages_idx = jnp.take_along_axis(paged.block_tables, blk, axis=1)
+            pages_idx = jnp.where(valid, pages_idx, trash)         # (R, C)
+            offs = tok_pos % page_size
+            kp = cache.k_pages.at[pages_idx, offs].set(k)
+            vp = cache.v_pages.at[pages_idx, offs].set(v)
+            if chunk_exact:
+                # Speculative verify: scan single-token paged attention over
+                # the chunk so row c is BITWISE the decode step at base + c —
+                # this is what makes accepted proposals exactly the tokens
+                # non-speculative decode would have produced.
+                def step(_, qc_pos):
+                    qc, posc = qc_pos
+                    out_c = kernel_ops.paged_attention(
+                        qc, kp, vp, paged.block_tables, posc,
+                        mode=mode, window=window, config=cfg.kernels,
+                    )
+                    return None, out_c
+
+                _, out = jax.lax.scan(
+                    step, None, (q.transpose(1, 0, 2, 3), tok_pos.T)
+                )
+                out = out.transpose(1, 0, 2, 3)
+            else:
+                out = kernel_ops.paged_chunk_attention(
+                    q, kp, vp, paged.block_tables, base,
+                    mode=mode, window=window, config=cfg.kernels,
+                )
+            return _out_proj(out, w_o, ctx, tp_h), PagedAttnCache(kp, vp)
         if not decode:
             # PREFILL (B == 1, canonical positions): attention over the fresh
             # K/V exactly like the dense prefill, then every prompt token's

@@ -344,6 +344,46 @@ def paged_prefill(
     return logits_sharded(params["embed"], cfg, x[:, -1:], ctx), new_caches
 
 
+def paged_prefill_chunk(
+    params: PyTree, cfg: ModelConfig, tokens: jax.Array, caches: PyTree,
+    view: PagedView, ctx: ShardCtx, *, lengths: jax.Array, collect: bool = False,
+) -> tuple[jax.Array, PyTree]:
+    """One CHUNK of prefill for all R slots at once: tokens (R, C), with slot
+    r's chunk starting at absolute position ``view.positions[r]`` and only its
+    first ``lengths[r]`` tokens real (ragged tails scatter to the trash page
+    and compute discarded garbage).  Recurrent caches must carry the states
+    as of position ``view.positions[r]`` — chunk boundaries resume exactly.
+
+    One fixed-C program serves every prompt-length mix; the engine walks long
+    prompts through repeated calls, bumping ``view.positions`` by ``lengths``.
+
+    ``collect=False`` (prefill): returns (vocab-LOCAL logits of each slot's
+    LAST VALID position (R, 1, V/tp), new caches with carried final states).
+    ``collect=True`` (speculative verify): attention + recurrences run
+    per-token BITWISE-identical to decode steps, and returns (logits for all
+    C positions (R, C, V/tp), caches whose recurrent leaves carry the full
+    per-token state trajectory (B, C, ...) for accept-prefix selection)."""
+    x = embed_tokens(params["embed"], cfg, tokens, ctx)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    positions = view.positions[:, None] + jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
+    if not cfg.use_rope:
+        table = sinusoidal_positions(2**15, cfg.d_model).astype(x.dtype)
+        x = x + jnp.take(table, jnp.clip(positions, 0, 2**15 - 1), axis=0)
+    x, new_caches, _ = tfm.apply_stack(
+        params["stack"], cfg, x, ctx, positions=positions,
+        caches=caches, paged=view, chunk_lengths=lengths, chunk_exact=collect,
+    )
+    x = apply_norm(params["final_norm"], x)
+    if collect:
+        return logits_sharded(params["embed"], cfg, x, ctx), new_caches
+    sel = jnp.clip(lengths - 1, 0, x.shape[1] - 1)[:, None, None]
+    x_last = jnp.take_along_axis(
+        x, jnp.broadcast_to(sel, (x.shape[0], 1, x.shape[2])), axis=1
+    )
+    return logits_sharded(params["embed"], cfg, x_last, ctx), new_caches
+
+
 def paged_decode_step(
     params: PyTree, cfg: ModelConfig, tokens: jax.Array, caches: PyTree,
     view: PagedView, ctx: ShardCtx,

@@ -97,6 +97,8 @@ def apply_rglru(
     ctx: ShardCtx,
     *,
     cache: RGLRUCache | None = None,
+    chunk_lengths: jax.Array | None = None,  # (B,) valid tokens per chunk row
+    chunk_exact: bool = False,               # per-token decode-bitwise states
 ) -> tuple[jax.Array, RGLRUCache | None]:
     w_x = ctx.gather_param(p["w_x"], axis=0)
     w_gate = ctx.gather_param(p["w_gate"], axis=0)
@@ -104,9 +106,9 @@ def apply_rglru(
     w_i = ctx.gather_param(p["w_i"], axis=0)
     w_out = ctx.gather_param(p["w_out"], axis=1)
 
-    u = x @ w_x                                  # (B,S,w_local)
+    u_in = x @ w_x                               # (B,S,w_local)
     gate = jax.nn.gelu((x @ w_gate).astype(jnp.float32), approximate=True)
-    u, new_conv = _causal_conv(u, p["conv"], cache.conv if cache is not None else None)
+    u, new_conv = _causal_conv(u_in, p["conv"], cache.conv if cache is not None else None)
 
     r = jax.nn.sigmoid((x @ w_r).astype(jnp.float32))
     i = jax.nn.sigmoid((x @ w_i).astype(jnp.float32))
@@ -114,6 +116,48 @@ def apply_rglru(
     log_a = C_EXP * r * (-jax.nn.softplus(-p["lam"]))
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+
+    chunked = cache is not None and chunk_lengths is not None
+    if chunked:
+        # CHUNK-RESUMABLE serving prefill/verify: row c of slot r is real iff
+        # c < chunk_lengths[r].  The recurrence is causal, so per-token states
+        # for valid tokens are untouched by the ragged garbage tail — only
+        # the carried state/tail must be SELECTED at the last valid token.
+        s, k1 = x.shape[1], p["conv"].shape[0] - 1
+        ext = jnp.concatenate([cache.conv.astype(u_in.dtype), u_in], axis=1)
+        lengths = chunk_lengths.astype(jnp.int32)
+        if chunk_exact:
+            # spec-decode verify: sequential dispatched single-step updates so
+            # token c's state is BITWISE the decode step after token c; the
+            # cache carries the full per-token trajectory (B, S, ...) for the
+            # engine to select the accepted prefix from.
+            def step(hprev, ab):
+                at, bt = ab
+                hn = kernel_ops.rglru_decode(hprev, at, bt, config=cfg.kernels)
+                return hn, hn
+
+            _, hs = jax.lax.scan(
+                step, cache.h, (a.transpose(1, 0, 2), b.transpose(1, 0, 2))
+            )
+            h = hs.transpose(1, 0, 2)                       # (B,S,w)
+            win = jnp.arange(s)[:, None] + 1 + jnp.arange(k1)[None, :]
+            tails = ext[:, win]                             # (B,S,K-1,w)
+            new_cache = RGLRUCache(conv=tails, h=h)
+        else:
+            b = b.at[:, 0].add(a[:, 0] * cache.h)
+            h = kernel_ops.rglru_scan(a, b, config=cfg.kernels)
+            sel = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
+            h_last = jnp.take_along_axis(h, jnp.broadcast_to(sel, (h.shape[0], 1, h.shape[2])), axis=1)[:, 0]
+            h_last = jnp.where(lengths[:, None] > 0, h_last, cache.h)
+            tidx = lengths[:, None] + jnp.arange(k1)[None, :]
+            tail = jnp.take_along_axis(
+                ext, jnp.broadcast_to(tidx[:, :, None], (ext.shape[0], k1, ext.shape[2])), axis=1
+            )
+            new_cache = RGLRUCache(conv=tail, h=h_last)
+        y = (h * gate).astype(x.dtype) @ w_out
+        if ctx.ff_tp(cfg.lru_width or cfg.d_model) > 1:
+            y = ctx.scatter_seq_sum(y, axis=1)
+        return y, new_cache
 
     decode = cache is not None and x.shape[1] == 1
     if not decode:

@@ -124,6 +124,8 @@ def apply_ssd(
     ctx: ShardCtx,
     *,
     cache: SSDCache | None = None,
+    chunk_lengths: jax.Array | None = None,  # (B,) valid tokens per chunk row
+    chunk_exact: bool = False,               # per-token decode-bitwise states
 ) -> tuple[jax.Array, SSDCache | None]:
     w_z = ctx.gather_param(p["w_z"], axis=0)
     w_x = ctx.gather_param(p["w_x"], axis=0)
@@ -136,8 +138,8 @@ def apply_ssd(
     hd = cfg.ssm_head_dim
 
     z = x @ w_z                                          # (B,S,di_local)
-    u = x @ w_x
-    u, new_conv = _causal_conv(u, p["conv"], cache.conv if cache is not None else None)
+    u_in = x @ w_x
+    u, new_conv = _causal_conv(u_in, p["conv"], cache.conv if cache is not None else None)
     u = jax.nn.silu(u.astype(jnp.float32))
     b_mat = (x @ w_b).astype(jnp.float32)
     c_mat = (x @ w_c).astype(jnp.float32)
@@ -146,6 +148,67 @@ def apply_ssd(
 
     h_local = u.shape[-1] // hd
     u_heads = u.reshape(bsz, s, h_local, hd)
+
+    chunked = cache is not None and chunk_lengths is not None
+    if chunked:
+        # CHUNK-RESUMABLE serving prefill/verify: row c of slot r is real iff
+        # c < chunk_lengths[r].  Masking dt to EXACTLY 0.0 on the garbage
+        # tail makes each pad token a bitwise no-op on the recurrence
+        # (decay exp(0·a) = 1, input dt·x = 0), so the carried state equals
+        # the state at the last valid token with no selection needed; the
+        # conv tail is still selected positionally.
+        k1 = p["conv"].shape[0] - 1
+        ext = jnp.concatenate([cache.conv.astype(u_in.dtype), u_in], axis=1)
+        lengths = chunk_lengths.astype(jnp.int32)
+        tok_valid = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+        if chunk_exact:
+            # spec-decode verify: sequential dispatched single-step updates so
+            # token c's state is BITWISE the decode step after token c; the
+            # cache carries the per-token trajectory (B, S, ...) for the
+            # engine to select the accepted prefix from.
+            def step(st, inp):
+                dt1, b1, c1, u1 = inp
+                st2, y1 = kernel_ops.ssd_decode(
+                    st, dt1, a, b1, c1, u1, config=cfg.kernels
+                )
+                return st2, (st2, y1)
+
+            _, (states, ys) = jax.lax.scan(
+                step,
+                cache.state,
+                (
+                    dt.transpose(1, 0, 2),
+                    b_mat.transpose(1, 0, 2),
+                    c_mat.transpose(1, 0, 2),
+                    u_heads.transpose(1, 0, 2, 3),
+                ),
+            )
+            y = ys.transpose(1, 0, 2, 3)                    # (B,S,H_l,P)
+            win = jnp.arange(s)[:, None] + 1 + jnp.arange(k1)[None, :]
+            new_cache = SSDCache(conv=ext[:, win], state=states.transpose(1, 0, 2, 3, 4))
+        else:
+            dtm = jnp.where(tok_valid[..., None], dt, 0.0)
+            y, final_state = ssd_chunked(
+                u_heads, dtm, a, b_mat, c_mat, cfg.ssm_chunk,
+                initial_state=cache.state,
+                unroll=cfg.unroll_scans, config=cfg.kernels,
+            )
+            tidx = lengths[:, None] + jnp.arange(k1)[None, :]
+            tail = jnp.take_along_axis(
+                ext, jnp.broadcast_to(tidx[:, :, None], (ext.shape[0], k1, ext.shape[2])), axis=1
+            )
+            new_cache = SSDCache(conv=tail, state=final_state)
+        y = y + p["d_skip"][None, None, :, None] * u_heads
+        y = y.reshape(bsz, s, h_local * hd)
+        g = y * jax.nn.silu(z.astype(jnp.float32))
+        ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+        if ctx.ff_tp(d_inner(cfg)) > 1:
+            ms = ctx.psum_model(ms) / ctx.tp
+        g = g * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]
+        out = g.astype(x.dtype) @ w_out
+        if ctx.ff_tp(d_inner(cfg)) > 1:
+            out = ctx.scatter_seq_sum(out, axis=1)
+        return out, new_cache
 
     decode = cache is not None and s == 1
     if not decode:

@@ -82,6 +82,8 @@ def apply_block(
     enc_out: jax.Array | None = None,
     decode: bool = False,
     paged: attn_lib.PagedView | None = None,
+    chunk_lengths: jax.Array | None = None,
+    chunk_exact: bool = False,
 ) -> tuple[jax.Array, PyTree | None, jax.Array]:
     """Pre-norm block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -92,15 +94,22 @@ def apply_block(
         y, new_cache = attn_lib.apply_attention(
             p["attn"], cfg, h, ctx, mode=mode, positions=positions, cache=cache,
             paged=paged, decode=decode,
+            chunk_lengths=chunk_lengths, chunk_exact=chunk_exact,
         )
     elif kind == "encoder":  # bidirectional self-attention (whisper encoder)
         y, new_cache = attn_lib.apply_attention(
             p["attn"], cfg, h, ctx, mode="full", positions=positions, cache=None
         )
     elif kind == "rglru":
-        y, new_cache = rglru_lib.apply_rglru(p["mixer"], cfg, h, ctx, cache=cache)
+        y, new_cache = rglru_lib.apply_rglru(
+            p["mixer"], cfg, h, ctx, cache=cache,
+            chunk_lengths=chunk_lengths, chunk_exact=chunk_exact,
+        )
     elif kind == "ssd":
-        y, new_cache = ssd_lib.apply_ssd(p["mixer"], cfg, h, ctx, cache=cache)
+        y, new_cache = ssd_lib.apply_ssd(
+            p["mixer"], cfg, h, ctx, cache=cache,
+            chunk_lengths=chunk_lengths, chunk_exact=chunk_exact,
+        )
     else:  # pragma: no cover
         raise ValueError(kind)
     x = x + y
@@ -184,6 +193,8 @@ def apply_stack(
     decode: bool = False,
     kinds: tuple[str, ...] | None = None,
     paged: attn_lib.PagedView | None = None,
+    chunk_lengths: jax.Array | None = None,
+    chunk_exact: bool = False,
 ) -> tuple[jax.Array, dict | None, jax.Array]:
     """Run all layers. ``caches`` mirrors the params structure:
     {"scan": [stacked cache per position], "rem": [cache per layer]}."""
@@ -210,6 +221,8 @@ def apply_stack(
                     enc_out=enc_out,
                     decode=decode,
                     paged=paged,  # scan closure constant (shared by layers)
+                    chunk_lengths=chunk_lengths,
+                    chunk_exact=chunk_exact,
                 )
                 aux_sum = aux_sum + aux
                 new_slices.append(nc)
@@ -240,6 +253,7 @@ def apply_stack(
             params["rem"][j], cfg, x, ctx, kind,
             positions=positions, cache=c0, cross_cache=cc,
             enc_out=enc_out, decode=decode, paged=paged,
+            chunk_lengths=chunk_lengths, chunk_exact=chunk_exact,
         )
         aux_total = aux_total + aux
         if new_caches is not None:

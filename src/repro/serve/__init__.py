@@ -14,16 +14,22 @@ from repro.serve.engine import (
     ServeConfig,
     ServeEngine,
 )
-from repro.serve.paged import BlockAllocator
-from repro.serve.promote import promote, resolve_replica
+from repro.serve.paged import BlockAllocator, Lease
+from repro.serve.promote import promote, resolve_replica, truncate_layers
+from repro.serve.router import ReplicaRouter
+from repro.serve.spec import SpecServeEngine
 
 __all__ = [
     "BlockAllocator",
     "EngineState",
     "FinishedRequest",
+    "Lease",
+    "ReplicaRouter",
     "Request",
     "ServeConfig",
     "ServeEngine",
+    "SpecServeEngine",
     "promote",
     "resolve_replica",
+    "truncate_layers",
 ]

@@ -16,6 +16,24 @@ table entry a valid pool index.
 
 from __future__ import annotations
 
+import dataclasses
+
+
+@dataclasses.dataclass
+class Lease:
+    """Pages reserved but not yet committed to a running request.
+
+    Chunked prefill spans many scheduler ticks, and speculative decode
+    writes K/V for tokens that may be rejected — in both cases pages leave
+    the free list BEFORE the request is guaranteed to keep them.  A lease
+    makes that window explicit: ``commit`` transfers ownership to the
+    request (pages are later returned via :meth:`BlockAllocator.free`),
+    ``rollback`` returns them immediately.  Either way the page is never in
+    two places at once, which is what the leak tests assert."""
+
+    blocks: list[int]
+    state: str = "reserved"   # reserved | committed | rolled_back
+
 
 class BlockAllocator:
     """Free-list allocator over ``num_pages`` fixed-size KV pages."""
@@ -28,6 +46,7 @@ class BlockAllocator:
         # LIFO free list: recently-freed pages are reused first (their cache
         # lines / HBM pages are hottest)
         self._free = list(range(num_pages))
+        self._reserved: list[Lease] = []
 
     @property
     def trash_page(self) -> int:
@@ -60,3 +79,49 @@ class BlockAllocator:
             if b in self._free:
                 raise ValueError(f"double free of page {b}")
         self._free.extend(blocks)
+
+    # -- lease API: reserve → (commit | rollback) ---------------------------
+
+    def reserve(self, n_blocks: int) -> Lease:
+        """Take pages off the free list under a revocable lease (chunked
+        prefill in flight, speculative tokens not yet verified)."""
+        lease = Lease(blocks=self.alloc(n_blocks))
+        self._reserved.append(lease)
+        return lease
+
+    def commit(self, lease: Lease) -> list[int]:
+        """The request keeps the pages; caller now owns them and must
+        eventually :meth:`free` them.  Returns the block list."""
+        if lease.state != "reserved":
+            raise ValueError(f"commit of {lease.state} lease")
+        lease.state = "committed"
+        self._reserved.remove(lease)
+        return lease.blocks
+
+    def rollback(self, lease: Lease) -> None:
+        """Abandon the lease (cancelled admission / rejected speculation):
+        pages go straight back to the free list."""
+        if lease.state != "reserved":
+            raise ValueError(f"rollback of {lease.state} lease")
+        lease.state = "rolled_back"
+        self._reserved.remove(lease)
+        self.free(lease.blocks)
+
+    @property
+    def reserved_count(self) -> int:
+        return sum(len(l.blocks) for l in self._reserved)
+
+    def check_leaks(self, owned: int = 0) -> None:
+        """Invariant: free + reserved + caller-owned pages == pool size, and
+        the trash page was never handed out."""
+        total = self.free_count + self.reserved_count + owned
+        if total != self.num_pages:
+            raise AssertionError(
+                f"page leak: free={self.free_count} reserved={self.reserved_count} "
+                f"owned={owned} != pool={self.num_pages}"
+            )
+        for lease in self._reserved:
+            if self.trash_page in lease.blocks:
+                raise AssertionError("trash page leaked into a lease")
+        if self.trash_page in self._free:
+            raise AssertionError("trash page leaked into the free list")

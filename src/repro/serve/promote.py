@@ -24,6 +24,7 @@ Supported layouts (see train/adapters.py state_pytree):
 
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import Any
 
@@ -33,7 +34,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
 
-__all__ = ["promote", "resolve_replica"]
+__all__ = ["promote", "resolve_replica", "truncate_layers"]
 
 
 def resolve_replica(membership: dict | None, replica: int, world: int) -> int:
@@ -119,3 +120,42 @@ def promote(
     params = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[replica]), stacked)
     info = {"step": int(step), "replica": int(replica), "source": source, "world": world}
     return params, info
+
+
+def truncate_layers(params: Any, cfg: Any, num_layers: int) -> tuple[Any, Any]:
+    """Depth-truncated draft model: keep the FIRST ``num_layers`` blocks of a
+    promoted (plain-value) param tree, sharing embed / final norm / unembed.
+
+    A truncated slice of the SAME replica is the cheapest speculative-decode
+    draft when only one NoLoCo replica is promoted: early layers dominate
+    next-token agreement, so the slice proposes well while costing a fraction
+    of a full second replica.  Truncation must respect the layer-cycle
+    structure (``cfg.attn_pattern`` periods scanned as stacks + an unrolled
+    remainder): full periods slice the stacks' depth axis, the leftover
+    layers of the first partial period are pulled out of the stacks into the
+    remainder list.  Returns ``(draft_params, draft_cfg)`` ready for
+    ``SpecServeEngine``."""
+    from repro.models import transformer as tfm
+
+    if not 1 <= num_layers <= cfg.num_layers:
+        raise ValueError(
+            f"num_layers must be in [1, {cfg.num_layers}], got {num_layers}"
+        )
+    period, n_full, _rem = tfm.layer_plan(cfg)
+    p = len(period)
+    n_full2, rem2 = num_layers // p, num_layers % p
+    stack = params["stack"]
+    scan2 = [
+        (jax.tree.map(lambda x: x[:n_full2], s) if n_full2 and s is not None else None)
+        for s in stack["scan"]
+    ]
+    rem_list = []
+    for j in range(rem2):
+        if n_full2 < n_full:
+            # layer n_full2·p + j lives at depth n_full2 of scan stack j
+            rem_list.append(jax.tree.map(lambda x: x[n_full2], stack["scan"][j]))
+        else:
+            rem_list.append(stack["rem"][j])
+    draft_params = dict(params)
+    draft_params["stack"] = {"scan": scan2, "rem": rem_list}
+    return draft_params, dataclasses.replace(cfg, num_layers=num_layers)

@@ -31,6 +31,7 @@ EXPECTED_OPS = {
     "int8_quantize",
     "int8_dequantize",
     "paged_attention",
+    "paged_chunk_attention",
     "rglru_decode",
     "ssd_decode",
 }
