@@ -9,6 +9,13 @@ payload stream and only its Δ half blocks, so ``blocking_bytes_per_outer_step``
 is the event-averaged blocking bytes per STREAM SYNC (the new wall), while
 ``baseline_blocking_bytes_per_outer_step`` keeps the pre-streaming whole-payload
 wall for the cut-factor trajectory.
+
+Since the asynchronous-rounds PR the bench also runs the 2x-straggler
+comparison (``async_straggler``): the same slow replica modeled
+round-synchronously (straggle events — it sits out every other round and
+forces a self-pair on the odd survivor) vs. on its own round clock (a rate
+event — it syncs late with a stale Δ), reporting blocked syncs, idle rounds
+and the max staleness the async run recorded.
 """
 import json
 import os
@@ -17,10 +24,60 @@ import time
 from benchmarks.common import emit
 from repro.configs import registry
 from repro.launch.train import run_training
+from repro.launch.train_elastic import run_elastic_training
+from repro.sim import FaultEvent, FaultPlan
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
 STEPS = 30
 STREAMS = 4
+ASYNC_STEPS = 24
+ASYNC_INNER = 4
+
+
+def _async_straggler_comparison(cfg) -> dict:
+    """2x straggler on 8 replicas, round-synchronous vs. per-replica clocks."""
+    rounds = ASYNC_STEPS // ASYNC_INNER
+    kw = dict(
+        replicas=8, per_replica_batch=2, seq_len=64, steps=ASYNC_STEPS,
+        inner_steps=ASYNC_INNER, inner_lr=2e-3, eval_every=0, seed=0,
+    )
+    # round-synchronous: a 2x-slow replica misses every other round
+    sync_plan = FaultPlan([
+        FaultEvent(kind="straggle", round=r, replicas=[1])
+        for r in range(1, rounds, 2)
+    ])
+    t0 = time.perf_counter()
+    sync = run_elastic_training(cfg, sync_plan, **kw)
+    sync_wall = time.perf_counter() - t0
+    # asynchronous: the same slowdown as a rate multiplier on its own clock
+    async_plan = FaultPlan([
+        FaultEvent(kind="rate", round=0, replicas=[1], rate=0.5)
+    ])
+    t0 = time.perf_counter()
+    asyn = run_elastic_training(cfg, async_plan, **kw)
+    async_wall = time.perf_counter() - t0
+
+    def idle_rounds(res):
+        return sum(len(r.get("absent", [])) for r in res["rounds"])
+
+    return {
+        "replicas": 8, "straggler_rate": 0.5, "steps": ASYNC_STEPS,
+        "sync": {
+            "blocked_syncs": sync["blocked_syncs"],
+            "idle_replica_rounds": idle_rounds(sync),
+            "blocking_fraction": round(sync["blocking_fraction"], 4),
+            "outer_syncs": sync["outer_syncs"],
+            "wall_s": round(sync_wall, 3),
+        },
+        "async": {
+            "blocked_syncs": asyn["blocked_syncs"],
+            "idle_replica_rounds": idle_rounds(asyn),
+            "max_staleness": asyn["max_staleness"],
+            "blocking_fraction": round(asyn["blocking_fraction"], 4),
+            "outer_syncs": asyn["outer_syncs"],
+            "wall_s": round(async_wall, 3),
+        },
+    }
 
 
 def main() -> None:
@@ -55,6 +112,7 @@ def main() -> None:
         "blocking_cut_factor": round(baseline_blocking / max(blocking, 1), 2),
         "final_train_loss": round(res["losses"][-1], 4),
         "final_weight_std": res["final_weight_std"],
+        "async_straggler": _async_straggler_comparison(cfg),
     }
     with open(OUT, "w") as f:
         json.dump(bench, f, indent=2)
@@ -63,6 +121,11 @@ def main() -> None:
          f"blocking_per_sync={bench['blocking_bytes_per_outer_step']};"
          f"cut={bench['blocking_cut_factor']}x;"
          f"blocking_frac={bench['blocking_fraction']}")
+    a = bench["async_straggler"]
+    emit("engine_async_straggler", 0.0,
+         f"sync_blocked={a['sync']['blocked_syncs']};"
+         f"async_blocked={a['async']['blocked_syncs']};"
+         f"async_max_tau={a['async']['max_staleness']}")
 
 
 if __name__ == "__main__":

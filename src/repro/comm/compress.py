@@ -56,7 +56,10 @@ class CommConfig:
                  whole payload on one sync point.
     ``chunk``:   int8 quantization group size (fp32 scale+min per chunk).
     ``error_feedback``: reserved for LoCo-style residual accumulation; only
-                 meaningful for lossy codecs.
+                 meaningful for lossy codecs.  No trainer path threads the
+                 residual state yet, so enabling it raises
+                 ``NotImplementedError`` rather than silently dropping the
+                 residuals (which would quietly bias every lossy exchange).
     """
 
     codec: str = "none"
@@ -75,6 +78,19 @@ class CommConfig:
             raise ValueError(f"streams must be >= 1, got {self.streams}")
         if self.error_feedback and self.codec in ("none",):
             raise ValueError("error feedback only applies to lossy codecs")
+        if self.error_feedback:
+            # encode_with_residual exists on every codec, but no trainer path
+            # carries the residual pytree between rounds yet — accepting the
+            # flag here would mean each round's quantization error is simply
+            # discarded, which is exactly the bias error feedback exists to
+            # remove.  Fail loudly until the LoCo-style (arXiv 2407.04480)
+            # residual state is threaded through the outer step.
+            raise NotImplementedError(
+                "error_feedback=True: no trainer path accumulates the "
+                "LoCo-style (arXiv 2407.04480) quantization residuals yet, "
+                "so the flag would silently drop them; use "
+                "Codec.encode_with_residual directly or leave it False"
+            )
 
 
 def _is_float(dtype) -> bool:

@@ -71,6 +71,11 @@ class ElasticContext:
         self.partition: tuple[tuple[int, ...], ...] | None = None
         self.round_absent: frozenset[int] = frozenset()
         self.last_partner: np.ndarray | None = None
+        # transient per-tick step gate for the asynchronous clock (SimCluster
+        # sets it before every inner step; None = every member steps).  NOT
+        # checkpointed: the clock that derives it persists its own counters
+        # and recomputes the gate on the first tick after resume.
+        self.tick_active: np.ndarray | None = None
 
     # -- views ---------------------------------------------------------------
 
@@ -88,10 +93,19 @@ class ElasticContext:
 
     def active_array(self) -> np.ndarray | None:
         """(world,) bool mask for inner-step freezing, or None when everyone
-        is in (keeps the healthy path's compiled signature untouched)."""
-        if self.membership.is_full:
+        is in (keeps the healthy path's compiled signature untouched).
+
+        Composes membership with the asynchronous clock's per-tick step gate
+        (``tick_active``): a replica steps this tick only if it is a member
+        AND its clock granted it a step.  At full membership with every
+        clock ticking the result is None — the rate-1 world keeps the
+        legacy compiled signature bit for bit."""
+        mask = np.asarray(self.membership.mask, dtype=bool)
+        if self.tick_active is not None:
+            mask = mask & np.asarray(self.tick_active, dtype=bool)
+        if mask.all():
             return None
-        return self.membership.active_array()
+        return mask.copy()
 
     def active_ids(self) -> tuple[int, ...]:
         return self.membership.active_ids

@@ -127,6 +127,7 @@ class GossipTrainer:
         state: TrainState,
         partner: jax.Array | None = None,
         active: jax.Array | None = None,
+        staleness: jax.Array | None = None,
     ) -> TrainState:
         """Gossip/all-reduce sync of slow weights; fast weights reset to the
         new slow weights (look-ahead semantics).
@@ -135,10 +136,13 @@ class GossipTrainer:
         outer step counter inside :func:`outer_step_stacked`; jitted callers
         must pass a precomputed table (a clear error is raised otherwise).
         ``active`` masks this round's participants (see
-        :func:`repro.core.outer.outer_step_stacked`)."""
+        :func:`repro.core.outer.outer_step_stacked`); ``staleness`` is the
+        per-replica τ vector of an asynchronous merged sync tick (the
+        ``stale="momentum"`` discount — :func:`repro.core.outer.stale_discount`)."""
         new_outer, new_theta = outer_lib.outer_step_stacked(
             state.outer, state.theta, self.cfg.outer, partner=partner,
             active=active, comm_cfg=self.cfg.comm, kernel_cfg=self.cfg.kernels,
+            staleness=staleness,
         )
         return TrainState(
             theta=new_theta, opt=state.opt, outer=new_outer, inner_step=state.inner_step

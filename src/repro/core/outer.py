@@ -68,6 +68,7 @@ __all__ = [
     "default_gamma",
     "init_outer_state",
     "outer_gradient",
+    "stale_discount",
     "noloco_momentum_update",
     "diloco_momentum_update",
     "outer_step",
@@ -110,6 +111,7 @@ class OuterConfig:
     group_size: int = 2     # n; paper uses the minimum, 2
     inner_steps: int = 50   # m; NoLoCo 50, DiLoCo 100 in the paper
     seed: int = 0           # pairing PRNG seed
+    stale: str = "naive"    # async stale-Δ rule: "naive" | "momentum" (DeMo-style)
 
     def resolved_gamma(self) -> float:
         if self.method != "noloco":
@@ -134,6 +136,12 @@ class OuterConfig:
         if self.beta <= self.alpha:
             # Sufficient convergence condition from Appendix A.2 (β > α).
             raise ValueError("outer learning rate beta must exceed alpha (App. A.2)")
+        if self.stale not in ("naive", "momentum"):
+            raise ValueError(
+                f"unknown stale-Δ rule: {self.stale!r} "
+                "(\"naive\" applies a delayed Δ as-is; \"momentum\" discounts "
+                "it by its staleness, DeMo-style)"
+            )
 
 
 @jax.tree_util.register_dataclass
@@ -225,6 +233,33 @@ def outer_gradient(theta: PyTree, phi: PyTree) -> PyTree:
     return jax.tree.map(lambda t, p: (t - p.astype(t.dtype)).astype(p.dtype), theta, phi)
 
 
+def stale_discount(delta: PyTree, staleness: jax.Array) -> PyTree:
+    """DeMo-style staleness discount: scale each replica's Δ by 1/(1+τ).
+
+    A Δ arriving τ merged sync ticks late is anchored at a φ that is (1+τ)
+    round intervals old, so dividing by (1+τ) damps the stale drift it would
+    otherwise inject — the ``stale="momentum"`` rule (the decoupled-momentum
+    treatment of delayed updates, PAPERS.md arXiv 2510.03371).  Applied to
+    the WIRE copy only, before the exchange: the partner receives the
+    discounted contribution, while a replica's own Δ enters its own mean
+    undiscounted (discounting one's own fresh-to-oneself Δ would merely slow
+    that replica down, raising the ensemble floor instead of lowering it).
+    ``staleness`` is either a per-replica (world,) vector (stacked backend)
+    or a scalar (this shard's τ, sharded backend); τ=0 scales by exactly
+    1.0 — bit-identical to the undiscounted path.
+    """
+    tau = jnp.asarray(staleness, jnp.float32)
+    scale = 1.0 / (1.0 + tau)
+
+    def _scl(d):
+        s = scale
+        if s.ndim == 1 and d.ndim >= 1:
+            s = s.reshape((-1,) + (1,) * (d.ndim - 1))
+        return (d.astype(jnp.float32) * s).astype(d.dtype)
+
+    return jax.tree.map(_scl, delta)
+
+
 def _unzip_pairs(template: PyTree, pairs: PyTree) -> tuple[PyTree, PyTree]:
     """Split a template-shaped tree of (a, b) tuples into two trees."""
     return jax.tree.transpose(
@@ -297,6 +332,7 @@ def outer_step(
     phi_prefetched: PyTree | None = None,
     comm_next: exchange_lib.Communicator | None = None,
     kernel_cfg: KernelConfig | None = None,
+    staleness: jax.Array | None = None,
 ) -> tuple[OuterState, PyTree, PyTree | None]:
     """One outer step against any :class:`~repro.comm.Communicator`.
 
@@ -304,9 +340,20 @@ def outer_step(
     the new slow weights (look-ahead semantics); ``phi_presend`` is the φ′
     payload exchanged along ``comm_next`` for the NEXT pairing (None unless
     ``comm_next`` is given).
+
+    ``staleness`` (asynchronous rounds only): per-replica τ of the Δ each
+    replica contributes to THIS exchange.  Under ``cfg.stale == "momentum"``
+    the WIRE copy of Δ is pre-scaled by :func:`stale_discount` before it
+    goes out — the partner receives the discounted contribution while each
+    replica's own Δ enters its own mean undiscounted; under ``"naive"`` the
+    delayed Δ is applied as-is (the value is then telemetry-only and callers
+    normally pass None).
     """
     cfg.validate()
     delta = outer_gradient(theta, state.phi)
+    delta_wire = delta
+    if staleness is not None and cfg.method == "noloco" and cfg.stale == "momentum":
+        delta_wire = stale_discount(delta, staleness)
 
     if cfg.method == "none":
         # Pure local / FSDP-style: slow weights track fast weights exactly.
@@ -321,7 +368,7 @@ def outer_step(
         phi_presend = None
     else:  # noloco
         delta_p, phi_p = exchange_lib.exchange_gossip(
-            comm, delta, state.phi, phi_prefetched=phi_prefetched
+            comm, delta_wire, state.phi, phi_prefetched=phi_prefetched
         )
         mean_delta = jax.tree.map(lambda a, b: 0.5 * (a + b), delta, delta_p)
         mean_phi = jax.tree.map(lambda a, b: 0.5 * (a + b), state.phi, phi_p)
@@ -375,6 +422,7 @@ def outer_step_stacked(
     active: jax.Array | None = None,
     comm_cfg: CommConfig | None = None,
     kernel_cfg: KernelConfig | None = None,
+    staleness: jax.Array | None = None,
 ) -> tuple[OuterState, PyTree]:
     """One outer step where replicas are stacked on axis 0 of every leaf.
 
@@ -399,6 +447,9 @@ def outer_step_stacked(
 
     ``comm_cfg`` selects the wire codec/fusing; lossy codecs are applied to
     the partner's gathered values exactly as the distributed wire would.
+
+    ``staleness``: per-replica (world,) τ vector for asynchronous merged
+    sync ticks — see :func:`outer_step` / :func:`stale_discount`.
     """
     cfg.validate()
     comm = None
@@ -411,7 +462,9 @@ def outer_step_stacked(
         comm = exchange_lib.StackedGather(
             None, comm_cfg, active=active
         )
-    new_state, new_theta, _ = outer_step(state, theta, cfg, comm, kernel_cfg=kernel_cfg)
+    new_state, new_theta, _ = outer_step(
+        state, theta, cfg, comm, kernel_cfg=kernel_cfg, staleness=staleness
+    )
     if active is not None:
         act = jnp.asarray(active, bool)
 
@@ -551,6 +604,7 @@ def outer_step_sharded(
     comm_cfg: CommConfig | None = None,
     kernel_cfg: KernelConfig | None = None,
     active_flag: jax.Array | None = None,
+    staleness: jax.Array | None = None,
 ) -> tuple[OuterState, PyTree]:
     """One outer step inside ``shard_map``: each program instance holds ONE
     replica's (φ, δ, θ) shards.
@@ -568,6 +622,9 @@ def outer_step_sharded(
     flag here because sit-outs are already encoded as self-loops in ``perm``;
     FREEZING a non-participant's (φ, δ, θ) is the caller's select, since only
     the caller still holds the pre-step values.
+
+    ``staleness`` (optional scalar: THIS shard's τ) applies the asynchronous
+    stale-Δ discount before the exchange — see :func:`stale_discount`.
     """
     cfg.validate()
     axis_names = tuple(axis_names)
@@ -583,7 +640,9 @@ def outer_step_sharded(
         if active_flag is not None:
             weight = jnp.asarray(active_flag, jnp.float32).reshape(())
         comm = exchange_lib.AllReduce(axis_names, weight=weight)
-    new_state, new_theta, _ = outer_step(state, theta, cfg, comm, kernel_cfg=kernel_cfg)
+    new_state, new_theta, _ = outer_step(
+        state, theta, cfg, comm, kernel_cfg=kernel_cfg, staleness=staleness
+    )
     return new_state, new_theta
 
 

@@ -35,7 +35,27 @@ __all__ = [
     "variance_coefficient",
     "variance_bounded",
     "simulate_quadratic",
+    "staleness_floor",
 ]
+
+
+def staleness_floor(
+    omega: float, sigma: float, dim: int, tau_bar: float, stale: str = "naive"
+) -> float:
+    """Predicted stationary floor of the tail-averaged ‖E(φ)‖ under
+    asynchronous merged-tick rounds with mean staleness τ̄.
+
+    The synchronous floor is the O(ω σ √d) stochastic level of Thm. 1 (the
+    1.5 prefactor is the Monte-Carlo calibration the synchronous tests pin).
+    ``stale="naive"`` applies a delayed Δ undiscounted, so a replica that is
+    τ ticks late injects a contribution accumulated over (1+τ) rounds of
+    drift — the floor grows as O(ω σ · (1+τ̄)).  ``stale="momentum"``
+    rescales each Δ by 1/(1+τ) before the exchange, recovering the
+    synchronous floor."""
+    base = 1.5 * omega * sigma * float(np.sqrt(dim))
+    if stale == "momentum":
+        return base
+    return base * (1.0 + tau_bar)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +113,7 @@ def simulate_quadratic(
     cfg: outer_lib.OuterConfig | None = None,
     seed: int = 0,
     phi0_scale: float = 5.0,
+    rates: tuple[float, ...] | None = None,
 ) -> dict[str, np.ndarray]:
     """Run the full NoLoCo/DiLoCo iteration on the quadratic model.
 
@@ -111,6 +132,20 @@ def simulate_quadratic(
     ∝ ω²), it does not go to machine zero.  Tests of "E(φ) → 0" must use a
     tail AVERAGE as the Monte-Carlo estimator and compare against an
     ω-scaled floor, not a single noisy sample against an absolute epsilon.
+
+    ``rates`` (optional per-replica step-rate multipliers in (0, 1]) switches
+    the iteration to the ASYNCHRONOUS merged-tick clock of DESIGN.md §7:
+    replica r earns one inner step per wall tick with probability-free credit
+    accumulation at rate ``rates[r]``, a merged sync tick fires whenever any
+    replica completes its m-th inner step since its last sync, and only the
+    due set applies the outer update — everyone else serves its in-progress
+    state as a passive source.  ``cfg.stale`` selects the stale-Δ rule
+    (``"momentum"`` discounts each replica's Δ by 1/(1+τ) before the
+    exchange); ``outer_steps`` then counts merged sync ticks, so the
+    returned trajectories stay length ``outer_steps + 1``.  The result dict
+    additionally carries ``staleness`` — the per-sync mean τ over the due
+    set — and :func:`staleness_floor` predicts the stationary tail level.
+    ``rates=None`` (or all-ones) runs the exact synchronous code path.
     """
     cfg = cfg or outer_lib.OuterConfig()
     key = jax.random.PRNGKey(seed)
@@ -145,6 +180,18 @@ def simulate_quadratic(
         var.append(phi_np.var(axis=0).mean())
 
     record(phi)  # t = 0: the initial condition the transient decays from
+    if rates is not None and any(float(r) != 1.0 for r in rates):
+        staleness = _simulate_async(
+            model, cfg, state, theta, key,
+            world=world, outer_steps=outer_steps, inner_steps=inner_steps,
+            omega=omega, rates=rates, record=record,
+        )
+        return {
+            "mean_norm": np.asarray(mean_norm),
+            "replica_std": np.asarray(replica_std),
+            "var": np.asarray(var),
+            "staleness": np.asarray(staleness),
+        }
     for t in range(outer_steps):
         key, k = jax.random.split(key)
         theta = inner_sweep(theta, k)
@@ -152,8 +199,75 @@ def simulate_quadratic(
         state, theta = step_fn(state, theta, partner)
         record(state.phi)
 
-    return {
+    out = {
         "mean_norm": np.asarray(mean_norm),
         "replica_std": np.asarray(replica_std),
         "var": np.asarray(var),
     }
+    if rates is not None:  # all-ones: synchronous path, zero staleness
+        out["staleness"] = np.zeros(outer_steps, dtype=np.float64)
+    return out
+
+
+def _simulate_async(
+    model, cfg, state, theta, key, *,
+    world, outer_steps, inner_steps, omega, rates, record,
+):
+    """Merged-tick loop of :func:`simulate_quadratic` (``rates`` path).
+
+    Mirrors :class:`repro.sim.cluster.ReplicaClock` exactly — credit
+    accumulation, due-at-m, τ = merged ticks skipped since the replica's own
+    previous sync — but runs host-side on the quadratic model (repro.core
+    cannot import repro.sim).  Returns the per-sync mean τ over the due set.
+    """
+    a = jnp.asarray(model.a_eigs, dtype=jnp.float32)
+
+    def inner_tick(th, k, grant):
+        c = model.sigma * jax.random.normal(k, th.shape, th.dtype)
+        new = th - omega * (a[None, :] * (th - c))
+        return jnp.where(grant[:, None], new, th)
+
+    inner_tick = jax.jit(inner_tick)
+    step_async = jax.jit(
+        lambda st, th, partner, active, stale: outer_lib.outer_step_stacked(
+            st, th, cfg, partner=partner, active=active, staleness=stale
+        )
+    )
+
+    rate = np.asarray(rates, dtype=np.float64)
+    if rate.shape != (world,):
+        raise ValueError(f"rates must have shape ({world},), got {rate.shape}")
+    if (rate <= 0).any() or (rate > 1).any():
+        raise ValueError("rates must lie in (0, 1]")
+    credit = np.zeros(world)
+    local = np.zeros(world, np.int64)
+    sync_count = np.zeros(world, np.int64)
+    last_sync = np.full(world, -1, np.int64)
+    merged_tick = 0
+    staleness_trace = []
+    while merged_tick < outer_steps:
+        credit += rate
+        grant = credit >= 1.0 - 1e-9
+        credit[grant] -= 1.0
+        local[grant] += 1
+        key, k = jax.random.split(key)
+        theta = inner_tick(theta, k, jnp.asarray(grant))
+        due = local >= (sync_count + 1) * inner_steps
+        if not due.any():
+            continue
+        tau = np.maximum(merged_tick - last_sync - 1, 0)
+        partner = jnp.asarray(
+            pairing.partner_table(merged_tick, world, seed=cfg.seed)
+        )
+        stale = None
+        if cfg.stale == "momentum" and tau.any():
+            stale = jnp.asarray(tau, jnp.float32)
+        state, theta = step_async(
+            state, theta, partner, jnp.asarray(due), stale
+        )
+        staleness_trace.append(float(tau[due].mean()))
+        sync_count[due] += 1
+        last_sync[due] = merged_tick
+        merged_tick += 1
+        record(state.phi)
+    return staleness_trace

@@ -45,16 +45,21 @@ def method_config(
     seed: int = 0,
     comm: CommConfig | None = None,
     kernels: KernelConfig | None = None,
+    stale: str = "naive",
 ) -> TrainerConfig:
     """Paper §4 hyper-parameters: β=0.7 both; NoLoCo α=0.5, m=50;
     DiLoCo α=0.3, m=100; inner AdamW + clip 1.0 + warmup-cosine.
     ``comm`` selects the gossip wire codec / payload fusing (repro.comm);
-    ``kernels`` the outer-update implementation (repro.kernels.dispatch)."""
+    ``kernels`` the outer-update implementation (repro.kernels.dispatch);
+    ``stale`` the asynchronous stale-Δ rule (``"naive"`` applies a delayed Δ
+    undiscounted, ``"momentum"`` scales it by 1/(1+τ) — NoLoCo-only, inert
+    on synchronous runs)."""
     sched = warmup_cosine(inner_lr, total_steps, warmup_steps=warmup)
     inner = AdamWConfig(lr=sched, weight_decay=0.1, clip_norm=1.0)
     if method == "noloco":
         outer = OuterConfig(method="noloco", alpha=0.5, beta=0.7,
-                            inner_steps=inner_steps or 50, seed=seed)
+                            inner_steps=inner_steps or 50, seed=seed,
+                            stale=stale)
     elif method == "diloco":
         outer = OuterConfig(method="diloco", alpha=0.3, beta=0.7,
                             inner_steps=inner_steps or 100, seed=seed)

@@ -276,6 +276,66 @@ class DistributedTrainer:
         self._drain_compiles(info, t0, outer_index)
         return new, True
 
+    def outer_step_async(self, state, *, sync_index: int, due, staleness):
+        """One merged sync tick of the asynchronous clock on the compiled
+        shard_map path (DESIGN.md §7).
+
+        The ppermute pairing is drawn over ALL round participants at key
+        ``sync_index`` (non-due replicas serve as passive sources — their
+        in-progress (Δ, φ) shards move, their state stays frozen); only the
+        ``due`` set applies the update, and under ``stale="momentum"`` each
+        shard's Δ is discounted by its staleness before the exchange.  The
+        (update-mask, staleness) pair is baked into the compiled program and
+        keyed in the pool alongside the membership view; the
+        full-participation / τ=0 tick is the LEGACY pool program — the same
+        compiled object, bit for bit."""
+        if self.outer_cfg.method != "noloco":
+            raise ValueError("asynchronous merged-tick sync is NoLoCo-only")
+        if self._streaming:
+            raise ValueError(
+                "the asynchronous clock does not compose with streaming "
+                "outer steps / φ-prefetch yet"
+            )
+        if self.elastic is None:
+            raise ValueError("outer_step_async needs an ElasticContext")
+
+        def partner_fn(parts):
+            return self._table_of(self.pool.pairs_for(
+                sync_index, parts, self.elastic.partition
+            )[1])
+
+        plan = self.elastic.plan_round(partner_fn)
+        if plan.all_absent:
+            fn, info = self._all_absent_program(sync_index)
+        else:
+            due = np.asarray(due, dtype=bool)
+            tau = np.asarray(staleness)
+            update = due.copy()
+            if plan.active is not None:
+                update &= np.asarray(plan.active, dtype=bool)
+            if update.all() and not tau.any():
+                # everyone due, nobody late: the legacy synchronous program
+                fn, info = self.pool.program(
+                    sync_index, plan.participants, self.elastic.partition
+                )
+            else:
+                stale_host = None
+                if self.outer_cfg.stale == "momentum" and tau.any():
+                    stale_host = tau
+                fn, info = self.pool.program(
+                    sync_index, plan.participants, self.elastic.partition,
+                    update_mask=update, staleness=stale_host,
+                )
+        t0 = time.time()
+        with compat.set_mesh(self.mesh):
+            theta, phi, delta, step_c = fn(
+                state["theta"], state["phi"], state["delta"], state["outer_step"]
+            )
+            new = dict(state, theta=theta, phi=phi, delta=delta,
+                       outer_step=step_c)
+        self._drain_compiles(info, t0, sync_index)
+        return new, True
+
     def _maybe_stream_sync(self, state):
         """One stream's staggered sync on the compiled shard_map path.
 
@@ -473,6 +533,10 @@ def main() -> None:
     ap.add_argument("--reassign-data", action="store_true",
                     help="redistribute dropped replicas' loader streams over "
                          "survivors (repro.core.elastic.stream_assignment)")
+    ap.add_argument("--stale", default="naive", choices=["naive", "momentum"],
+                    help="async stale-Δ rule for rate-heterogeneous fault "
+                         "plans: naive applies a delayed Δ as-is, momentum "
+                         "discounts it by 1/(1+τ)")
     add_engine_flags(ap)
     args = ap.parse_args()
 
@@ -499,14 +563,22 @@ def main() -> None:
 
         fault_plan = FaultPlan.load(args.fault_plan)
         elastic = ElasticContext(world=plan.replicas)
-        horizon = fault_plan.max_anchor_step(args.inner_steps)
-        if horizon >= args.steps:
-            print(f"WARNING: fault plan extends to step {horizon} but the run "
+        anchor = fault_plan.max_anchor_step(args.inner_steps)
+        if anchor >= args.steps:
+            print(f"WARNING: fault plan extends to step {anchor} but the run "
                   f"stops at {args.steps}; later events never fire", flush=True)
+        else:
+            horizon = fault_plan.max_effect_step(args.inner_steps)
+            if horizon > args.steps:
+                print(f"warning: fault-plan effects (straggle debts) extend "
+                      f"to step {horizon}, beyond --steps {args.steps}; "
+                      f"in-flight debts ride the checkpoint and resume "
+                      f"exactly", flush=True)
 
     trainer = DistributedTrainer(
         cfg=cfg, mesh=mesh, plan=plan,
-        outer_cfg=OuterConfig(method="noloco", inner_steps=args.inner_steps),
+        outer_cfg=OuterConfig(method="noloco", inner_steps=args.inner_steps,
+                              stale=args.stale),
         inner_cfg=AdamWConfig(lr=args.lr, weight_decay=0.0),
         comm_cfg=CommConfig(codec=args.codec, fuse=not args.no_fuse,
                             overlap=overlap, streams=args.stream_count),

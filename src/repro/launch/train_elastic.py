@@ -60,6 +60,8 @@ def run_elastic_training(
     impl: str = "auto",
     interpret: bool | None = None,
     reassign_data: bool = False,
+    stale: str = "naive",
+    async_clock: bool | None = None,
 ) -> dict[str, Any]:
     """Train under ``plan``; returns the engine result dict plus
     ``rounds`` (the simulator's per-round participation history) and the
@@ -73,7 +75,13 @@ def run_elastic_training(
     (streaming outer steps); ``overlap`` adds the §3.2 φ-prefetch — it
     defaults ON when ``stream_count > 1`` and composes with churn through
     the membership-epoch fallback (a stream whose pre-send pairing went
-    stale blocks once; the other streams stay overlapped)."""
+    stale blocks once; the other streams stay overlapped).
+
+    ``async_clock`` gives every replica its own round clock (per-replica
+    step rates from the plan's ``rate`` events; merged sync ticks exchange
+    stale Δs instead of blocking on stragglers — DESIGN.md §7).  It defaults
+    ON whenever the plan carries rate events; ``stale`` selects the stale-Δ
+    rule (``"naive"`` / ``"momentum"``)."""
     if overlap is None:
         overlap = stream_count > 1
     kcfg = KernelConfig(impl=impl, interpret=interpret)
@@ -83,10 +91,11 @@ def run_elastic_training(
         warmup=max((total_steps or steps) // 10, 1), inner_steps=inner_steps,
         seed=seed,
         comm=CommConfig(codec=codec, streams=stream_count, overlap=overlap),
-        kernels=kcfg,
+        kernels=kcfg, stale=stale,
     )
     program = GossipProgram(cfg, tcfg, replicas=replicas, seed=seed)
-    sim = SimCluster(program, plan, reassign_data=reassign_data)
+    sim = SimCluster(program, plan, reassign_data=reassign_data,
+                     async_clock=async_clock)
     loop = make_loop(
         sim,
         LoaderConfig(
@@ -138,6 +147,12 @@ def main() -> None:
     ap.add_argument("--reassign-data", action="store_true",
                     help="redistribute dropped replicas' loader streams over "
                          "survivors (default: skip them)")
+    ap.add_argument("--stale", default="naive", choices=["naive", "momentum"],
+                    help="async stale-Δ rule: naive applies a delayed Δ as-is, "
+                         "momentum discounts it by 1/(1+τ)")
+    ap.add_argument("--async-clock", action="store_true", default=None,
+                    help="per-replica round clocks (auto-on when the fault "
+                         "plan carries rate events)")
     ap.add_argument("--out", default=None)
     add_engine_flags(ap)
     args = ap.parse_args()
@@ -148,6 +163,11 @@ def main() -> None:
         cfg = cfg.reduced(vocab_size=min(cfg.vocab_size, 512), remat=False,
                           dtype="float32")
     plan = FaultPlan.load(args.fault_plan) if args.fault_plan else FaultPlan()
+    horizon = plan.max_effect_step(args.inner_steps)
+    if horizon > args.steps:
+        print(f"warning: fault-plan effects extend to step {horizon}, beyond "
+              f"--steps {args.steps}; in-flight straggle debts ride the "
+              f"checkpoint and resume exactly", flush=True)
     res = run_elastic_training(
         cfg, plan, method=args.method, replicas=args.replicas,
         per_replica_batch=args.batch, seq_len=args.seq, steps=args.steps,
@@ -159,6 +179,7 @@ def main() -> None:
         stream_count=args.stream_count,
         impl=args.impl, interpret=args.interpret,
         reassign_data=args.reassign_data,
+        stale=args.stale, async_clock=args.async_clock,
     )
     summary = {
         "arch": cfg.name, "method": args.method,
@@ -172,6 +193,9 @@ def main() -> None:
         "final_weight_std": res["final_weight_std"],
         "wall_s": round(res["wall_s"], 1),
     }
+    if "max_staleness" in res:
+        summary["max_staleness"] = res["max_staleness"]
+        summary["blocked_syncs"] = res["blocked_syncs"]
     print(json.dumps(summary))
     if args.out:
         res.pop("state")

@@ -230,6 +230,7 @@ def build_outer_step(
     comm_cfg: CommConfig | None = None,
     kernel_cfg: KernelConfig | None = None,
     active: Any | None = None,
+    staleness: Any | None = None,
     stream: int | None = None,
     partition: Any | None = None,
     consume_prefetch: bool = False,
@@ -270,7 +271,16 @@ def build_outer_step(
     always did, so full membership stays bit-identical to the static
     schedule.  Programs are keyed per (membership view, pairing slot, stream
     variant) by :class:`OuterProgramPool`; this builder never decides who
-    participates."""
+    participates.
+
+    ``staleness`` (optional host-side (world,) τ vector, ASYNC merged-tick
+    rounds only) bakes each shard's staleness into the program the same way
+    ``active`` is baked: the per-shard τ scalar feeds
+    :func:`~repro.core.outer.outer_step_sharded`'s ``staleness`` hook, which
+    applies the ``stale="momentum"`` 1/(1+τ) discount to that replica's OWN
+    Δ before the ppermute — the partner receives the discounted
+    contribution.  Incompatible with streamed programs (async rounds do not
+    compose with streaming)."""
     rep = plan.replica_axes
     rep_entry = plan.replica_entry
     if comm_cfg is None:
@@ -285,7 +295,10 @@ def build_outer_step(
             "stream=0 and a single-stream partition instead"
         )
     prefetching = streamed and (consume_prefetch or perm_presend is not None)
+    if streamed and staleness is not None:
+        raise ValueError("staleness (async rounds) does not compose with streaming")
     active_host = None if active is None else np.asarray(active, dtype=bool)
+    stale_host = None if staleness is None else np.asarray(staleness, dtype=np.float32)
 
     def body(theta_l, phi_l, delta_l, *rest):
         theta = _squeeze_replica(theta_l)
@@ -320,10 +333,13 @@ def build_outer_step(
                 out = out + (_unsqueeze_replica(pre),)
             return out + (new_state.step.reshape((1,)),)
         (step_l,) = rest
+        stale = None
+        if stale_host is not None:
+            stale = jnp.asarray(stale_host)[_local_replica_index(plan, mesh)]
         state = OuterState(phi=phi, delta=delta, step=step_l.reshape(()))
         new_state, new_theta = outer_lib.outer_step_sharded(
             state, theta, outer_cfg, axis_names=rep, perm=perm, comm_cfg=comm_cfg,
-            kernel_cfg=kernel_cfg, active_flag=flag,
+            kernel_cfg=kernel_cfg, active_flag=flag, staleness=stale,
         )
         if flag is not None:
             # freeze non-participants: keep pre-round (θ, φ, δ); the outer
@@ -510,6 +526,8 @@ class OuterProgramPool:
         consume: bool = False,
         presend_index: int | None = None,
         presend_membership: Membership | None = None,
+        update_mask: Any | None = None,
+        staleness: Any | None = None,
     ) -> tuple[Any, dict]:
         """Compiled program for round ``outer_index`` under the given view.
 
@@ -523,6 +541,17 @@ class OuterProgramPool:
         Both signature variants are part of the program key, so the elastic
         epoch-fallback (consume → blocking for one stream) is a pool lookup,
         never a rebuild of an existing entry.
+
+        ASYNC merged-tick rounds (per-replica round clocks, DESIGN.md §7):
+        ``update_mask`` is the host-side DUE set — only due replicas apply
+        the outer update this tick; everyone else passes through frozen but
+        still serves its in-progress (Δ, φ) over the ppermute as a passive
+        source.  ``staleness`` is the per-replica τ vector baked into the
+        program (``stale="momentum"`` discount; pass None for
+        ``stale="naive"``, where τ is telemetry-only).  Both become part of
+        the program key alongside the membership view, so the all-due τ=0
+        tick takes the ``(view, slot)`` entry — bit-identical to the
+        synchronous schedule.
 
         Returns ``(fn, info)`` with ``info = {key, slot, view, compiled,
         build_s, pool_size}`` — ``compiled`` marks a pool miss (the caller
@@ -556,6 +585,25 @@ class OuterProgramPool:
             # (its pairs self-loop, so it runs the self-momentum path) —
             # matching the stacked runtime's semantics exactly
             active = np.asarray(membership.mask, dtype=bool)
+        stale_vec = None
+        if update_mask is not None or staleness is not None:
+            if stream is not None:
+                raise ValueError(
+                    "async update_mask/staleness do not compose with streamed "
+                    "programs (SimCluster forbids the pairing at init)"
+                )
+            um_key = None
+            if update_mask is not None:
+                due = np.asarray(update_mask, dtype=bool)
+                # the update set is the due replicas; non-due participants
+                # freeze (passive sources over the ppermute)
+                active = due if active is None else (active & due)
+                um_key = tuple(bool(x) for x in due)
+            st_key = None
+            if staleness is not None:
+                stale_vec = np.asarray(staleness, dtype=np.float32)
+                st_key = tuple(float(x) for x in stale_vec)
+            key = (view, slot, "async", um_key, st_key)
         compiled = key not in self._programs
         build_s = 0.0
         if compiled:
@@ -565,7 +613,8 @@ class OuterProgramPool:
                 self._programs[key] = build_outer_step(
                     self.plan, self.mesh, self.param_specs, self.outer_cfg, perm,
                     comm_cfg=self.comm_cfg, kernel_cfg=self.kernel_cfg,
-                    active=active, stream=stream, partition=self.partition,
+                    active=active, staleness=stale_vec, stream=stream,
+                    partition=self.partition,
                     consume_prefetch=consume, perm_presend=perm_presend,
                 )
             build_s = time.time() - t0
@@ -573,6 +622,7 @@ class OuterProgramPool:
                 "slot": str(slot), "view": "full" if view is None else "elastic",
                 "epoch": None if membership is None else membership.epoch,
                 "stream": stream,
+                "async": update_mask is not None or staleness is not None,
                 "build_s": round(build_s, 4), "pool_size": len(self._programs),
             })
         else:

@@ -288,8 +288,15 @@ class SpecServeEngine(ServeEngine):
         budget tokens left can accept at most min(spec_k−1, rem−1) proposals
         (commit is capped at rem), so that is what each participation adds to
         the denominator — a perfect draft scores exactly 1.0 even on the
-        budget-tail rounds."""
-        return self.spec_accept_total / self.spec_prop_total if self.spec_prop_total else 0.0
+        budget-tail rounds.
+
+        A zero denominator (every round so far had rem == 1 for every slot,
+        or no spec round ran at all) is vacuously perfect: not one usable
+        proposal was rejected, so the rate is 1.0 — NOT 0.0, which would
+        falsely read as "the draft never matched", and NOT NaN."""
+        if not self.spec_prop_total:
+            return 1.0
+        return self.spec_accept_total / self.spec_prop_total
 
     # -- prefill: the draft walks the same chunks through its own caches ----
 
@@ -375,5 +382,7 @@ class SpecServeEngine(ServeEngine):
         return {
             "spec_rounds": occ.get("spec_rounds", 0),
             "spec_tokens": occ.get("spec_commit", 0),
-            "accept_rate": acc / prop if prop else 0.0,
+            # 0 usable proposals (e.g. max_new == 1: every round has rem == 1)
+            # is vacuously perfect — same convention as ``accept_rate``
+            "accept_rate": acc / prop if prop else 1.0,
         }

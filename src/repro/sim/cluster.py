@@ -25,9 +25,22 @@ outer steps.  SimCluster only does four things:
   * keeps an auditable ``history`` of events and per-round participation
     (partner tables included) for tests and telemetry.
 
-What it does NOT model (see DESIGN.md §7): wall-clock skew, message loss
-inside a surviving pair, Byzantine values, or asynchronous outer rounds —
-every fault is a round-granular participation change.
+Asynchronous rounds (DESIGN.md §7, "Asynchronous rounds & staleness"): when
+the plan carries ``rate`` events (or ``async_clock=True``), every replica
+gets its OWN round clock — a :class:`ReplicaClock` grants inner steps by
+rate credit, so a slow replica reaches sync index *i* late and exchanges a
+stale Δ at the next MERGED sync tick instead of sitting the round out.  The
+pairing at a merged tick is drawn over all round participants (an involution
+— non-due replicas serve as passive, frozen sources), only due replicas
+apply the update, and each contribution's staleness τ (merged ticks skipped
+since that replica's previous sync) feeds the ``stale="momentum"`` discount
+(:func:`repro.core.outer.stale_discount`).  A rate-1 world is bit-identical
+to the synchronous path: every tick grants every member a step, every merged
+tick's due set is the full active set, and the τ=0 exchange takes the legacy
+compiled program.
+
+What it does NOT model (see DESIGN.md §7): message loss inside a surviving
+pair, Byzantine values — faults are participation/clock-rate changes.
 """
 
 from __future__ import annotations
@@ -44,13 +57,103 @@ from repro.sim.faults import FaultEvent, FaultPlan
 
 PyTree = Any
 
-__all__ = ["SimCluster"]
+__all__ = ["ReplicaClock", "SimCluster"]
+
+
+class ReplicaClock:
+    """Per-replica round clocks: pure host-side state, fully checkpointable.
+
+    Wall time is the TrainLoop's step counter (one tick per loop step).  Each
+    replica earns inner steps at its ``rate`` (credits accumulate; a step is
+    granted when credit reaches 1), so ``local_step`` counts the steps a
+    replica ACTUALLY took.  Replica ``r`` is *due* for its next sync once
+    ``local_step[r] >= (sync_count[r] + 1) * m`` — heterogeneous rates put
+    replicas on different sync indices.  Whenever the due set is non-empty
+    the cluster runs one MERGED sync tick (counter ``merged_tick``); a due
+    replica's staleness τ is the number of merged ticks it skipped since its
+    own previous sync — stationary at ``1/rate − 1`` for a constant-rate
+    straggler, and exactly 0 everywhere in a rate-1 world.
+    """
+
+    def __init__(self, world: int, inner_steps: int):
+        self.world = int(world)
+        self.inner_steps = int(inner_steps)
+        self.rate = np.ones((world,), dtype=np.float64)
+        self.credit = np.zeros((world,), dtype=np.float64)
+        self.local_step = np.zeros((world,), dtype=np.int64)
+        self.sync_count = np.zeros((world,), dtype=np.int64)
+        self.last_sync_tick = np.full((world,), -1, dtype=np.int64)
+        self.merged_tick = 0
+
+    def set_rate(self, replicas, rate: float) -> None:
+        for r in replicas:
+            self.rate[int(r)] = float(rate)
+
+    def tick(self, member_mask: np.ndarray) -> np.ndarray:
+        """Advance one wall tick; returns the bool step-grant mask.
+
+        Non-members neither accrue credit nor step (their clock is paused —
+        a rejoin resumes it without a backlog burst)."""
+        member = np.asarray(member_mask, dtype=bool)
+        self.credit = np.where(member, self.credit + self.rate, self.credit)
+        # 1e-9 slack absorbs float accumulation drift for rates like 1/3
+        grant = member & (self.credit >= 1.0 - 1e-9)
+        self.credit = np.where(grant, self.credit - 1.0, self.credit)
+        self.local_step = np.where(grant, self.local_step + 1, self.local_step)
+        return grant
+
+    def due_mask(self, member_mask: np.ndarray) -> np.ndarray:
+        member = np.asarray(member_mask, dtype=bool)
+        m = self.inner_steps
+        return member & (self.local_step >= (self.sync_count + 1) * m)
+
+    def staleness(self) -> np.ndarray:
+        """τ per replica at the CURRENT merged tick: ticks skipped since the
+        replica's own previous sync (0 for a replica that synced last tick,
+        and 0 for everyone at the very first tick)."""
+        return np.maximum(self.merged_tick - self.last_sync_tick - 1, 0)
+
+    def advance_sync(self, due: np.ndarray) -> None:
+        """Account one merged sync tick: ``due`` replicas' sync indices move."""
+        due = np.asarray(due, dtype=bool)
+        self.sync_count = np.where(due, self.sync_count + 1, self.sync_count)
+        self.last_sync_tick = np.where(due, self.merged_tick, self.last_sync_tick)
+        self.merged_tick += 1
+
+    # -- checkpoint view ----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "rate": self.rate.copy(),
+            "credit": self.credit.copy(),
+            "local_step": self.local_step.copy(),
+            "sync_count": self.sync_count.copy(),
+            "last_sync_tick": self.last_sync_tick.copy(),
+            "merged_tick": np.int64(self.merged_tick),
+        }
+
+    def load_state_dict(self, tree: dict) -> None:
+        self.rate = np.asarray(tree["rate"], dtype=np.float64).copy()
+        self.credit = np.asarray(tree["credit"], dtype=np.float64).copy()
+        self.local_step = np.asarray(tree["local_step"], dtype=np.int64).copy()
+        self.sync_count = np.asarray(tree["sync_count"], dtype=np.int64).copy()
+        self.last_sync_tick = np.asarray(
+            tree["last_sync_tick"], dtype=np.int64
+        ).copy()
+        self.merged_tick = int(tree["merged_tick"])
 
 
 class SimCluster:
     """Deterministic fault-injecting wrapper around an elastic program."""
 
-    def __init__(self, program, plan: FaultPlan, *, reassign_data: bool = False):
+    def __init__(
+        self,
+        program,
+        plan: FaultPlan,
+        *,
+        reassign_data: bool = False,
+        async_clock: bool | None = None,
+    ):
         if getattr(program, "elastic", None) is None:
             raise ValueError(
                 "SimCluster needs a program with an ElasticContext attached "
@@ -64,6 +167,34 @@ class SimCluster:
         self.reassign_data = reassign_data
         self._straggle: dict[int, int] = {}  # replica -> rounds left to miss
         self.history: list[dict] = []
+        self._async_events: list[dict] = []  # per-sync records the loop drains
+        self.blocked_syncs = 0     # forced self-pairs while peers existed
+        self.max_staleness = 0     # max τ any exchange contributed
+        # asynchronous per-replica clock: auto-enabled by rate events in the
+        # plan, forced on/off by async_clock (off + rate events is an error)
+        has_rates = bool(plan.rate_events())
+        if async_clock is None:
+            async_clock = has_rates
+        if has_rates and not async_clock:
+            raise ValueError(
+                "the fault plan has rate events but async_clock=False: rate "
+                "multipliers only act through the asynchronous replica clock"
+            )
+        self.clock: ReplicaClock | None = None
+        if async_clock:
+            if not hasattr(program, "outer_step_async"):
+                raise ValueError(
+                    "asynchronous clock needs a program exposing "
+                    "outer_step_async (GossipProgram / DistributedProgram)"
+                )
+            ccfg = self._comm_cfg()
+            if ccfg is not None and (ccfg.streams > 1 or ccfg.overlap):
+                raise ValueError(
+                    "the asynchronous replica clock does not compose with "
+                    "streaming outer steps / φ-prefetch yet — run with "
+                    "streams=1, overlap=False"
+                )
+            self.clock = ReplicaClock(self.replicas, self._inner_steps())
 
     # -- membership passthrough (loop telemetry reads these) ----------------
 
@@ -83,6 +214,12 @@ class SimCluster:
         if hasattr(prog, "tcfg"):
             return prog.tcfg.outer.inner_steps
         return prog.trainer.outer_cfg.inner_steps
+
+    def _comm_cfg(self):
+        prog = self.program
+        if hasattr(prog, "tcfg"):
+            return prog.tcfg.comm
+        return getattr(prog.trainer, "comm_cfg", None)
 
     def _apply_events(self, state, t: int):
         for ev in self.plan.events_at(t, self._inner_steps()):
@@ -118,6 +255,11 @@ class SimCluster:
                 self._straggle[r] = max(self._straggle.get(r, 0), ev.rounds)
             rec["replicas"] = sorted(ev.replicas)
             rec["rounds"] = ev.rounds
+        elif ev.kind == "rate":
+            # validated at init: rate events imply the async clock exists
+            self.clock.set_rate(ev.replicas, ev.rate)
+            rec["replicas"] = sorted(ev.replicas)
+            rec["rate"] = ev.rate
         elif ev.kind == "partition":
             self.program.set_partition(ev.groups)
             rec["groups"] = [sorted(g) for g in ev.groups]
@@ -134,6 +276,11 @@ class SimCluster:
     def inner_step(self, state, batch: dict, rng):
         t = self.program.inner_step_index(state)
         state = self._apply_events(state, t)
+        if self.clock is not None:
+            # grant this tick's inner steps by rate credit; replicas whose
+            # clock did not fire are frozen through the usual active mask
+            grant = self.clock.tick(np.asarray(self.program.membership.mask))
+            self.program.elastic.tick_active = grant
         if self.reassign_data and not self.program.membership.is_full:
             # survivors adopt dropped replicas' streams (time-multiplexed);
             # a pure function of (membership, t), so resume replays it exactly
@@ -142,7 +289,17 @@ class SimCluster:
         # the program itself aggregates loss over active replicas
         return self.program.inner_step(state, batch, rng)
 
+    def _blocked_count(self, partner, participants: set[int]) -> int:
+        """Forced self-pairs: participants the table left alone while other
+        participants existed — the blocking a synchronous round charges to a
+        straggler (its partner has nobody) and the async clock eliminates."""
+        if partner is None or len(participants) <= 1:
+            return 0
+        return sum(1 for r in participants if int(partner[r]) == r)
+
     def maybe_outer_step(self, state):
+        if self.clock is not None:
+            return self._maybe_outer_step_async(state)
         if not self.program.sync_due(state):
             return state, False
         round_idx = self.program.outer_round_index(state)
@@ -156,17 +313,85 @@ class SimCluster:
             r: k - 1 for r, k in self._straggle.items() if k > 1
         }
         partner = self.program.last_partner  # the table the round REALLY used
+        participants = set(self.program.membership.active_ids) - absent
+        blocked = self._blocked_count(partner, participants)
+        self.blocked_syncs += blocked
         self.history.append({
             "event": "round",
             "round": round_idx,
             "active": list(self.program.membership.active_ids),
             "absent": sorted(absent),
             "partner": None if partner is None else [int(p) for p in partner],
+            "blocked": blocked,
             "partition": (
                 None if self.program.partition is None
                 else [sorted(g) for g in self.program.partition]
             ),
         })
+        if synced:
+            self._async_events.append({
+                "mode": "sync",
+                "sync_index": round_idx,
+                "due": sorted(participants),
+                "staleness": [0] * self.replicas,
+                "max_staleness": 0,
+                "blocked": blocked,
+            })
+        return state, synced
+
+    def _maybe_outer_step_async(self, state):
+        """One merged sync tick of the asynchronous clock (if any replica is
+        due): pairing over all round participants, update applied by the due
+        set, staleness-stamped contributions."""
+        mem_mask = np.asarray(self.program.membership.mask, dtype=bool)
+        due = self.clock.due_mask(mem_mask)
+        absent = frozenset(
+            r for r, k in self._straggle.items() if k > 0 and mem_mask[r]
+        )
+        if absent:
+            due = due.copy()
+            due[list(absent)] = False
+        if not due.any():
+            return state, False
+        tick = self.clock.merged_tick
+        staleness = self.clock.staleness()
+        self.program.round_absent = absent
+        state, synced = self.program.outer_step_async(
+            state, sync_index=tick, due=due, staleness=staleness
+        )
+        self.clock.advance_sync(due)
+        self._straggle = {r: k - 1 for r, k in self._straggle.items() if k > 1}
+        partner = self.program.last_partner
+        participants = set(self.program.membership.active_ids) - absent
+        due_ids = [int(r) for r in np.nonzero(due)[0]]
+        blocked = self._blocked_count(partner, participants)
+        self.blocked_syncs += blocked
+        tau_due = [int(staleness[r]) for r in due_ids]
+        max_tau = max(tau_due, default=0)
+        self.max_staleness = max(self.max_staleness, max_tau)
+        self.history.append({
+            "event": "round",
+            "round": tick,
+            "active": list(self.program.membership.active_ids),
+            "absent": sorted(absent),
+            "due": due_ids,
+            "staleness": [int(s) for s in staleness],
+            "partner": None if partner is None else [int(p) for p in partner],
+            "blocked": blocked,
+            "partition": (
+                None if self.program.partition is None
+                else [sorted(g) for g in self.program.partition]
+            ),
+        })
+        if synced:
+            self._async_events.append({
+                "mode": "async",
+                "sync_index": tick,
+                "due": due_ids,
+                "staleness": [int(s) for s in staleness],
+                "max_staleness": max_tau,
+                "blocked": blocked,
+            })
         return state, synced
 
     def eval_step(self, state, batch: dict, rng) -> float:
@@ -179,11 +404,16 @@ class SimCluster:
         tree = self.program.state_pytree(state)
         # in-flight straggler debts must survive a restart, or a resumed run
         # would let a mid-straggle replica back into rounds it missed in the
-        # uninterrupted trajectory
+        # uninterrupted trajectory — even (especially) when the debt outlives
+        # this run's --steps horizon and only the resumed run spends it
         straggle = np.zeros((self.replicas,), dtype=np.int64)
         for r, k in self._straggle.items():
             straggle[r] = k
         tree["sim"] = {"straggle": straggle}
+        if self.clock is not None:
+            # the per-replica round clocks (rates, credits, local steps, sync
+            # indices, merged-tick counter) are exactly as resume-critical
+            tree["sim"]["clock"] = self.clock.state_dict()
         return tree
 
     def load_state_pytree(self, state, tree: dict):
@@ -193,6 +423,10 @@ class SimCluster:
             self._straggle = {
                 int(r): int(k) for r, k in enumerate(straggle) if k > 0
             }
+            if "clock" in tree["sim"]:
+                if self.clock is None:
+                    self.clock = ReplicaClock(self.replicas, self._inner_steps())
+                self.clock.load_state_dict(tree["sim"]["clock"])
         return state
 
     def comm_cost(self):
@@ -215,6 +449,15 @@ class SimCluster:
     def pool_stats(self) -> dict | None:
         stats = getattr(self.program, "pool_stats", None)
         return None if stats is None else stats()
+
+    def drain_async_events(self) -> list[dict]:
+        """Per-sync participation/staleness records since the last drain —
+        the TrainLoop turns these into ``outer_async`` telemetry events and
+        the ``max_staleness`` / ``blocked_syncs`` summary fields (emitted for
+        BOTH clock modes, so a synchronous baseline's blocked rounds are
+        directly comparable to the async run's)."""
+        events, self._async_events = self._async_events, []
+        return events
 
     # -- diagnostics --------------------------------------------------------
 

@@ -10,6 +10,7 @@ round's exchange).  Plans are plain JSON on the wire::
         {"kind": "drop",    "round": 2, "replicas": [3, 5]},
         {"kind": "rejoin",  "round": 5, "replicas": [3, 5]},
         {"kind": "straggle","round": 3, "replicas": [1], "rounds": 1},
+        {"kind": "rate",    "step": 0, "replicas": [1], "rate": 0.5},
         {"kind": "partition","round": 4, "groups": [[0, 1, 2, 3], [4, 5, 6, 7]]},
         {"kind": "heal",    "round": 6}
     ]}
@@ -28,6 +29,14 @@ Event kinds:
     membership): their partners self-pair, their own (φ, δ, θ-reset) are
     skipped, inner training continues — the next round they join sees a
     Δ spanning the missed rounds' inner steps.
+``rate``
+    Replicas change wall-clock speed: from the anchor step on, the replica
+    earns inner steps at ``rate`` times the full tick rate (``rate: 1.0``
+    restores full speed).  Unlike ``straggle`` — a one-shot participation
+    debt measured in whole rounds — a rate multiplier puts the replica on
+    its OWN round clock: it reaches each sync index late and exchanges a
+    stale Δ instead of sitting the round out (SimCluster's asynchronous
+    clock, DESIGN.md §7).  Rates persist until changed by a later event.
 ``partition``
     The pairing graph splits into ``groups``: pairs never cross a component
     until a ``heal`` event (gossip keeps running inside each island).
@@ -43,7 +52,7 @@ from typing import Any, Iterable, Sequence
 
 __all__ = ["FaultEvent", "FaultPlan", "KINDS"]
 
-KINDS = ("drop", "rejoin", "straggle", "partition", "heal")
+KINDS = ("drop", "rejoin", "straggle", "rate", "partition", "heal")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +62,7 @@ class FaultEvent:
     step: int | None = None     # inner step the event applies before
     round: int | None = None    # outer round whose inner phase it opens
     rounds: int = 1             # straggle: consecutive outer rounds missed
+    rate: float = 1.0           # rate: step-rate multiplier (0 < rate <= 1)
     source: int | None = None   # rejoin: peer whose φ seeds the warm start
     groups: tuple[tuple[int, ...], ...] = ()  # partition components
 
@@ -68,6 +78,20 @@ class FaultEvent:
             return int(self.step)
         return int(self.round) * int(inner_steps)
 
+    def effect_end_step(self, inner_steps: int) -> int:
+        """The last inner step this event still has an effect at.
+
+        For most kinds that is the anchor step itself, but a ``straggle``
+        debt stays in force for ``rounds`` further outer rounds — a run whose
+        horizon truncates the debt must checkpoint it and resume exactly
+        (the SimCluster persists in-flight debts in its state pytree).  A
+        ``rate`` multiplier persists until a later rate event, so its effect
+        is open-ended and launchers should not warn about it."""
+        anchor = self.resolved_step(inner_steps)
+        if self.kind == "straggle":
+            return anchor + int(self.rounds) * int(inner_steps)
+        return anchor
+
     def validate(self, world: int) -> None:
         if self.kind not in KINDS:
             raise ValueError(f"unknown fault kind: {self.kind!r} (one of {KINDS})")
@@ -79,13 +103,18 @@ class FaultEvent:
         anchor = self.step if self.step is not None else self.round
         if anchor < 0:
             raise ValueError(f"{self.kind} event anchored at negative {anchor}")
-        if self.kind in ("drop", "rejoin", "straggle") and not self.replicas:
+        if self.kind in ("drop", "rejoin", "straggle", "rate") and not self.replicas:
             raise ValueError(f"{self.kind} event needs replicas")
         for r in self.replicas:
             if not 0 <= r < world:
                 raise ValueError(f"replica id {r} outside world {world}")
         if self.kind == "straggle" and self.rounds < 1:
             raise ValueError("straggle needs rounds >= 1")
+        if self.kind == "rate" and not 0.0 < self.rate <= 1.0:
+            raise ValueError(
+                f"rate event needs 0 < rate <= 1 (rates are relative to the "
+                f"fastest replica's tick rate; got {self.rate})"
+            )
         if self.kind == "partition":
             if not self.groups:
                 raise ValueError("partition event needs groups")
@@ -108,6 +137,8 @@ class FaultEvent:
             out["replicas"] = list(self.replicas)
         if self.kind == "straggle":
             out["rounds"] = self.rounds
+        if self.kind == "rate":
+            out["rate"] = self.rate
         if self.source is not None:
             out["source"] = self.source
         if self.groups:
@@ -155,6 +186,26 @@ class FaultPlan:
         if not self.events:
             return -1
         return max(ev.resolved_step(inner_steps) for ev in self.events)
+
+    def max_effect_step(self, inner_steps: int) -> int:
+        """The last inner step any event still has an effect at (-1 for an
+        empty plan).  Straggle debts extend ``rounds`` outer rounds past
+        their anchor, so this can exceed :meth:`max_anchor_step` — launchers
+        warn against THIS when a plan's effects outlive ``--steps`` (the
+        in-flight part checkpoints and resumes exactly; the warning is for
+        the case where the run is never resumed).  Open-ended ``rate``
+        events are excluded: a persistent rate is not a truncation."""
+        if not self.events:
+            return -1
+        return max(
+            ev.effect_end_step(inner_steps)
+            for ev in self.events
+        )
+
+    def rate_events(self) -> list[FaultEvent]:
+        """The rate events in the plan (SimCluster auto-enables its
+        asynchronous per-replica clock when any are present)."""
+        return [ev for ev in self.events if ev.kind == "rate"]
 
     def to_json(self) -> str:
         return json.dumps({"events": [ev.as_dict() for ev in self.events]}, indent=2)

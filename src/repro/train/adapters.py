@@ -296,6 +296,50 @@ class GossipProgram(_ElasticSurface):
         active = None if plan.active is None else jnp.asarray(plan.active)
         return self.trainer.outer_step(state, partner=partner, active=active), True
 
+    def outer_step_async(self, state, *, sync_index: int, due, staleness):
+        """One merged sync tick of the asynchronous clock (DESIGN.md §7).
+
+        The pairing is drawn over ALL round participants at key
+        ``sync_index`` (the merged-tick counter) — an involution, so non-due
+        participants serve as passive sources whose in-progress (Δ, φ) the
+        gather reads — but only ``due`` replicas apply the update (the
+        active mask freezes everyone else).  Under ``stale="momentum"`` each
+        contribution is discounted by its staleness τ before the exchange.
+        A rate-1 world takes the full-participation/τ=0 fast path: the exact
+        legacy synchronous call, bit for bit."""
+        if self.tcfg.outer.method != "noloco":
+            raise ValueError("asynchronous merged-tick sync is NoLoCo-only")
+        seed = self.tcfg.outer.seed
+
+        def partner_fn(parts):
+            return pairing_lib.elastic_partner_table(
+                sync_index, parts, seed=seed, groups=self.elastic.partition,
+            )
+
+        plan = self.elastic.plan_round(partner_fn)
+        if plan.all_absent:
+            # every member is in straggle debt: frozen no-exchange round
+            return self.trainer.outer_step(
+                state, partner=jnp.asarray(plan.partner),
+                active=jnp.asarray(plan.active),
+            ), True
+        due = np.asarray(due, dtype=bool)
+        tau = np.asarray(staleness)
+        update = due.copy()
+        if plan.active is not None:
+            update &= np.asarray(plan.active, dtype=bool)
+        partner = jnp.asarray(plan.partner)
+        if update.all() and not tau.any():
+            # everyone due, nobody late: the legacy synchronous exchange
+            return self.trainer.outer_step(state, partner=partner, active=None), True
+        stale_arr = None
+        if self.tcfg.outer.stale == "momentum" and tau.any():
+            stale_arr = jnp.asarray(tau, jnp.float32)
+        return self.trainer.outer_step(
+            state, partner=partner, active=jnp.asarray(update),
+            staleness=stale_arr,
+        ), True
+
     def _maybe_stream_sync(self, state):
         """One stream's staggered sync (DESIGN.md §2, streaming outer steps).
 
@@ -540,6 +584,11 @@ class DistributedProgram(_ElasticSurface):
 
     def maybe_outer_step(self, state):
         return self.trainer.maybe_outer_step(state)
+
+    def outer_step_async(self, state, *, sync_index: int, due, staleness):
+        return self.trainer.outer_step_async(
+            state, sync_index=sync_index, due=due, staleness=staleness
+        )
 
     def eval_step(self, state, batch, rng) -> float:
         losses = self.trainer.eval_loss(state, self._to_global(batch))

@@ -151,6 +151,8 @@ class TrainLoop:
         blocking_bytes = 0
         total_tokens = 0
         recompiles = 0
+        max_staleness = 0
+        blocked_syncs = 0
         # elastic programs expose an epoch-stamped Membership; emit a
         # telemetry event whenever the view changes (drop / rejoin)
         last_epoch = getattr(self.program, "membership_epoch", None)
@@ -176,6 +178,16 @@ class TrainLoop:
                 for ev in drain():
                     recompiles += 1
                     self._emit("recompile", step=t + 1, **ev)
+            # async merged-tick rounds (SimCluster per-replica clocks): one
+            # event per sync carrying the due set, per-replica staleness τ and
+            # the blocked-participant count; the synchronous baseline emits
+            # the same shape (τ≡0) so blocked/idle comparisons line up
+            adrain = getattr(self.program, "drain_async_events", None)
+            if adrain is not None:
+                for ev in adrain():
+                    max_staleness = max(max_staleness, int(ev.get("max_staleness", 0)))
+                    blocked_syncs += int(ev.get("blocked", 0))
+                    self._emit("outer_async", step=t + 1, **ev)
             epoch = getattr(self.program, "membership_epoch", None)
             if epoch != last_epoch:
                 last_epoch = epoch
@@ -260,6 +272,9 @@ class TrainLoop:
             "recompiles": recompiles,
             "stream_count": getattr(cost, "stream_count", 1) if cost else 1,
         }
+        if getattr(self.program, "drain_async_events", None) is not None:
+            summary["max_staleness"] = max_staleness
+            summary["blocked_syncs"] = blocked_syncs
         stats_fn = getattr(self.program, "pool_stats", None)
         pool_stats = stats_fn() if stats_fn is not None else None
         if pool_stats is not None:

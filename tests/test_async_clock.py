@@ -1,0 +1,307 @@
+"""Property + acceptance tests for the asynchronous per-replica round clock
+(DESIGN.md §7): monotone sync indices, rate-1 bit-identity with the
+synchronous engine, stale-rule reduction at τ=0, pairing involution at merged
+ticks, and the 2x-straggler zero-blocked-syncs acceptance scenario.
+
+Property tests run under hypothesis when it is installed; without it they
+degrade to a deterministic seeded sweep of the same strategies (the container
+does not ship hypothesis and installing packages is off the table), so the
+invariants are exercised either way.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.launch.train_elastic import run_elastic_training
+from repro.sim import FaultEvent, FaultPlan
+from repro.sim.cluster import ReplicaClock
+
+# --------------------------------------------------------------------------
+# hypothesis shim: real strategies when available, a deterministic seeded
+# sweep of equivalent draws when not
+# --------------------------------------------------------------------------
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: float(lo + (hi - lo) * rng.random()))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*a, **kw):
+                examples = getattr(wrapper, "_max_examples", 25)
+                for i in range(examples):
+                    rng = np.random.default_rng(
+                        abs(hash((fn.__name__, i))) % (2**32)
+                    )
+                    fn(*a, **{k: s.draw(rng) for k, s in strategies.items()},
+                       **kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._hypothesis_inner = fn
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=25, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+
+# --------------------------------------------------------------------------
+# clock properties (cheap: pure host-side ReplicaClock)
+# --------------------------------------------------------------------------
+
+RATE_CHOICES = (1.0, 0.5, 1.0 / 3.0, 0.25, 0.1)
+
+
+def _drive(world, rates, m, ticks):
+    """Run the clock for ``ticks`` wall ticks; returns the per-merged-tick
+    trace of (due mask, staleness, sync_count snapshot)."""
+    clock = ReplicaClock(world, m)
+    for r, rho in enumerate(rates):
+        clock.set_rate([r], rho)
+    member = np.ones(world, dtype=bool)
+    trace = []
+    for _ in range(ticks):
+        clock.tick(member)
+        due = clock.due_mask(member)
+        if not due.any():
+            continue
+        tau = clock.staleness()
+        clock.advance_sync(due)
+        trace.append((due.copy(), tau.copy(), clock.sync_count.copy()))
+    return clock, trace
+
+
+@given(world=st.integers(2, 12), seed=st.integers(0, 10**6),
+       m=st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_clock_sync_indices_monotone_and_consistent(world, seed, m):
+    """Per-replica sync indices only ever move forward, one at a time, and a
+    replica is due only once it has banked the next full inner phase."""
+    rng = np.random.default_rng(seed)
+    rates = [RATE_CHOICES[int(rng.integers(len(RATE_CHOICES)))]
+             for _ in range(world)]
+    clock, trace = _drive(world, rates, m, ticks=12 * m)
+    prev = np.zeros(world, dtype=np.int64)
+    for due, tau, counts in trace:
+        step = counts - prev
+        assert ((step == 0) | (step == 1)).all(), (prev, counts)
+        np.testing.assert_array_equal(step == 1, due)  # exactly the due set
+        assert (tau >= 0).all()
+        prev = counts
+    # every replica's banked local steps cover the syncs it has been charged
+    assert (clock.local_step >= clock.sync_count * m).all()
+    # and nobody is owed more than one pending sync phase of steps
+    assert (clock.local_step < (clock.sync_count + 2) * m).all()
+
+
+@given(world=st.integers(2, 12), m=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_clock_rate_one_world_has_zero_staleness(world, m):
+    """A homogeneous rate-1 world: every replica is due at every merged tick,
+    merged ticks land exactly every m wall ticks, and τ is identically 0 —
+    the precondition for the bitwise legacy fast path."""
+    _, trace = _drive(world, [1.0] * world, m, ticks=8 * m)
+    assert len(trace) == 8
+    for due, tau, _ in trace:
+        assert due.all()
+        assert not tau.any()
+
+
+@given(seed=st.integers(0, 10**6), m=st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_clock_staleness_stationary_at_inverse_rate(seed, m):
+    """A constant-rate straggler's τ settles at 1/ρ − 1 (the 2x replica of
+    the acceptance scenario skips exactly one merged tick per sync)."""
+    rng = np.random.default_rng(seed)
+    rho = float(rng.choice([0.5, 0.25]))
+    world = int(rng.integers(3, 9))
+    slow = int(rng.integers(world))
+    rates = [1.0] * world
+    rates[slow] = rho
+    _, trace = _drive(world, rates, m, ticks=int(40 * m / rho))
+    taus = [int(tau[slow]) for due, tau, _ in trace if due[slow]]
+    assert taus, "straggler never synced"
+    expect = round(1.0 / rho) - 1
+    # discard the warm-up sync; after that the clock is periodic
+    assert all(t == expect for t in taus[1:]), (taus, expect)
+
+
+def test_clock_checkpoint_roundtrip_mid_flight():
+    """state_dict/load_state_dict restore credits, local steps and merged-tick
+    counters exactly — the continued trace equals the uninterrupted one."""
+    rates = [0.5, 1.0, 1.0, 1.0 / 3.0]
+    full_clock, full = _drive(4, rates, 3, ticks=60)
+    half_clock, _ = _drive(4, rates, 3, ticks=30)
+    resumed = ReplicaClock(4, 3)
+    resumed.load_state_dict(half_clock.state_dict())
+    member = np.ones(4, dtype=bool)
+    cont = []
+    for _ in range(30):
+        resumed.tick(member)
+        due = resumed.due_mask(member)
+        if not due.any():
+            continue
+        tau = resumed.staleness()
+        resumed.advance_sync(due)
+        cont.append((due.copy(), tau.copy(), resumed.sync_count.copy()))
+    tail = full[len(full) - len(cont):]
+    assert len(cont) == len(tail)
+    for (d1, t1, c1), (d2, t2, c2) in zip(tail, cont):
+        np.testing.assert_array_equal(d1, d2)
+        np.testing.assert_array_equal(t1, t2)
+        np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(full_clock.local_step, resumed.local_step)
+
+
+# --------------------------------------------------------------------------
+# engine-level: rate-1 bit identity, τ=0 reduction, pairing involution,
+# and the 2x-straggler acceptance scenario
+# --------------------------------------------------------------------------
+
+TINY = ModelConfig(
+    name="tiny-async", num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=128, dtype="float32", remat=False,
+)
+
+KW = dict(replicas=4, per_replica_batch=2, seq_len=32, steps=12,
+          inner_steps=3, inner_lr=3e-3, eval_every=0, seed=0, total_steps=12)
+
+
+@pytest.fixture(scope="module")
+def legacy_sync():
+    return run_elastic_training(TINY, FaultPlan(), **KW)
+
+
+@pytest.mark.parametrize("stale", ["naive", "momentum"])
+def test_rate_one_async_world_bitwise_identical_to_synchronous(
+    legacy_sync, stale
+):
+    """async_clock=True with no rate events is a rate-1 world: τ ≡ 0, so BOTH
+    stale rules must reduce to the legacy synchronous engine bit-for-bit
+    (losses and final θ exactly equal — same compiled program, in fact)."""
+    res = run_elastic_training(
+        TINY, FaultPlan(), async_clock=True, stale=stale, **KW
+    )
+    np.testing.assert_array_equal(
+        np.asarray(legacy_sync["losses"]), np.asarray(res["losses"])
+    )
+    for a, b in zip(
+        jax.tree.leaves(legacy_sync["state"].theta),
+        jax.tree.leaves(res["state"].theta),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res["max_staleness"] == 0
+    assert res["blocked_syncs"] == 0
+
+
+@pytest.fixture(scope="module")
+def straggler_async():
+    plan = FaultPlan([
+        FaultEvent(kind="rate", round=0, replicas=[1], rate=0.5)
+    ])
+    return run_elastic_training(
+        TINY, plan, **{**KW, "replicas": 8, "steps": 24, "total_steps": 24}
+    )
+
+
+def test_two_x_straggler_records_zero_blocked_syncs(straggler_async):
+    """The acceptance scenario: a 2x straggler on its own clock syncs late
+    with a stale Δ instead of forcing self-pairs on the survivors — zero
+    blocked syncs, max τ = 1/ρ − 1 = 1."""
+    assert straggler_async["blocked_syncs"] == 0
+    assert straggler_async["max_staleness"] == 1
+    # the straggler missed no round outright: it is either due or a passive
+    # gossip source at every merged tick
+    assert all(r["absent"] == [] for r in straggler_async["rounds"])
+    # and it really did run at half rate: due at every OTHER merged tick
+    due_hist = [1 in r["due"] for r in straggler_async["fault_history"]
+                if r.get("event") == "round"]
+    assert True in due_hist and False in due_hist
+
+
+def test_round_synchronous_straggler_blocks_every_other_round():
+    """The baseline the async clock is measured against: the same 2x
+    slowdown modeled round-synchronously (sitting out every other round)
+    forces a self-pair on an odd-man-out survivor in EVERY straggled round."""
+    rounds = 6
+    plan = FaultPlan([
+        FaultEvent(kind="straggle", round=r, replicas=[1])
+        for r in range(1, rounds, 2)
+    ])
+    res = run_elastic_training(
+        TINY, plan, **{**KW, "replicas": 8, "steps": 24, "total_steps": 24,
+                       "inner_steps": 4}
+    )
+    assert res["blocked_syncs"] >= len(range(1, rounds, 2))
+    assert res["max_staleness"] == 0
+
+
+def test_merged_tick_pairing_is_involution_over_participants(straggler_async):
+    """At every merged tick the pairing is drawn over ALL participants (due
+    or passive) and must be a self-inverse matching, exactly like the
+    synchronous round pairing."""
+    ticks = [r for r in straggler_async["fault_history"]
+             if r.get("event") == "round"]
+    assert ticks
+    for rec in ticks:
+        partner = rec["partner"]
+        assert partner is not None
+        participants = set(rec["active"]) - set(rec["absent"])
+        for r in participants:
+            assert partner[partner[r]] == r, (rec,)
+
+
+def test_staleness_telemetry_present_in_async_summary(straggler_async):
+    """Per-sync staleness rides the telemetry: every async event carries the
+    due set and the τ vector, and the run summary aggregates them."""
+    events = [r for r in straggler_async["fault_history"]
+              if r.get("event") == "round"]
+    for ev in events:
+        assert "staleness" in ev and len(ev["staleness"]) == 8
+        assert "due" in ev and ev["due"]
+    assert "max_staleness" in straggler_async
+    assert "blocked_syncs" in straggler_async

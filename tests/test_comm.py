@@ -151,6 +151,20 @@ def test_error_feedback_residual_shrinks_error():
     ).mean()
 
 
+def test_error_feedback_config_fails_loudly():
+    """error_feedback=True has no trainer path carrying the residual state:
+    validate() must refuse it (silently dropping each round's quantization
+    residual is the bias the flag claims to remove) until the LoCo-style
+    accumulation is actually threaded through the outer step."""
+    with pytest.raises(NotImplementedError, match="2407.04480"):
+        CommConfig(codec="int8", error_feedback=True).validate()
+    with pytest.raises(NotImplementedError, match="residual"):
+        CommConfig(codec="fp16", error_feedback=True).validate()
+    # "none" keeps its original, more specific rejection
+    with pytest.raises(ValueError, match="lossy"):
+        CommConfig(codec="none", error_feedback=True).validate()
+
+
 def test_wire_roundtrip_identity_for_none():
     tree = _mixed_tree()
     out = wire_roundtrip(tree, CommConfig(codec="none"))

@@ -282,6 +282,42 @@ def test_resume_mid_straggle_reproduces_trajectory(tmp_path):
     )
 
 
+def test_truncated_horizon_straggle_debt_resumes_exactly(tmp_path):
+    """A run whose --steps horizon ends while a straggle debt is still in
+    force (plan.max_effect_step > steps) must checkpoint the in-flight debt
+    at its FINAL save and resume it exactly — the debt neither vanishes nor
+    re-arms from scratch when the run is extended to the full horizon."""
+    plan = FaultPlan.build([
+        {"kind": "straggle", "round": 1, "replicas": [1], "rounds": 3},
+    ])
+    kw = dict(replicas=4, per_replica_batch=2, seq_len=32, steps=24,
+              inner_steps=4, inner_lr=3e-3, eval_every=0, seed=0,
+              total_steps=24)
+    # debt anchored at step 4, in force through step 16 — the short run's
+    # steps=8 horizon truncates it mid-flight (this is exactly the shape the
+    # launchers now warn about)
+    assert plan.max_effect_step(4) == 16
+    full = run_elastic_training(TINY, plan, **kw)
+    d = str(tmp_path / "trunc")
+    short = run_elastic_training(TINY, plan, ckpt_dir=d, **{**kw, "steps": 8})
+    by_round = {r["round"]: r for r in short["rounds"]}
+    assert by_round[1]["absent"] == [1]  # debt already biting at truncation
+    cont = run_elastic_training(TINY, plan, ckpt_dir=d, resume=True, **kw)
+    assert cont["start_step"] == 8
+    by_round = {r["round"]: r for r in cont["rounds"]}
+    # rounds 2 and 3 fire post-resume and must still exclude the straggler
+    assert by_round[2]["absent"] == [1]
+    assert by_round[3]["absent"] == [1]
+    assert by_round[4]["absent"] == []
+    np.testing.assert_array_equal(
+        np.asarray(full["losses"][8:]), np.asarray(cont["losses"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(full["state"].theta)[0]),
+        np.asarray(jax.tree.leaves(cont["state"].theta)[0]),
+    )
+
+
 def test_membership_and_partition_checkpoint_roundtrip(tmp_path):
     """The program's membership mask/epoch AND partition view ride in the
     checkpoint pytree and restore onto a fresh program."""

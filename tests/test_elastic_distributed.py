@@ -50,23 +50,25 @@ from repro.train import DistributedProgram, LoopConfig, make_loop
 CFG = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
                   d_ff=128, vocab_size=128, dtype="float32", remat=False)
 
-def make_trainer(elastic=None, schedule="random", inner_steps=4, seed=0):
+def make_trainer(elastic=None, schedule="random", inner_steps=4, seed=0,
+                 stale="naive"):
     mesh = make_test_mesh(8, 1)
     plan = PL.make_plan("gossip_dp", mesh, shape_kind="train")
     return DistributedTrainer(
         cfg=CFG, mesh=mesh, plan=plan,
-        outer_cfg=OuterConfig(method="noloco", inner_steps=inner_steps),
+        outer_cfg=OuterConfig(method="noloco", inner_steps=inner_steps,
+                              stale=stale),
         inner_cfg=AdamWConfig(lr=3e-3, weight_decay=0.0),
         schedule=schedule, seed=seed, elastic=elastic,
     )
 
 def make_run(trainer, plan_events, steps, ckpt_dir=None, resume=False,
-             eval_every=0, reassign=False, ckpt_every=0):
+             eval_every=0, reassign=False, ckpt_every=0, async_clock=None):
     program = DistributedProgram(trainer)
     sim = None
     if plan_events is not None:
         sim = SimCluster(program, FaultPlan.build(plan_events),
-                         reassign_data=reassign)
+                         reassign_data=reassign, async_clock=async_clock)
     loop = make_loop(
         sim or program,
         LoaderConfig(vocab_size=CFG.vocab_size, seq_len=32,
@@ -287,6 +289,45 @@ assert not np.array_equal(np.asarray(runs[0][3:]), np.asarray(runs[2][3:]))
 print("REASSIGN OK")
 """)
     assert "REASSIGN OK" in out
+
+
+def test_async_clock_distributed_tau0_bitwise_and_straggler():
+    """Asynchronous round clocks on the shard_map runtime: a rate-1 async
+    world reduces to the legacy synchronous program bit for bit (same pool
+    fast path), and a 2x straggler syncs late with a stale Δ — zero blocked
+    syncs, max τ = 1 — for both stale rules."""
+    out = _run(PRELUDE + """
+# legacy synchronous reference
+t0 = make_trainer(elastic=ElasticContext(world=8), inner_steps=2)
+loop0, _ = make_run(t0, [], 12)
+ref = loop0.run()
+
+# rate-1 async world: bitwise identical, zero staleness telemetry
+t1 = make_trainer(elastic=ElasticContext(world=8), inner_steps=2)
+loop1, sim1 = make_run(t1, [], 12, async_clock=True)
+res = loop1.run()
+np.testing.assert_array_equal(np.asarray(ref["losses"]), np.asarray(res["losses"]))
+for a, b in zip(jax.tree.leaves(jax.device_get(ref["state"]["theta"])),
+                jax.tree.leaves(jax.device_get(res["state"]["theta"]))):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+assert res["max_staleness"] == 0 and res["blocked_syncs"] == 0, res
+
+# 2x straggler on its own clock, both stale rules
+EVENTS = [{"kind": "rate", "round": 0, "replicas": [1], "rate": 0.5}]
+for stale in ("naive", "momentum"):
+    t2 = make_trainer(elastic=ElasticContext(world=8), inner_steps=2,
+                      stale=stale)
+    loop2, sim2 = make_run(t2, EVENTS, 16)
+    r2 = loop2.run()
+    assert np.isfinite(r2["losses"]).all()
+    assert r2["blocked_syncs"] == 0, (stale, r2["blocked_syncs"])
+    assert r2["max_staleness"] == 1, (stale, r2["max_staleness"])
+    ticks = [h for h in sim2.history if h.get("event") == "round"]
+    assert any(1 not in h["due"] for h in ticks)   # straggler skipped a tick
+    assert any(1 in h["due"] and h["staleness"][1] == 1 for h in ticks)
+print("ASYNC DISTRIBUTED OK")
+""")
+    assert "ASYNC DISTRIBUTED OK" in out
 
 
 def test_partial_partition_matches_stacked_semantics():

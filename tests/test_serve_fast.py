@@ -359,6 +359,46 @@ def test_spec_decode_with_divergent_draft_is_still_exact(kind):
     assert 0.0 <= eng.accept_rate <= 1.0 and eng.spec_rounds > 0
 
 
+def test_spec_accept_rate_well_defined_with_no_usable_proposals():
+    """max_new=1 requests: every decode round has rem == 1 for every slot, so
+    usable = min(spec_k-1, rem-1) = 0 and the denominator never grows.  The
+    accept rate must come back as the vacuously-perfect 1.0 — not NaN, not a
+    0/0-as-0.0 that would falsely read as 'draft never matched' — both on the
+    engine aggregate and in every request's finish stats."""
+    cfg = CFGS["global"]
+    params = _params("global", seed=2)
+    scfg = ServeConfig(max_slots=2, num_pages=24, page_size=4, max_new_cap=8,
+                       prefill_chunk=4)
+    rng = np.random.default_rng(11)
+    requests = [
+        Request(rid=rid, prompt=rng.integers(0, cfg.vocab_size, size=(pl,)).tolist(),
+                max_new=1)
+        for rid, pl in enumerate([3, 8])
+    ]
+    ref = _reference(params, cfg, scfg, requests)
+
+    eng = SpecServeEngine(params, cfg, scfg, params, cfg, spec_k=3)
+    got = {f.rid: f for f in eng.run([dataclasses.replace(r) for r in requests])}
+    assert {r: f.tokens for r, f in got.items()} == ref
+    assert eng.spec_prop_total == 0
+    assert eng.accept_rate == 1.0
+    assert all(f.stats["accept_rate"] == 1.0 for f in got.values())
+    eng.alloc.check_leaks()
+
+
+def test_spec_accept_rate_defined_before_any_round():
+    """An engine that has not run a single spec round (empty request list —
+    the 'empty final rounds' shape) must still report a finite in-[0,1]
+    accept_rate for telemetry summaries."""
+    cfg = CFGS["global"]
+    params = _params("global", seed=2)
+    scfg = ServeConfig(max_slots=2, num_pages=24, page_size=4, max_new_cap=8,
+                       prefill_chunk=4)
+    eng = SpecServeEngine(params, cfg, scfg, params, cfg, spec_k=3)
+    assert eng.run([]) == []
+    assert eng.accept_rate == 1.0
+
+
 def test_spec_decode_with_truncated_draft_is_exact():
     cfg = CFGS["global"]
     params = _params("global", seed=2)

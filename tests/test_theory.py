@@ -52,6 +52,66 @@ def test_theorem1_variance_scales_with_omega_squared():
     assert 2.0 < ratio < 8.0, ratio
 
 
+def _async_tails(rates, stale, *, seeds=3, metric="mean_norm"):
+    """Tail-averaged trajectories under the merged-tick clock, plus the
+    trace-mean staleness, averaged over seeds (Monte-Carlo estimator — same
+    idiom as the synchronous Thm. 1 checks above)."""
+    kw = dict(world=8, outer_steps=200, inner_steps=5, omega=0.1)
+    model = theory.QuadraticModel()
+    tails, taus = [], []
+    for s in range(seeds):
+        res = theory.simulate_quadratic(
+            model, rates=rates, cfg=OuterConfig(stale=stale), seed=s, **kw
+        )
+        tails.append(res[metric][-80:].mean())
+        taus.append(float(np.mean(res["staleness"])) if len(res["staleness"]) else 0.0)
+    return float(np.mean(tails)), float(np.mean(taus))
+
+
+def test_async_all_ones_rates_is_exactly_synchronous():
+    """rates=(1,)*n must run the synchronous code path bit-for-bit and report
+    an all-zero staleness trace."""
+    kw = dict(world=8, outer_steps=40, inner_steps=5, omega=0.1, seed=3)
+    model = theory.QuadraticModel()
+    sync = theory.simulate_quadratic(model, **kw)
+    asyn = theory.simulate_quadratic(model, rates=(1.0,) * 8, **kw)
+    np.testing.assert_array_equal(sync["mean_norm"], asyn["mean_norm"])
+    np.testing.assert_array_equal(sync["var"], asyn["var"])
+    assert not np.any(asyn["staleness"])
+
+
+def test_staleness_floor_two_x_straggler():
+    """The acceptance regime: one 2x straggler in an 8-replica world.  Both
+    stale rules stay under their :func:`theory.staleness_floor` prediction,
+    and the momentum discount stays under the SYNCHRONOUS base floor — the
+    'recovered' claim — while matching or beating naive."""
+    omega, model = 0.1, theory.QuadraticModel()
+    rates = (0.5,) + (1.0,) * 7
+    naive, tau_bar = _async_tails(rates, "naive")
+    mom, _ = _async_tails(rates, "momentum")
+    base = theory.staleness_floor(omega, model.sigma, model.dim, 0.0)
+    assert naive < theory.staleness_floor(
+        omega, model.sigma, model.dim, tau_bar, stale="naive"
+    ), (naive, tau_bar)
+    assert mom < base, (mom, base)
+    assert mom <= naive + 0.01, (mom, naive)
+
+
+def test_naive_floor_grows_with_staleness():
+    """O(ω σ · (1+τ)) degradation of the naive rule: with half the world at a
+    10x slowdown (per-replica τ up to 1/ρ − 1 = 9), the stationary tail rises
+    ABOVE the synchronous base floor — the τ=0 bound genuinely fails — while
+    staying inside the (1+τ_max)-scaled band the predictor gives."""
+    omega, model = 0.1, theory.QuadraticModel()
+    harsh, _ = _async_tails((0.1,) * 4 + (1.0,) * 4, "naive")
+    base = theory.staleness_floor(omega, model.sigma, model.dim, 0.0)
+    tau_max = 1.0 / 0.1 - 1.0
+    assert harsh > base, (harsh, base)
+    assert harsh < theory.staleness_floor(
+        omega, model.sigma, model.dim, tau_max, stale="naive"
+    ), harsh
+
+
 def test_diloco_also_converges_on_quadratic():
     """Same tail-average estimator as the NoLoCo check: DiLoCo's all-reduce
     outer Nesterov drives ‖E(φ)‖ to the same ω-scaled stochastic floor."""
